@@ -1,0 +1,63 @@
+"""Fleet-scale intermittence benchmarks (the paper's Fig. 6/9 trade-off
+with capacitor size replaced by fleet failure rate).
+
+Sweeps fault-tolerance policy x fleet size, straggler mitigation policy,
+and elastic-rescale throughput.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.runtime import (ElasticEvent, FleetSpec, JobSpec, StragglerSpec,
+                           efficiency, simulate, simulate_elastic)
+
+
+def policy_sweep() -> list[tuple]:
+    rows = []
+    job = JobSpec(total_steps=300, step_s=60.0, microbatches=8,
+                  mb_commit_s=0.5)
+    for hosts in (1000, 8000, 20000):
+        fleet = FleetSpec(n_hosts=hosts, mtbf_host_s=30 * 86400)
+        for policy, interval in (("naive", 0), ("interval", 2),
+                                 ("interval", 10), ("continuation", 2),
+                                 ("continuation", 30)):
+            runs = [simulate(policy, fleet, job, interval=interval or 1,
+                             seed=s, horizon_factor=40) for s in range(3)]
+            good = np.mean([r.goodput for r in runs])
+            waste = np.mean([r.wasted_s for r in runs])
+            done = all(r.completed for r in runs)
+            tag = policy if policy == "naive" else f"{policy}-{interval}"
+            rows.append((f"fleet/{hosts}h_{tag}_goodput",
+                         round(float(good), 3),
+                         f"completed={done} wasted={waste:.0f}s "
+                         f"(failure every {fleet.n_hosts and 30*86400/hosts:.0f}s)"))
+    return rows
+
+
+def straggler_sweep() -> list[tuple]:
+    spec = StragglerSpec(n_hosts=1024, slow_frac=0.02)
+    rows = []
+    for policy in ("sync", "backup", "quorum"):
+        e = efficiency(policy, spec)
+        rows.append((f"straggler/{policy}_vs_ideal",
+                     round(e["vs_ideal"], 3),
+                     f"mean_step={e['mean_step_s']:.3f}s "
+                     f"p99={e['p99_step_s']:.3f}s"))
+    return rows
+
+
+def elastic_sweep() -> list[tuple]:
+    rng = np.random.default_rng(0)
+    t, events, avail = 0.0, [], 256
+    for _ in range(20):
+        events.append(ElasticEvent(t, avail))
+        t += rng.exponential(3600)
+        avail = int(np.clip(avail + rng.integers(-20, 21), 200, 256))
+    out = simulate_elastic(events, tp=16, step_s=2.0, horizon_s=t + 3600)
+    return [("elastic/batches_completed", round(out["batches"], 0),
+             f"rescales={out['rescales']} idle={out['idle_s']:.0f}s")]
+
+
+def run() -> list[tuple]:
+    return policy_sweep() + straggler_sweep() + elastic_sweep()

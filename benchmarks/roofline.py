@@ -1,0 +1,204 @@
+"""Roofline analysis from the dry-run's compiled artifacts (per Sec. g).
+
+Per (arch x shape x mesh) cell:
+  T_compute    = HLO_FLOPs_per_chip / 197e12         (v5e bf16 peak)
+  T_memory     = HLO_bytes_per_chip / 819e9          (HBM bandwidth)
+  T_collective = collective_bytes_per_chip / 50e9    (one ICI link)
+
+All three inputs are PER-CHIP already: the HLO parser (launch/hlo_costs)
+reads the post-SPMD module, whose shapes are per-device, and multiplies
+while-loop bodies by their trip counts (XLA's own cost analysis counts scan
+bodies once -- verified off by ~num_layers).
+
+MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference); the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat recompute, attention quadratic terms,
+MoE dispatch einsums and padding waste.
+
+Collectives on the CPU backend run on f32 dot outputs (no native bf16), so
+collective bytes are ~2x what a bf16 TPU pipeline moves; noted per row.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "pod1") -> list[dict]:
+    out = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def analytic_hbm_bytes(rec: dict) -> float:
+    """TPU-fusion-aware HBM traffic model, per chip per step.
+
+    The structural HLO count (hlo.bytes_accessed) charges every op's
+    operands+results, i.e. CPU fusion boundaries; on TPU the attention/
+    norm/gating intermediates stay in VMEM, so HBM traffic is dominated by
+    (a) weight streams, (b) optimizer state, (c) the residual-stream and
+    saved-activation tensors at layer granularity, (d) KV caches.  Each
+    component below is a small multiple with the rationale inline."""
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+    from repro.models.counting import active_param_count, param_count
+
+    cfg = get_config(rec["arch"])
+    cell = SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    p_total = param_count(cfg)
+    p_active = active_param_count(cfg)
+    tokens = cell.global_batch * (1 if cell.kind == "decode"
+                                  else cell.seq_len)
+    d = cfg.d_model
+    L = cfg.num_layers + cfg.encoder_layers
+    # activation tensor footprint (B,S,D) in bf16, global
+    a = tokens * d * 2.0
+    if cfg.family == "dense" or cfg.family == "vlm":
+        ff_ratio = cfg.d_ff / d
+    elif cfg.family == "moe":
+        ff_ratio = (cfg.experts_per_tok * cfg.moe_d_ff
+                    + (cfg.d_ff if cfg.shared_expert else 0)) / d
+    elif cfg.family in ("ssm", "hybrid"):
+        ff_ratio = 2.0 * cfg.ssm_expand
+    else:
+        ff_ratio = cfg.d_ff / d
+
+    if cell.kind == "train":
+        # weights: fwd read + remat re-read + bwd dgrad/wgrad reads (bf16)
+        weights = 4 * p_active * 2.0 + 2 * (p_total - p_active) * 0.0
+        # optimizer: m,v f32 r/w (16B) + grad f32 r/w (8B) + param rw (4B)
+        opt = 28.0 * p_total
+        # activations: per layer ~2 residual r/w + gate/up/down streams +
+        # 2x for backward; plus the remat saves (w once, r once)
+        acts = L * a * (2 + 2 * ff_ratio) * 2 + 2 * L * a
+        total = weights + opt + acts
+    elif cell.kind == "prefill":
+        weights = p_active * 2.0
+        acts = L * a * (2 + ff_ratio)
+        kv_write = (cfg.num_layers * tokens * cfg.num_kv_heads * cfg.hd
+                    * 2 * 2.0) if cfg.num_kv_heads else 0.0
+        total = weights + acts + kv_write
+    else:  # decode: weights + full cache read dominate
+        weights = p_active * 2.0
+        cache_b = 0.0
+        for name, (shape, dt) in __cache_shapes(cfg, cell).items():
+            import math as _m
+            cache_b += _m.prod(shape) * (4 if dt == "float32" else 2)
+        total = weights + cache_b + 4 * a
+    return total / chips
+
+
+def __cache_shapes(cfg, cell):
+    from repro.models import cache_spec_shapes
+    return cache_spec_shapes(cfg, cell)
+
+
+def terms(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec["hlo"]
+    t_c = hlo["flops"] / PEAK_FLOPS
+    bytes_est = analytic_hbm_bytes(rec)
+    t_m = bytes_est / HBM_BW
+    t_m_upper = hlo["bytes_accessed"] / HBM_BW
+    t_n = hlo["collective_bytes"] / ICI_BW
+    dominant = max(("compute", t_c), ("memory", t_m),
+                   ("collective", t_n), key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_n)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n,
+        "t_memory_upper_s": t_m_upper,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "compute_fraction": t_c / bound if bound else 0.0,
+        "flops_per_chip": hlo["flops"],
+        "coll_bytes_per_chip": hlo["collective_bytes"],
+        "bytes_per_chip": bytes_est,
+        "bytes_upper_per_chip": hlo["bytes_accessed"],
+        "fits": rec["memory"]["fits_16GB_hbm"],
+        "live_gib": rec["memory"]["live_bytes_per_device"] / 2**30,
+        "state_gib": rec["memory"]["state_bytes_per_device"] / 2**30,
+    }
+
+
+def model_flops_for(rec: dict) -> float:
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+    from repro.models.counting import model_flops
+
+    cfg = get_config(rec["arch"])
+    cell = SHAPES[rec["shape"]]
+    if cell.kind == "decode":
+        tokens = cell.global_batch          # one token per sequence
+    else:
+        tokens = cell.global_batch * cell.seq_len
+        if cfg.family == "vlm":
+            tokens = cell.global_batch * cell.seq_len  # patches included
+    kind = "train" if cell.kind == "train" else "infer"
+    return model_flops(cfg, tokens, kind) / rec["chips"]
+
+
+def table(mesh: str = "pod1") -> list[dict]:
+    rows = []
+    for rec in load_cells(mesh):
+        t = terms(rec)
+        if t is None:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh", mesh), "skipped":
+                         rec.get("skip_reason", rec.get("error", ""))})
+            continue
+        mf = model_flops_for(rec)
+        t["model_flops_per_chip"] = mf
+        t["useful_ratio"] = mf / t["flops_per_chip"] if t["flops_per_chip"] \
+            else 0.0
+        rows.append(t)
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | Tc (s) | Tm (s) | Tn (s) | dominant | "
+           "useful | fits |\n|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"skipped | - | - |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{'y' if r['fits'] else 'n'} |\n")
+    return "".join(out)
+
+
+def run() -> list[tuple]:
+    rows = table("pod1")
+    csv = []
+    for r in rows:
+        if "skipped" in r:
+            csv.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                        "skipped"))
+            continue
+        csv.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            round(r["step_lower_bound_s"] * 1e6, 1),
+            f"dom={r['dominant']} Tc={r['t_compute_s']:.3f}s "
+            f"Tm={r['t_memory_s']:.3f}s Tn={r['t_collective_s']:.3f}s "
+            f"useful={r['useful_ratio']:.2f}"))
+    return csv
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(map(str, row)))

@@ -1,0 +1,51 @@
+"""Benchmark entry point: one section per paper table/figure + the fleet
+and roofline analyses.  Prints ``name,value,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--section fig9|roofline|...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    help="all | paper | fleet | kernels | roofline")
+    args = ap.parse_args()
+
+    from benchmarks import fleet, kernels_bench, paper_figs, roofline
+
+    sections = {
+        "paper": paper_figs.run,
+        "fleet": fleet.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline.run,
+    }
+    wanted = sections if args.section == "all" else \
+        {args.section: sections[args.section]}
+
+    print("name,value,derived")
+    for name, fn in wanted.items():
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:     # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for row in rows:
+            n, v, d = row
+            print(f'{n},{v},"{d}"')
+        print(f"# section {name} took {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""The paper, end to end: GENESIS-compress an MNIST-shaped network, then run
+it on the simulated energy-harvesting device under all six implementations
+and four power systems (Fig. 9's experiment).
+
+  PYTHONPATH=src python examples/intermittent_mnist.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.compress import DEVICE_WEIGHT_BYTES  # noqa: E402
+from repro.core import POWER_SYSTEMS, STRATEGIES, evaluate  # noqa: E402
+from repro.data import make_task  # noqa: E402
+from repro.models.dnn import mnist_net  # noqa: E402
+
+
+def main():
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.paper_figs import compressed_net
+
+    orig = mnist_net()
+    net = compressed_net("mnist")
+    print(f"GENESIS: {orig.total_params()} params "
+          f"({orig.params_bytes()//1024} KB, "
+          f"fits={orig.params_bytes() <= DEVICE_WEIGHT_BYTES}) -> "
+          f"{net.total_params()} params ({net.params_bytes()//1024} KB, "
+          f"fits={net.params_bytes() <= DEVICE_WEIGHT_BYTES})")
+
+    # quick accuracy check on the synthetic stand-in task
+    from repro.compress.train_small import net_accuracy, train
+    task = make_task("mnist", n_train=512, n_test=256, noise=0.85)
+    net, acc = train(net, task, epochs=2)
+    print(f"retrained compressed net accuracy: {acc:.3f}\n")
+
+    x = task.x_test[0]
+    print(f"{'impl':10s}" + "".join(f"{p:>14s}" for p in POWER_SYSTEMS))
+    for strat in STRATEGIES:
+        cells = []
+        for power in POWER_SYSTEMS:
+            r = evaluate(net, x, strat, power)
+            cells.append(f"{r.total_time_s*1e3:10.1f} ms" if r.completed
+                         else f"{'DNF':>13s}")
+        print(f"{strat:10s}" + "".join(f"{c:>14s}" for c in cells))
+    print("\n(naive/large tiles DNF on small capacitors; SONIC & TAILS "
+          "always complete -- the paper's Fig. 9.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: intermittence-aware DNN inference/training, from MSP430 to TPU pods.
+
+Faithful reproduction of "Intelligence Beyond the Edge: Inference on
+Intermittent Embedded Systems" (Gobieski, Beckmann, Lucia; 2018) plus a
+datacenter-scale generalization of its mechanisms (loop continuation,
+idempotent re-execution, calibrated accelerator tiling) as a multi-pod JAX
+training/serving framework.
+"""
+
+__version__ = "0.1.0"

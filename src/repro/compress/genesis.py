@@ -1,0 +1,180 @@
+"""GENESIS: automatic network compression optimizing end-to-end IMpJ.
+
+For each layer GENESIS sweeps separation (spatial SVD / Tucker-2 for convs,
+rank SVD for FCs) and magnitude pruning, retrains each configuration, and
+places it on the {accuracy, params, energy} Pareto frontier.  The chosen
+configuration maximizes the application's IMpJ (Sec. 3 model) among those
+that fit the device's memory (Sec. 5.3).
+
+The paper uses Ray Tune's black-box search over this space; offline we
+sweep a deterministic grid (the search spaces match; the optimizer is
+swappable).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.energy import (CLOCK_HZ, JOULES_PER_CYCLE, LEA_COSTS,
+                           SOFTWARE_COSTS)
+from ..core.imp import AppModel
+from ..core.inference import Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC
+from ..data.synthetic import Dataset
+from .prune import prune_by_sparsity
+from .svd import svd_factor, svd_params
+from .tucker import separate_conv_spatial, separation_params
+
+#: device memory available for weights (256 KB FRAM minus code/buffers)
+DEVICE_WEIGHT_BYTES = 200 * 1024
+
+#: calibrated cycles per MAC including loads/stores/cursors (SONIC inner
+#: loops, Sec. 6.2) -- used for fast energy estimates during the sweep; the
+#: chosen configuration is re-measured exactly by the device simulator.
+CYCLES_PER_MAC = {"sonic": 27.0, "tails": 9.0, "naive": 19.0}
+
+
+@dataclass(frozen=True)
+class LayerChoice:
+    kind: str              # keep | prune | svd | separate
+    arg: float = 0.0       # sparsity or rank
+
+
+@dataclass
+class ConfigResult:
+    choices: tuple
+    params: int
+    params_bytes: int
+    macs: int
+    accuracy: float
+    tp: float
+    tn: float
+    e_infer_j: float
+    feasible: bool
+    impj: float = 0.0
+    net: SimNet = field(default=None, repr=False)
+
+
+def apply_choice(layer, choice: LayerChoice):
+    """Returns a list of replacement layers."""
+    if choice.kind == "keep" or isinstance(layer, MaxPool2D):
+        return [layer]
+    if isinstance(layer, Conv2D):
+        if choice.kind == "prune":
+            w = prune_by_sparsity(layer.w, choice.arg)
+            return [Conv2D(w, layer.b, layer.stride, layer.relu,
+                           layer.name + f"_p{choice.arg:.2f}")]
+        if choice.kind == "separate":
+            v, h = separate_conv_spatial(layer.w, int(choice.arg))
+            return [
+                Conv2D(v, np.zeros(v.shape[0], np.float32), layer.stride,
+                       relu=False, name=layer.name + "_sepv"),
+                Conv2D(h, layer.b, 1, relu=layer.relu,
+                       name=layer.name + "_seph"),
+            ]
+    if isinstance(layer, (DenseFC, SparseFC)):
+        if choice.kind == "prune":
+            w = prune_by_sparsity(layer.w, choice.arg)
+            return [SparseFC(w, layer.b, layer.relu,
+                             layer.name + f"_p{choice.arg:.2f}")]
+        if choice.kind == "svd":
+            a, b = svd_factor(layer.w, int(choice.arg))
+            return [
+                DenseFC(b, np.zeros(b.shape[0], np.float32), relu=False,
+                        name=layer.name + "_svd1"),
+                DenseFC(a, layer.b, relu=layer.relu,
+                        name=layer.name + "_svd2"),
+            ]
+    raise ValueError(f"{choice} not applicable to {layer}")
+
+
+def layer_choices(layer, budget: str = "normal") -> list[LayerChoice]:
+    if isinstance(layer, MaxPool2D):
+        return [LayerChoice("keep")]
+    if isinstance(layer, Conv2D):
+        co, ci, kh, kw = layer.w.shape
+        max_r = min(ci * kh, co * kw)
+        ranks = sorted({max(1, max_r // 8), max(1, max_r // 4),
+                        max(2, max_r // 2)})
+        out = [LayerChoice("keep")]
+        out += [LayerChoice("separate", r) for r in ranks
+                if separation_params(layer.w.shape, r) < layer.w.size]
+        out += [LayerChoice("prune", s) for s in (0.5, 0.8, 0.9)]
+        return out
+    if isinstance(layer, (DenseFC, SparseFC)):
+        m, n = layer.w.shape
+        max_r = min(m, n)
+        ranks = sorted({max(1, max_r // 8), max(1, max_r // 4)})
+        out = [LayerChoice("keep")]
+        out += [LayerChoice("svd", r) for r in ranks
+                if svd_params(m, n, r) < m * n]
+        out += [LayerChoice("prune", s) for s in (0.8, 0.9, 0.95, 0.98)]
+        return out
+    return [LayerChoice("keep")]
+
+
+def apply_config(net: SimNet, choices) -> SimNet:
+    layers = []
+    for layer, ch in zip(net.layers, choices):
+        layers.extend(apply_choice(layer, ch))
+    return SimNet(layers, net.input_shape, net.name)
+
+
+def estimate_energy(net: SimNet, runtime: str = "tails") -> float:
+    cycles = net.total_macs() * CYCLES_PER_MAC[runtime]
+    return cycles * JOULES_PER_CYCLE
+
+
+def sweep(net: SimNet, data: Dataset, app: AppModel, positive: int = 0,
+          runtime: str = "tails", epochs: int = 4, max_configs: int = 36,
+          seed: int = 0) -> list[ConfigResult]:
+    """Evaluate a grid of per-layer compression configs (with retraining)."""
+    from .train_small import class_rates, train
+
+    grids = [layer_choices(l) for l in net.layers]
+    combos = list(itertools.product(*grids))
+    # Deterministic subsample: always keep the uncompressed config plus an
+    # even spread of the rest.
+    rng = np.random.default_rng(seed)
+    base = tuple(LayerChoice("keep") for _ in net.layers)
+    combos = [c for c in combos if c != base]
+    rng.shuffle(combos)
+    combos = [base] + combos[:max_configs - 1]
+
+    results = []
+    for choices in combos:
+        cnet = apply_config(net, choices)
+        trained, acc = train(cnet, data, epochs=epochs, seed=seed)
+        tp, tn = class_rates(trained, data, positive)
+        pb = trained.params_bytes()
+        e = estimate_energy(trained, runtime)
+        feasible = pb <= DEVICE_WEIGHT_BYTES
+        r = ConfigResult(choices, trained.total_params(), pb,
+                         trained.total_macs(), acc, tp, tn, e, feasible,
+                         net=trained)
+        m = AppModel(app.p, app.e_sense, app.e_comm, e)
+        r.impj = m.inference(tp, tn) if feasible else 0.0
+        results.append(r)
+    return results
+
+
+def pareto_frontier(results) -> list[ConfigResult]:
+    """Non-dominated set over (accuracy up, energy down)."""
+    pts = sorted(results, key=lambda r: r.e_infer_j)
+    out = []
+    best = -1.0
+    for r in pts:
+        if r.accuracy > best:
+            out.append(r)
+            best = r.accuracy
+    return out
+
+
+def select(results) -> ConfigResult:
+    """The feasible configuration maximizing modeled IMpJ (Fig. 5)."""
+    feas = [r for r in results if r.feasible]
+    if not feas:
+        raise RuntimeError("no feasible configuration fits device memory")
+    return max(feas, key=lambda r: r.impj)

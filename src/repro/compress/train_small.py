@@ -1,0 +1,145 @@
+"""JAX trainer for the paper's networks (and their compressed variants).
+
+Mirrors the device simulator's layer semantics exactly (valid-padding conv,
+rectangular max-pool, masked sparse FC), so weights trained here drop
+straight into ``repro.core.inference.SimNet`` for intermittent execution.
+Pruning masks are applied at every step (dense gradients, masked updates) --
+the standard iterative-pruning recipe.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.inference import Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC
+from ..data.synthetic import Dataset
+from ..optim import adamw
+
+
+def net_to_params(net: SimNet):
+    """Extract (params, masks, structure) from a SimNet."""
+    params, masks, structure = [], [], []
+    for l in net.layers:
+        if isinstance(l, Conv2D):
+            params.append({"w": jnp.asarray(l.w), "b": jnp.asarray(l.b)})
+            masks.append({"w": jnp.asarray((l.w != 0).astype(np.float32))})
+            structure.append(("conv", {"stride": l.stride, "relu": l.relu}))
+        elif isinstance(l, (DenseFC, SparseFC)):
+            params.append({"w": jnp.asarray(l.w), "b": jnp.asarray(l.b)})
+            masks.append({"w": jnp.asarray((l.w != 0).astype(np.float32))})
+            structure.append(("fc", {"relu": l.relu,
+                                     "sparse": isinstance(l, SparseFC)}))
+        elif isinstance(l, MaxPool2D):
+            params.append({})
+            masks.append({})
+            structure.append(("pool", {"kh": l._ks()[0], "kw": l._ks()[1]}))
+        else:
+            raise TypeError(l)
+    return params, masks, structure
+
+
+def params_to_net(net: SimNet, params) -> SimNet:
+    """Write trained weights back into a copy of the SimNet."""
+    layers = []
+    for l, p in zip(net.layers, params):
+        if isinstance(l, Conv2D):
+            layers.append(Conv2D(np.asarray(p["w"]), np.asarray(p["b"]),
+                                 stride=l.stride, relu=l.relu, name=l.name))
+        elif isinstance(l, SparseFC):
+            layers.append(SparseFC(np.asarray(p["w"]), np.asarray(p["b"]),
+                                   relu=l.relu, name=l.name))
+        elif isinstance(l, DenseFC):
+            layers.append(DenseFC(np.asarray(p["w"]), np.asarray(p["b"]),
+                                  relu=l.relu, name=l.name))
+        else:
+            layers.append(l)
+    return SimNet(layers, net.input_shape, net.name)
+
+
+def forward(params, structure, x):
+    """x: (N, C, H, W) -> logits (N, k)."""
+    for p, (kind, meta) in zip(params, structure):
+        if kind == "conv":
+            s = meta["stride"]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], window_strides=(s, s), padding="VALID",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))
+            x = x + p["b"][None, :, None, None]
+            if meta["relu"]:
+                x = jax.nn.relu(x)
+        elif kind == "pool":
+            kh, kw = meta["kh"], meta["kw"]
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 1, kh, kw), (1, 1, kh, kw),
+                "VALID")
+        elif kind == "fc":
+            x = x.reshape(x.shape[0], -1) @ p["w"].T + p["b"]
+            if meta["relu"]:
+                x = jax.nn.relu(x)
+    return x
+
+
+def train(net: SimNet, data: Dataset, epochs: int = 6, batch: int = 64,
+          lr: float = 2e-3, seed: int = 0):
+    """Train (or retrain a compressed) net; returns (net', accuracy)."""
+    params, masks, structure = net_to_params(net)
+
+    def apply_masks(ps):
+        return [
+            {k: (v * m[k] if k in m else v) for k, v in p.items()}
+            for p, m in zip(ps, masks)]
+
+    def loss_fn(ps, xb, yb):
+        logits = forward(apply_masks(ps), structure, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+
+    opt = adamw(lr=lr, weight_decay=1e-4, max_grad_norm=1.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(ps, st, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(ps, xb, yb)
+        ps, st = opt.update(grads, st, ps)
+        return ps, st, loss
+
+    n = data.x_train.shape[0]
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, state, _ = step(params, state,
+                                    jnp.asarray(data.x_train[idx]),
+                                    jnp.asarray(data.y_train[idx]))
+    params = apply_masks(params)
+    acc = accuracy(params, structure, data)
+    return params_to_net(net, params), float(acc)
+
+
+def accuracy(params, structure, data: Dataset) -> float:
+    logits = forward(params, structure, jnp.asarray(data.x_test))
+    return float((jnp.argmax(logits, -1) == jnp.asarray(data.y_test)).mean())
+
+
+def net_accuracy(net: SimNet, data: Dataset) -> float:
+    params, masks, structure = net_to_params(net)
+    return accuracy(params, structure, data)
+
+
+def class_rates(net: SimNet, data: Dataset, positive: int
+                ) -> tuple[float, float]:
+    """(true-positive, true-negative) treating `positive` as interesting."""
+    params, _, structure = net_to_params(net)
+    pred = np.asarray(jnp.argmax(
+        forward(params, structure, jnp.asarray(data.x_test)), -1))
+    y = data.y_test
+    pos = y == positive
+    neg = ~pos
+    tp = float((pred[pos] == positive).mean()) if pos.any() else 1.0
+    tn = float((pred[neg] != positive).mean()) if neg.any() else 1.0
+    return tp, tn

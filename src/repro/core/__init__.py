@@ -1,0 +1,25 @@
+"""Core: the paper's contribution — intermittence-safe DNN execution.
+
+SONIC-style loop continuation + idempotence (buffering, undo logging), the
+Alpaca task-based baseline, the TAILS LEA/DMA acceleration model, the device
+energy model, and the IMpJ application model.
+"""
+
+from .buffering import LoopOrderedBuffer, SparseUndoLog
+from .continuation import ResumableLoop, run_intermittent
+from .energy import (CostTable, Device, DeviceStats, LEA_COSTS,
+                     NonTermination, PowerFailure, PowerSystem,
+                     SOFTWARE_COSTS, make_power_system)
+from .imp import AppModel, WILDLIFE, accuracy_sweep
+from .inference import (Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC)
+from .intermittent import (POWER_SYSTEMS, RunResult, STRATEGIES, evaluate)
+from .nvstore import NVStore
+
+__all__ = [
+    "AppModel", "Conv2D", "CostTable", "DenseFC", "Device", "DeviceStats",
+    "LEA_COSTS", "LoopOrderedBuffer", "MaxPool2D", "NVStore",
+    "NonTermination", "POWER_SYSTEMS", "PowerFailure", "PowerSystem",
+    "ResumableLoop", "RunResult", "STRATEGIES", "SOFTWARE_COSTS", "SimNet",
+    "SparseFC", "SparseUndoLog", "WILDLIFE", "accuracy_sweep", "evaluate",
+    "make_power_system", "run_intermittent",
+]

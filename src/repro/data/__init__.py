@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline (classification + LM tokens)."""
+
+from .synthetic import Dataset, make_task, token_batches
+
+__all__ = ["Dataset", "make_task", "token_batches"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot spots (validated interpret=True):
+
+  dense_matmul -- tiled MXU matmul (VMEM accumulator, K-innermost grid)
+  sparse_fc    -- block-CSR pruned FC with scalar-prefetched block indices
+  fir_conv1d   -- TAILS FIR-DTC analogue (depthwise 1-D taps)
+  flash_attn   -- online-softmax attention, state in VMEM scratch
+  ssd_intra    -- Mamba2 SSD intra-chunk cell (decay matrix never in HBM)
+  calibrate    -- TAILS-style tile calibration against the VMEM budget
+"""
+
+from .calibrate import MatmulTiles, VMEM_BUDGET_BYTES, fir_tiles, matmul_tiles
+from .ops import (BlockSparseFC, dense_matmul, fir_conv1d,
+                  flash_attention)
+from .ssd_intra import ssd_intra
+from . import ref
+
+__all__ = ["BlockSparseFC", "MatmulTiles", "VMEM_BUDGET_BYTES",
+           "dense_matmul", "fir_conv1d", "fir_tiles",
+           "flash_attention", "matmul_tiles", "ref", "ssd_intra"]

@@ -1,0 +1,72 @@
+"""TAILS-style kernel tile calibration, adapted to the TPU memory hierarchy.
+
+The paper's LEA can only compute out of a 4 KB SRAM staging buffer; TAILS
+calibrates the largest DMA tile that completes within one charge (Sec. 7.1).
+The TPU analogue: the MXU computes out of ~16 MB of VMEM, and the BlockSpec
+tile sizes determine the VMEM working set and MXU utilization.  This module
+picks the largest hardware-aligned (bm, bk, bn) whose working set fits the
+VMEM budget, halving dimensions in FIR order when over budget -- the same
+recursive-halving discipline as the paper, with the energy buffer replaced
+by the VMEM capacity."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+#: usable VMEM per core (v5e has ~128 MB across cores; stay conservative
+#: per-kernel to leave room for double buffering by the pipeline)
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+#: MXU systolic array is 128x128; the VPU lane width is 8x128.
+MXU_DIM = 128
+SUBLANE = 8
+
+
+def _align_down(x: int, a: int) -> int:
+    return max(a, (x // a) * a)
+
+
+@dataclass(frozen=True)
+class MatmulTiles:
+    bm: int
+    bk: int
+    bn: int
+
+    def working_set(self, bytes_per_el: int = 4) -> int:
+        # lhs tile + rhs tile + f32 accumulator (double-buffered inputs)
+        return bytes_per_el * 2 * (self.bm * self.bk + self.bk * self.bn) \
+            + 4 * self.bm * self.bn
+
+
+def matmul_tiles(m: int, k: int, n: int, bytes_per_el: int = 4,
+                 budget: int = VMEM_BUDGET_BYTES) -> MatmulTiles:
+    """Largest aligned tiles fitting the VMEM budget (halving to fit)."""
+    bm = _align_down(min(m, 512), SUBLANE)
+    bn = _align_down(min(n, 1024), MXU_DIM)
+    bk = _align_down(min(k, 1024), MXU_DIM)
+    # pad tiny dims up to hardware minima
+    bm = max(bm, min(m, SUBLANE))
+    bn = max(bn, MXU_DIM) if n >= MXU_DIM else n
+    bk = max(bk, MXU_DIM) if k >= MXU_DIM else k
+    t = MatmulTiles(bm, bk, bn)
+    # recursive halving, largest contributor first (the paper halves its
+    # DMA tile until one tile completes on a single charge)
+    while t.working_set(bytes_per_el) > budget:
+        if t.bn >= t.bk and t.bn > MXU_DIM:
+            t = MatmulTiles(t.bm, t.bk, _align_down(t.bn // 2, MXU_DIM))
+        elif t.bk > MXU_DIM:
+            t = MatmulTiles(t.bm, _align_down(t.bk // 2, MXU_DIM), t.bn)
+        elif t.bm > SUBLANE:
+            t = MatmulTiles(_align_down(t.bm // 2, SUBLANE), t.bk, t.bn)
+        else:
+            break
+    return t
+
+
+def fir_tiles(channels: int, length: int, bytes_per_el: int = 4,
+              budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Channel-block size for the FIR kernel (full length stays in VMEM)."""
+    cb = _align_down(min(channels, 256), SUBLANE) or min(channels, SUBLANE)
+    while cb > SUBLANE and 3 * cb * length * bytes_per_el > budget:
+        cb = _align_down(cb // 2, SUBLANE)
+    return max(cb, 1)

@@ -1,0 +1,53 @@
+"""Tiled dense matmul Pallas kernel (MXU target, VMEM BlockSpec tiling).
+
+Grid (M/bm, N/bn, K/bk); the K axis is innermost so each (i, j) output tile
+stays resident in a f32 VMEM accumulator across K steps (revisiting
+semantics), exactly the loop-ordered-accumulation structure SONIC uses --
+the accumulator is the "front buffer", committed to HBM once per tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(x, w, *, bm: int, bk: int, bn: int, interpret: bool = False):
+    """x (M, K) @ w (K, N); dims must be multiples of the block sizes
+    (ops.py pads)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        f"({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})"
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,48 @@
+"""1-D FIR convolution Pallas kernel (the TAILS FIR-DTC analogue).
+
+LEA's FIR-DTC primitive computes a K-tap convolution over a DMA'd vector;
+TAILS composes 2-D/3-D convolutions by iterating 1-D FIRs and accumulating
+(Sec. 7.2).  The TPU version tiles channels into VMEM blocks (calibrated by
+kernels.calibrate, the TAILS-calibration analogue) and slides the taps over
+a full row held in VMEM; multi-channel 2-D convs compose exactly like
+TAILS: iterate (ci, dy), accumulate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fir_kernel(x_ref, taps_ref, o_ref, *, k: int, out_len: int):
+    x = x_ref[...]                       # (cb, L)
+    taps = taps_ref[...]                 # (cb, K)
+    acc = jnp.zeros((x.shape[0], out_len), jnp.float32)
+    for t in range(k):                   # K is small and static: unrolled
+        acc += x[:, t:t + out_len].astype(jnp.float32) \
+            * taps[:, t][:, None].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def fir_conv1d(x, taps, *, cb: int, interpret: bool = False):
+    """Depthwise 'valid' FIR: x (C, L), taps (C, K) -> (C, L-K+1).
+
+    C must be a multiple of the channel block cb (ops.py pads)."""
+    c, length = x.shape
+    c2, k = taps.shape
+    assert c == c2 and c % cb == 0
+    out_len = length - k + 1
+    return pl.pallas_call(
+        functools.partial(_fir_kernel, k=k, out_len=out_len),
+        grid=(c // cb,),
+        in_specs=[
+            pl.BlockSpec((cb, length), lambda i: (i, 0)),
+            pl.BlockSpec((cb, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((cb, out_len), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, out_len), x.dtype),
+        interpret=interpret,
+    )(x, taps)

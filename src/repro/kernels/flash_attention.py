@@ -1,0 +1,100 @@
+"""Flash attention Pallas kernel (MXU target, online softmax in VMEM).
+
+Grid (B*H, Sq/bq, Sk/bk) with the KV axis innermost: the (m, l, acc)
+softmax state for one query tile lives in VMEM scratch across KV steps and
+is committed to HBM once per query tile -- the same loop-ordered
+accumulation discipline as SONIC's buffered partials (state stays in the
+fast tier; one commit per outer iteration).
+
+Causal masking skips whole KV tiles above the diagonal (pl.when), so the
+causal variant does ~half the work -- on TPU this is the block-sparsity
+that matters, not element masks.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, n_k: int,
+                  sk_valid: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: tiles entirely above the diagonal contribute nothing
+    run = (not causal) or (kj * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]                         # (bq, d)
+        k = k_ref[0]                         # (bk, d)
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = kpos < sk_valid              # padded KV rows never win
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            valid = valid & (kpos <= qpos)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, sk_valid: int = 0,
+                    interpret: bool = False):
+    """q: (BH, Sq, d); k, v: (BH, Sk, d).  Sq % bq == Sk % bk == 0
+    (ops.py pads and reshapes the (B, H, S, d) layout).  ``sk_valid``:
+    number of real (unpadded) KV rows (default: all)."""
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    assert sq % bq == 0 and sk % bk == 0
+    n_q, n_k = sq // bq, sk // bk
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, n_k=n_k,
+                               sk_valid=sk_valid or sk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)
+                   ).astype(x.dtype)
+
+
+def block_sparse_matvec_ref(x, w_dense):
+    """y = x @ W^T against the dense master copy (zeros included)."""
+    return jnp.dot(x.astype(jnp.float32),
+                   jnp.asarray(w_dense).astype(jnp.float32).T
+                   ).astype(x.dtype)
+
+
+def fir_conv1d_ref(x, taps):
+    """Depthwise valid FIR: x (C, L), taps (C, K) -> (C, L-K+1)."""
+    x = np.asarray(x, np.float32)
+    taps = np.asarray(taps, np.float32)
+    c, length = x.shape
+    k = taps.shape[1]
+    out = np.zeros((c, length - k + 1), np.float32)
+    for t in range(k):
+        out += x[:, t:t + length - k + 1] * taps[:, t][:, None]
+    return out
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """Naive softmax attention in f32 over (B, H, S, d)."""
+    import math
+    qf = np.asarray(q, np.float32)
+    kf = np.asarray(k, np.float32)
+    vf = np.asarray(v, np.float32)
+    s = np.einsum("bhqd,bhkd->bhqk", qf, kf) / math.sqrt(q.shape[-1])
+    if causal:
+        # start-aligned convention: query i attends keys j <= i (matches
+        # models.layers.blockwise_attention with q_offset=0)
+        sq, sk = s.shape[-2:]
+        mask = np.tril(np.ones((sq, sk), bool))
+        s = np.where(mask, s, -1e30)
+    s = s - s.max(-1, keepdims=True)
+    p = np.exp(s)
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bhkd->bhqd", p, vf)

@@ -1,0 +1,139 @@
+"""Block-sparse FC Pallas kernel (the pruned-FC hot spot, TPU-adapted).
+
+The paper's pruned FC layers are element-sparse and run in software on the
+MCU (LEA cannot exploit sparsity, Sec. 7.2).  On TPU the MXU wants >= 128x128
+granularity, so GENESIS's TPU backend maps element sparsity onto *block*
+sparsity: the weight matrix is stored as a block-CSR bundle
+(values (nnzb, bm, bk), row pointers, column indices) and the kernel walks
+each output row-block's nonzero blocks, skipping pruned ones entirely.
+
+The column index of every grid step is scalar-prefetched (TPU SMEM) so the
+pipeline can issue the right HBM->VMEM DMA ahead of compute -- the Pallas
+equivalent of TAILS's DMA-then-compute staging.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def to_block_csr(w: np.ndarray, bm: int, bk: int):
+    """Dense (M, K) with zeros -> (vals (nnzb,bm,bk), row_ptr, col_idx).
+
+    Blocks that are entirely zero are dropped; rows are padded to at least
+    one block so every row-block has work (simplifies the kernel grid)."""
+    m, k = w.shape
+    assert m % bm == 0 and k % bk == 0
+    nbr, nbc = m // bm, k // bk
+    vals, col_idx, row_ptr = [], [], [0]
+    for i in range(nbr):
+        row_cols = []
+        for j in range(nbc):
+            blk = w[i * bm:(i + 1) * bm, j * bk:(j + 1) * bk]
+            if np.any(blk != 0):
+                vals.append(blk)
+                row_cols.append(j)
+        if not row_cols:                       # keep one zero block
+            vals.append(np.zeros((bm, bk), w.dtype))
+            row_cols.append(0)
+        col_idx.extend(row_cols)
+        row_ptr.append(len(vals))
+    return (np.stack(vals), np.asarray(row_ptr, np.int32),
+            np.asarray(col_idx, np.int32))
+
+
+def _plan(row_ptr: np.ndarray, col_idx: np.ndarray):
+    """Uniform (row, val, col) step plan: every row-block padded to the max
+    blocks-per-row with repeats of its first block flagged invalid."""
+    nbr = row_ptr.size - 1
+    per_row = np.diff(row_ptr)
+    width = int(per_row.max())
+    rows, vals, cols, valid = [], [], [], []
+    for i in range(nbr):
+        lo, hi = int(row_ptr[i]), int(row_ptr[i + 1])
+        for t in range(width):
+            rows.append(i)
+            if lo + t < hi:
+                vals.append(lo + t)
+                cols.append(int(col_idx[lo + t]))
+                valid.append(1)
+            else:
+                vals.append(lo)
+                cols.append(int(col_idx[lo]))
+                valid.append(0)
+    return (np.asarray(rows, np.int32), np.asarray(vals, np.int32),
+            np.asarray(cols, np.int32), np.asarray(valid, np.int32), width)
+
+
+def _kernel(rows, vals, cols, valid, x_ref, w_ref, o_ref, acc_ref,
+            *, width: int, nb: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # grid dim 0 enumerates (row_block, batch_block); scalar plans are per
+    # (row_block, t)
+    step = (pl.program_id(0) // nb) * width + t
+
+    @pl.when(valid[step] == 1)
+    def _acc():
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[0].T, preferred_element_type=jnp.float32)
+
+    @pl.when(t == width - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_sparse_matvec(x, vals, row_ptr, col_idx, m: int, *,
+                        bm: int, bk: int, bn: int = 8,
+                        interpret: bool = False):
+    """y (N, M) = x (N, K) @ W^T where W (M, K) is block-CSR.
+
+    N (batch) must be a multiple of bn."""
+    n, k = x.shape
+    rows, val_ids, cols, valid, width = _plan(np.asarray(row_ptr),
+                                              np.asarray(col_idx))
+    nbr = (np.asarray(row_ptr).size - 1)
+    grid = (nbr * (n // bn), width)
+
+    nb = n // bn
+
+    # index maps receive (grid indices..., scalar-prefetch refs...)
+    def x_map(i, t, rows_s, vals_s, cols_s, valid_s):
+        # grid dim 0 enumerates (row_block, batch_block) pairs
+        return (i % nb, cols_s[i // nb * width + t])
+
+    def w_map(i, t, rows_s, vals_s, cols_s, valid_s):
+        return (vals_s[i // nb * width + t], 0, 0)
+
+    def o_map(i, t, rows_s, vals_s, cols_s, valid_s):
+        return (i % nb, rows_s[i // nb * width + t])
+
+    kernel = functools.partial(_kernel, width=width, nb=nb)
+    flat_grid = (nbr * nb, width)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=flat_grid,
+            in_specs=[
+                pl.BlockSpec((bn, bk), x_map),
+                pl.BlockSpec((1, bm, bk), w_map),
+            ],
+            out_specs=pl.BlockSpec((bn, bm), o_map),
+            scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(rows), jnp.asarray(val_ids), jnp.asarray(cols),
+      jnp.asarray(valid), x, jnp.asarray(vals))

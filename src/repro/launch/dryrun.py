@@ -1,0 +1,293 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / collective analyses.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+Results are cached as JSON under benchmarks/results/dryrun/ so the matrix is
+resumable (the repo's own loop-continuation discipline).
+"""
+
+# The dry-run (and ONLY the dry-run) simulates the production fleet with
+# host-platform devices.  These two lines MUST precede any other import --
+# JAX locks the device count on first initialization.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS, get_config                     # noqa: E402
+from ..models import (cache_spec_shapes, cell_applicable, get_model,
+                      input_spec_shapes, shardctx)          # noqa: E402
+from ..models.config import SHAPES                          # noqa: E402
+from ..optim import adamw                                   # noqa: E402
+from . import hlo_costs                                     # noqa: E402
+from .mesh import make_production_mesh, mesh_chips          # noqa: E402
+from .shardings import (batch_pspec, cache_pspecs, input_pspecs,
+                        tree_shardings)                     # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _spec_tree(spec_shapes: dict) -> dict:
+    return {k: _sds(*v) for k, v in spec_shapes.items()}
+
+
+def sharded_bytes(sds_tree, shard_tree) -> int:
+    """Exact per-device bytes of a pytree under its shardings (the
+    CPU-backend-independent part of the memory story: params + optimizer
+    state or KV caches)."""
+    import numpy as _np
+
+    total = 0
+    for sds, sh in zip(jax.tree.leaves(sds_tree), jax.tree.leaves(shard_tree)):
+        n = _np.prod(sds.shape, dtype=_np.int64) if sds.shape else 1
+        denom = 1
+        spec = getattr(sh, "spec", None)
+        if spec is not None:
+            for ax in spec:
+                if ax is None:
+                    continue
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    denom *= sh.mesh.shape[a]
+        total += int(n) * sds.dtype.itemsize // max(denom, 1)
+    return total
+
+
+def build_cell(cfg, cell, mesh):
+    """Returns (fn, args_sds, in_shardings, out_shardings)."""
+    api = get_model(cfg)
+    params_sds = jax.eval_shape(lambda: api.init_params(cfg,
+                                                        jax.random.key(0)))
+    p_shard = tree_shardings(params_sds, mesh)
+    batch_sds = _spec_tree(input_spec_shapes(cfg, cell))
+    b_pspecs = input_pspecs(cfg, cell, mesh, input_spec_shapes(cfg, cell))
+    b_shard = {k: NamedSharding(mesh, v) for k, v in b_pspecs.items()}
+    rep = NamedSharding(mesh, P())
+
+    if cell.kind == "train":
+        opt = adamw(lr=3e-4)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        o_shard = tree_shardings(opt_sds, mesh, zero1=True)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss_fn(cfg, p, batch))(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        # params + optimizer state are donated, as in any real trainer
+        return (train_step, (params_sds, opt_sds, batch_sds),
+                (p_shard, o_shard, b_shard), (p_shard, o_shard, rep), (0, 1))
+
+    if cell.kind == "prefill":
+        def prefill_step(params, batch):
+            if cfg.family == "encdec":
+                return api.forward(cfg, params, batch)
+            if cfg.family == "vlm":
+                return api.forward(cfg, params, batch["tokens"],
+                                   batch["patches"])
+            return api.forward(cfg, params, batch["tokens"])
+
+        return (prefill_step, (params_sds, batch_sds),
+                (p_shard, b_shard), None)
+
+    # decode: one token against a seq_len cache
+    cache_sds = _spec_tree(cache_spec_shapes(cfg, cell))
+    c_pspecs = cache_pspecs(cfg, cell, mesh, cache_spec_shapes(cfg, cell))
+    c_shard = {k: NamedSharding(mesh, v) for k, v in c_pspecs.items()}
+
+    def serve_step(params, cache, token, pos):
+        return api.decode_step(cfg, params, cache, token, pos)
+
+    # the cache is donated (aliased in/out) exactly as a real server would
+    return (serve_step,
+            (params_sds, cache_sds, batch_sds["token"], _sds((), "int32")),
+            (p_shard, c_shard, b_shard["token"], rep),
+            (rep, c_shard), (1,))
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             cfg_override=None, strategy: str = "tp",
+             remat: str = "") -> dict:
+    import dataclasses
+    from .shardings import set_strategy
+    set_strategy(strategy)
+    cfg = cfg_override or get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+        rec_remat = remat
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape, "strategy": strategy,
+           "remat": remat or cfg.remat,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+           "multi_pod": multi_pod, "chips": mesh_chips(mesh),
+           "kind": cell.kind, "status": "ok"}
+    ok, reason = cell_applicable(cfg, cell)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = reason
+        return rec
+
+    # Activation sharding hints for model internals (vocab-sharded logits,
+    # expert-sharded MoE dispatch) -- see repro.models.shardctx.
+    b = batch_pspec(mesh, cell.global_batch) or None
+    seq_ax = "model" if cell.kind in ("train", "prefill") else None
+    if strategy == "dp":
+        # pure DP: no feature/head/sequence sharding anywhere
+        shardctx.set_rules(
+            logits=NamedSharding(mesh, P(b, None, None)),
+            moe_xe=NamedSharding(mesh, P(b, None, None, None)),
+            residual=NamedSharding(mesh, P(b, None, None)),
+            heads=NamedSharding(mesh, P(b, None, None, None)),
+            heads_kv=NamedSharding(mesh, P(b, None, None, None)),
+            ssm_heads=NamedSharding(mesh, P(b, None, None, None)),
+        )
+    elif strategy == "ep":
+        # GShard: tokens 256-way DP; the dispatch einsum's output hands the
+        # model axis to the expert dim (the canonical all-to-all); vocab
+        # is FSDP-stored and gathered at the (chunked) loss
+        shardctx.set_rules(
+            logits=NamedSharding(mesh, P(b, None, None)),
+            moe_xe=NamedSharding(mesh, P("data", "model", None, None)),
+            residual=NamedSharding(mesh, P(b, None, None)),
+            heads=NamedSharding(mesh, P(b, None, None, None)),
+            heads_kv=NamedSharding(mesh, P(b, None, None, None)),
+            ssm_heads=NamedSharding(mesh, P(b, None, None, None)),
+        )
+    else:
+        shardctx.set_rules(
+            logits=NamedSharding(mesh, P(b, None, "model")),
+            moe_xe=NamedSharding(mesh, P(b, "model", None, None)),
+            residual=NamedSharding(mesh, P(b, seq_ax, None)),
+            heads=NamedSharding(mesh, P(b, "model", None, None)),
+            heads_kv=NamedSharding(mesh, P(b, "model", None, None)),
+            ssm_heads=NamedSharding(mesh, P(b, None, "model", None)),
+        )
+    try:
+        built = build_cell(cfg, cell, mesh)
+        fn, args, in_sh, out_sh = built[:4]
+        donate = built[4] if len(built) > 4 else ()
+        t0 = time.time()
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+    finally:
+        shardctx.clear()
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+    }
+    live = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rec["memory"]["live_bytes_per_device"] = int(live)
+    rec["memory"]["fits_16GB_hbm"] = bool(live < 16 * 1024**3)
+    # Exact sharded state bytes (params [+ opt state / caches]) -- the
+    # backend-independent floor.  The CPU backend inflates live_bytes with
+    # f32 dot-promotion copies and out-of-loop FSDP weight gathers that the
+    # TPU pipeline keeps in-loop (see EXPERIMENTS.md section Dry-run).
+    state = sharded_bytes(built[1][0], built[2][0])
+    if cell.kind == "train":
+        state += sharded_bytes(built[1][1], built[2][1])
+    elif cell.kind == "decode":
+        state += sharded_bytes(built[1][1], built[2][1])
+    rec["memory"]["state_bytes_per_device"] = int(state)
+
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0))}
+
+    t2 = time.time()
+    hc = hlo_costs.analyze(compiled.as_text())
+    rec["analyze_s"] = round(time.time() - t2, 2)
+    rec["hlo"] = hc.as_dict()
+    return rec
+
+
+def cell_list():
+    return [(a, s) for a in ARCHS for s in SHAPES]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--strategy", default="tp",
+                    choices=["tp", "dp", "ep"])
+    ap.add_argument("--remat", default="", choices=["", "none", "full",
+                                                    "dots"])
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cells = cell_list() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}" + (
+                f"__{args.strategy}" if args.strategy != "tp" else "") + (
+                f"__{args.remat}" if args.remat else "")
+            path = out_dir / f"{tag}.json"
+            if path.exists() and not args.force:
+                print(f"[cached] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp, strategy=args.strategy,
+                               remat=args.remat)
+            except Exception as e:           # noqa: BLE001
+                rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+            path.write_text(json.dumps(rec, indent=1))
+            st = rec["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skipped"
+            n_fail += st == "error"
+            if st == "ok":
+                m = rec["memory"]
+                print(f"  ok: live/dev={m['live_bytes_per_device']/2**30:.2f}"
+                      f" GiB fit={m['fits_16GB_hbm']}"
+                      f" flops/dev={rec['hlo']['flops']:.3e}"
+                      f" coll/dev={rec['hlo']['collective_bytes']:.3e}B"
+                      f" compile={rec['compile_s']}s", flush=True)
+            elif st == "skipped":
+                print(f"  skipped: {rec['skip_reason']}")
+            else:
+                print(f"  ERROR: {rec['error']}")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state -- required because the dry-run forces 512
+host devices while tests and benches must see the single real device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2x16x16 =
+    512 chips (pod, data, model); the pod axis carries pure data parallelism
+    over DCN, proving the cross-pod sharding lowers."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Small mesh over whatever devices exist (CPU tests, examples)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,249 @@
+"""Logical-to-physical sharding rules.
+
+Parameters are matched by leaf name (the last path component) against a
+rules table mapping the *trailing* dimensions to mesh axes; leading stacked
+dimensions (layers, super-blocks) are replicated.  DP = batch over
+(pod, data); TP = feature/head/vocab over model; EP = expert over model;
+SP = sequence over data for the B=1 long-context cells.
+
+GSPMD pads non-divisible dims, so rules never fail -- padding waste surfaces
+in the roofline instead (a hillclimb lever).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeCell
+from .mesh import dp_axes
+
+M = "model"
+
+#: Global sharding strategy (hillclimb lever, set by the launcher):
+#:   "tp"  -- baseline: TP over model for features/heads/experts, DP over
+#:            data(+pod), SP residuals, FSDP lead dims (paper-faithful
+#:            Megatron-style mapping).
+#:   "dp"  -- pure data parallelism over BOTH axes: weights replicated,
+#:            batch sharded 256-way.  Right for small models where TP=16
+#:            is all collective and no compute (see EXPERIMENTS.md Perf).
+#:   "ep"  -- GShard MoE mapping: batch shards over BOTH axes (full 256-way
+#:            DP for attention/norm compute), experts own the model axis
+#:            (dispatch/combine all-to-alls move tokens, never expert
+#:            weights), every non-expert weight is FSDP-sharded on a
+#:            divisible dim over data and gathered per layer.
+_STRATEGY = "tp"
+
+#: leaves that keep their model-axis sharding under the "ep" strategy
+EP_KEEP_MODEL = {"we_gate", "we_up", "we_down"}
+
+#: "ep" storage shards for the embedding tables (gathered at use)
+EP_OVERRIDES = {"embed": ("data", None), "lm_head": (None, "data")}
+
+
+def set_strategy(name: str) -> None:
+    global _STRATEGY
+    assert name in ("tp", "dp", "ep"), name
+    _STRATEGY = name
+
+
+def get_strategy() -> str:
+    return _STRATEGY
+
+
+#: leaf name -> spec of TRAILING dims (rightmost-aligned).
+PARAM_RULES: dict[str, tuple] = {
+    # embeddings / head
+    "embed": (None, M),
+    "lm_head": (None, M),
+    # attention (column-parallel QKV, row-parallel O)
+    "wq": (None, M), "wk": (None, M), "wv": (None, M), "wo": (M, None),
+    "bq": (M,), "bk": (M,), "bv": (M,),
+    "q_norm": (None,), "k_norm": (None,),
+    # dense MLP
+    "w_gate": (None, M), "w_up": (None, M), "w_down": (M, None),
+    # MoE (expert parallel; router replicated)
+    "router": (None, None),
+    "we_gate": (M, None, None), "we_up": (M, None, None),
+    "we_down": (M, None, None),
+    "ws_gate": (None, M), "ws_up": (None, M), "ws_down": (M, None),
+    # mamba2
+    "in_proj": (None, M), "out_proj": (M, None),
+    "conv_w": (None, M), "conv_b": (M,),
+    "A_log": (M,), "Dskip": (M,), "dt_bias": (M,), "gnorm": (M,),
+    # norms
+    "ln": (None,), "ln1": (None,), "ln2": (None,), "ln3": (None,),
+    "final_norm": (None,), "enc_norm": (None,), "scale": (None,),
+}
+
+
+#: params/opt leaves at or above this many elements get their stacked layer
+#: dim sharded over "data" (FSDP/ZeRO-3 style: the scan all-gathers one
+#: layer's shard per step).  109B-param llama4 would otherwise need 13.6 GB
+#: of parameters per chip under TP-only sharding.
+FSDP_MIN_ELEMS = 1 << 24
+
+
+def param_pspec(name: str, shape, mesh=None, zero1: bool = False) -> P:
+    """Spec for one param; axes that do not divide the dim are dropped
+    (pjit argument shardings require exact divisibility, unlike
+    intermediate constraints which GSPMD pads).  ``zero1`` additionally
+    spreads optimizer-state leaves over the data axis (ZeRO-1)."""
+    if _STRATEGY == "dp":
+        # weights replicated; only ZeRO-1 spreads the optimizer moments
+        if zero1 and mesh is not None:
+            sizes = dict(mesh.shape)
+            for i, s in enumerate(shape):
+                if s % sizes.get("data", 1) == 0 and s >= sizes.get("data", 1):
+                    return P(*([None] * i + ["data"]
+                               + [None] * (len(shape) - i - 1)))
+        return P()
+    rule = PARAM_RULES.get(name)
+    if rule is None:
+        return P()
+    if _STRATEGY == "ep" and name not in EP_KEEP_MODEL:
+        rule = EP_OVERRIDES.get(
+            name, tuple(None if ax == M else ax for ax in rule))
+    ndim = len(shape)
+    lead = ndim - len(rule)
+    if lead < 0:           # smaller than rule (e.g. unstacked single layer)
+        rule = rule[-ndim:]
+        lead = 0
+    full = list((None,) * lead + tuple(rule))
+    if mesh is not None:
+        sizes = dict(mesh.shape)
+        full = [ax if ax is None or shape[i] % sizes.get(ax, 1) == 0 else
+                None for i, ax in enumerate(full)]
+        elems = 1
+        for s in shape:
+            elems *= s
+        # FSDP: large stacked tensors also shard their layer dim over data.
+        if (lead >= 1 and elems >= FSDP_MIN_ELEMS and full[0] is None
+                and shape[0] % sizes.get("data", 1) == 0):
+            full[0] = "data"
+        # ZeRO-1: optimizer moments spread over data on any divisible dim.
+        if zero1 and "data" not in full:
+            for i, ax in enumerate(full):
+                if ax is None and shape[i] % sizes.get("data", 1) == 0                         and shape[i] >= sizes.get("data", 1):
+                    full[i] = "data"
+                    break
+    return P(*full)
+
+
+def tree_pspecs(tree, mesh=None, zero1: bool = False) -> dict:
+    """Pytree of PartitionSpecs matching a params/optimizer pytree."""
+    def walk(node, name):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, tuple) and hasattr(node, "_fields"):
+            return type(node)(*(walk(v, f)
+                                for v, f in zip(node, node._fields)))
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name) for v in node)
+        shape = tuple(getattr(node, "shape", ()))
+        return param_pspec(name, shape, mesh, zero1)
+    return walk(tree, "")
+
+
+def tree_shardings(tree, mesh, zero1: bool = False):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_pspecs(tree, mesh, zero1))
+
+
+# --------------------------------------------------------------------------
+# Inputs / caches per shape cell
+# --------------------------------------------------------------------------
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def batch_pspec(mesh, global_batch: int) -> tuple:
+    """Shard batch over (pod, data) if divisible, else data, else replicate.
+    Under the "dp" strategy the model axis joins the data-parallel pool."""
+    dp = dp_axes(mesh)
+    if _STRATEGY in ("dp", "ep"):
+        # widest DP grid that divides the batch; on the multi-pod mesh a
+        # batch smaller than the chip count prefers (data, model) and lets
+        # the pod axis replicate (grad all-reduce over DCN) rather than
+        # leaving the model axis to replicate compute
+        candidates = [tuple(list(dp) + ["model"])]
+        if "pod" in dp:
+            candidates.append(("data", "model"))
+        candidates.append(tuple(dp))
+        for axes in candidates:
+            full = 1
+            for a in axes:
+                full *= mesh.shape[a]
+            if global_batch % full == 0:
+                return axes
+    sizes = {a: mesh.shape[a] for a in dp}
+    full = 1
+    for a in dp:
+        full *= sizes[a]
+    if _div(global_batch, full):
+        return dp
+    if _div(global_batch, sizes.get("data", 1)):
+        return ("data",)
+    return ()
+
+
+def input_pspecs(cfg: ModelConfig, cell: ShapeCell, mesh,
+                 spec_shapes: dict) -> dict:
+    bspec = batch_pspec(mesh, cell.global_batch)
+    b = bspec if bspec else None
+    out = {}
+    for name, (shape, _) in spec_shapes.items():
+        if name in ("tokens", "labels"):
+            out[name] = P(b, None)
+        elif name in ("frames", "patches"):
+            out[name] = P(b, None, None)
+        elif name == "token":
+            out[name] = P(b)
+        else:
+            out[name] = P()
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, cell: ShapeCell, mesh,
+                 cache_shapes: dict) -> dict:
+    """Decode-state shardings.  Batch over DP when divisible; for the B=1
+    long-context cells, the sequence dim of KV caches shards over data (SP)
+    and SSM state heads shard over model."""
+    bspec = batch_pspec(mesh, cell.global_batch)
+    b = bspec if bspec else None
+    data_n = mesh.shape.get("data", 1)
+    model_n = mesh.shape.get("model", 1)
+    out = {}
+    for name, (shape, _) in cache_shapes.items():
+        if name in ("k", "v", "xk", "xv"):
+            L, B, KV, S, hd = shape
+            # KV heads rarely divide the model axis (GQA); the sequence dim
+            # always does at these lengths, so the cache shards
+            # (batch->data, seq->model) -- decode attention then computes
+            # partial softmax stats per seq shard (flash-decoding layout).
+            kv_ax = M if _div(KV, model_n) else None
+            seq_ax = M if kv_ax is None and _div(S, model_n) else None
+            if b is not None:
+                out[name] = P(None, b, kv_ax, seq_ax, None)
+            else:
+                d_ax = "data" if _div(S, data_n) else None
+                out[name] = P(None, None, kv_ax, d_ax, None)
+        elif name == "ssm":
+            L, B, H, N, Pd = shape
+            h_ax = M if _div(H, model_n) else None
+            out[name] = P(None, b, h_ax, None, None)
+        elif name == "conv":
+            L, B, K, C = shape
+            c_ax = M if _div(C, model_n) else None
+            out[name] = P(None, b, None, c_ax)
+        else:
+            out[name] = P()
+    return out
+
+
+def logical_summary(cfg: ModelConfig, mesh) -> str:
+    """Human-readable sharding summary for DESIGN/EXPERIMENTS."""
+    dp = "x".join(str(mesh.shape[a]) for a in dp_axes(mesh))
+    return (f"DP={dp} TP={mesh.shape.get('model', 1)}"
+            f"{' EP over model' if cfg.is_moe else ''}")

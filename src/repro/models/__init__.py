@@ -1,0 +1,13 @@
+"""Model zoo: pure-JAX architectures with scan-over-layers stacks."""
+
+from . import shardctx
+from .api import (ModelAPI, cache_spec_shapes, cell_applicable, get_model,
+                  input_spec_shapes)
+from .config import SHAPES, SUBQUADRATIC, ModelConfig, ShapeCell
+from .dnn import NETWORKS, har_net, mnist_net, okg_net
+
+__all__ = [
+    "shardctx", "ModelAPI", "ModelConfig", "NETWORKS", "SHAPES", "SUBQUADRATIC",
+    "ShapeCell", "cache_spec_shapes", "cell_applicable", "get_model",
+    "har_net", "input_spec_shapes", "mnist_net", "okg_net",
+]

@@ -1,0 +1,131 @@
+"""Unified model API across families: init / loss / serve / input specs.
+
+Every family exposes the same entry points so the launcher, dry-run, trainer
+and server are architecture-agnostic:
+
+  init_params(cfg, key)                     -> params pytree
+  loss_fn(cfg, params, batch)               -> scalar loss (train shapes)
+  init_cache(cfg, batch, max_len)           -> cache pytree (decode shapes)
+  decode_step(cfg, params, cache, tok, pos) -> (logits, cache)
+  prefill_fn(cfg, params, batch)            -> logits (prefill shapes)
+  input_spec_shapes(cfg, cell)              -> {name: (shape, dtype)}
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from . import mamba2, transformer, whisper, zamba2
+from .config import ModelConfig, SHAPES, SUBQUADRATIC, ShapeCell
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    init_params: Callable
+    loss_fn: Callable
+    forward: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelAPI(transformer.init_params, transformer.loss_fn,
+                        transformer.forward, transformer.init_cache,
+                        transformer.decode_step)
+    if fam == "ssm":
+        return ModelAPI(mamba2.init_params, mamba2.loss_fn, mamba2.forward,
+                        mamba2.init_cache, mamba2.decode_step)
+    if fam == "hybrid":
+        return ModelAPI(zamba2.init_params, zamba2.loss_fn, zamba2.forward,
+                        zamba2.init_cache, zamba2.decode_step)
+    if fam == "encdec":
+        return ModelAPI(whisper.init_params, whisper.loss_fn,
+                        whisper.forward, whisper.init_cache,
+                        whisper.decode_step)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs; else the documented reason."""
+    if cell.name == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return False, ("full quadratic attention at 512K context; "
+                       "assigned only to ssm/hybrid families")
+    return True, ""
+
+
+def input_spec_shapes(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract input shapes for one cell; the launcher wraps these in
+    ShapeDtypeStructs (no allocation) and assigns shardings."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": ((b, cfg.encoder_seq, cfg.d_model),
+                           cfg.compute_dtype),
+                "tokens": ((b, s), "int32"),
+                "labels": ((b, s), "int32"),
+            }
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            return {
+                "patches": ((b, p, cfg.d_model), cfg.compute_dtype),
+                "tokens": ((b, s - p), "int32"),
+                "labels": ((b, s - p), "int32"),
+            }
+        return {"tokens": ((b, s), "int32"), "labels": ((b, s), "int32")}
+    if cell.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frames": ((b, cfg.encoder_seq, cfg.d_model),
+                           cfg.compute_dtype),
+                "tokens": ((b, s), "int32"),
+            }
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            return {
+                "patches": ((b, p, cfg.d_model), cfg.compute_dtype),
+                "tokens": ((b, s - p), "int32"),
+            }
+        return {"tokens": ((b, s), "int32")}
+    # decode: one new token against a seq_len cache; the cache specs are
+    # produced separately (cache_spec_shapes) since they are carried state.
+    return {"token": ((b,), "int32")}
+
+
+def cache_spec_shapes(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Shapes of the decode-state pytree for a cell (leading dim layers)."""
+    b, s = cell.global_batch, cell.seq_len
+    kd = cfg.kv_dtype or cfg.compute_dtype
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+        return {"k": ((L, b, kv, s, hd), kd), "v": ((L, b, kv, s, hd), kd)}
+    if fam == "ssm":
+        d_in, h, n, conv_dim = mamba2._dims(cfg)
+        return {
+            "ssm": ((cfg.num_layers, b, h, n, cfg.ssm_headdim), "float32"),
+            "conv": ((cfg.num_layers, b, cfg.conv_kernel - 1, conv_dim), kd),
+        }
+    if fam == "hybrid":
+        a = cfg.attn_every
+        n_super = cfg.num_layers // a
+        d_in, h, n, conv_dim = mamba2._dims(cfg)
+        return {
+            "ssm": ((cfg.num_layers, b, h, n, cfg.ssm_headdim), "float32"),
+            "conv": ((cfg.num_layers, b, cfg.conv_kernel - 1, conv_dim), kd),
+            "k": ((n_super, b, cfg.num_kv_heads, s, cfg.hd), kd),
+            "v": ((n_super, b, cfg.num_kv_heads, s, cfg.hd), kd),
+        }
+    if fam == "encdec":
+        L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+        return {
+            "k": ((L, b, kv, s, hd), kd), "v": ((L, b, kv, s, hd), kd),
+            "xk": ((L, b, kv, cfg.encoder_seq, hd), kd),
+            "xv": ((L, b, kv, cfg.encoder_seq, hd), kd),
+        }
+    raise ValueError(fam)

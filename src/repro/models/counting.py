@@ -1,0 +1,41 @@
+"""Exact parameter counts (total and active) per config, via eval_shape."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+from .api import get_model
+from .config import ModelConfig
+
+
+def param_count(cfg: ModelConfig) -> int:
+    api = get_model(cfg)
+    sds = jax.eval_shape(lambda: api.init_params(cfg, jax.random.key(0)))
+    return sum(int(math.prod(l.shape)) for l in jax.tree.leaves(sds))
+
+
+def expert_params_per_layer(cfg: ModelConfig) -> int:
+    if not cfg.is_moe:
+        return 0
+    return 3 * cfg.d_model * cfg.moe_d_ff        # gate, up, down
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k experts instead of all)."""
+    total = param_count(cfg)
+    if not cfg.is_moe:
+        return total
+    inactive = (cfg.num_experts - cfg.experts_per_tok) * \
+        expert_params_per_layer(cfg) * cfg.num_layers
+    return total - inactive
+
+
+def model_flops(cfg: ModelConfig, tokens: int, kind: str) -> float:
+    """The 6*N*D / 2*N*D convention (N = active params incl embeddings and
+    head; attention quadratic term excluded -- it is reported separately by
+    the HLO analysis)."""
+    n = active_param_count(cfg)
+    per_tok = 6.0 * n if kind == "train" else 2.0 * n
+    return per_tok * tokens

@@ -1,0 +1,252 @@
+"""Mamba2 (state-space duality / SSD) language model, pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk attention-like
+matmuls + inter-chunk recurrent state scan), decode uses the O(1) recurrent
+update -- which is why the ssm/hybrid families run the long_500k cell that
+quadratic attention cannot.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import shardctx
+from .config import ModelConfig
+from .layers import dt, init_from_shapes, rms_norm
+from .transformer import _nest, _remat, xent_loss
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n          # x, B, C all pass the causal conv
+    return d_in, h, n, conv_dim
+
+
+def layer_param_shapes(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, n, conv_dim = _dims(cfg)
+    return {
+        "ln": (d,),
+        "in_proj": (d, 2 * d_in + 2 * n + h),
+        "conv_w": (cfg.conv_kernel, conv_dim),
+        "conv_b": (conv_dim,),
+        "A_log": (h,),
+        "Dskip": (h,),
+        "dt_bias": (h,),
+        "gnorm": (d_in,),
+        "out_proj": (d_in, d),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kd = dt(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    flat = init_from_shapes(k_layers, layer_param_shapes(cfg), kd,
+                            stacked=cfg.num_layers)
+    # SSD-specific inits: A in [1, ~e], dt_bias so softplus(dt)~[1e-3, 0.1]
+    L = cfg.num_layers
+    h = cfg.ssm_heads
+    flat["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+                            )[None].repeat(L, 0).astype(kd)
+    flat["Dskip"] = jnp.ones((L, h), kd)
+    flat["dt_bias"] = jnp.full((L, h), -4.0, kd)
+    flat["gnorm"] = jnp.ones((L, cfg.d_inner), kd)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_padded, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(kd),
+        "layers": _nest(flat),
+        "final_norm": jnp.ones((cfg.d_model,), kd),
+        "lm_head": (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_padded), jnp.float32
+        ) * 0.02).astype(kd),
+    }
+    return params
+
+
+# --------------------------------------------------------------------------
+# Chunked SSD
+# --------------------------------------------------------------------------
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along time. xbc: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_in, h, n, _ = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * n]
+    dtr = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, xbc, dtr
+
+
+def ssd_chunked(xh, bb, cc, dtv, a_neg, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P); bb/cc: (B,S,N); dtv: (B,S,H); a_neg: (H,) negative.
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = xh.shape
+    n = bb.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by ssd chunk {q}"
+    nc = s // q
+    f32 = jnp.float32
+
+    xc = xh.reshape(b, nc, q, h, p)
+    bc = bb.reshape(b, nc, q, n).astype(f32)
+    ccc = cc.reshape(b, nc, q, n).astype(f32)
+    dtc = dtv.reshape(b, nc, q, h).astype(f32)
+    da = dtc * a_neg.astype(f32)                   # (B,NC,Q,H) log-decays
+    cs = jnp.cumsum(da, axis=2)                    # inclusive cumsum
+
+    # Intra-chunk (quadratic in Q only).
+    g = jnp.einsum("bcin,bcjn->bcij", ccc, bc)
+    l_mat = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,NC,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(causal[None, None, :, :, None], g[..., None] * l_mat, 0.0)
+    xdt = (xc.astype(f32) * dtc[..., None])        # (B,NC,Q,H,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xdt)
+
+    # Chunk summary states and the inter-chunk recurrence (xdt already
+    # carries the dt discretization factor exactly once).
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)     # (B,NC,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_end, bc, xdt)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])         # (B,NC,H)
+
+    def step(r, inputs):
+        s_c, dec = inputs                          # (B,H,N,P), (B,H)
+        r_new = r * dec[:, :, None, None] + s_c
+        return r_new, r                            # emit state BEFORE chunk
+
+    (r_final, r_before) = lax.scan(
+        step,
+        jnp.zeros((b, h, n, p), f32),
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    r_before = jnp.moveaxis(r_before, 0, 1)        # (B,NC,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", ccc, r_before,
+                         jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(xh.dtype), r_final
+
+
+def mamba_mix(cfg: ModelConfig, pl: dict, x):
+    """One Mamba2 mixer on (B,S,D) (pre-norm residual added by caller)."""
+    d_in, h, n, _ = _dims(cfg)
+    z, xbc, dtr = _split_proj(cfg, x @ pl["in_proj"])
+    xbc = _causal_conv(xbc, pl["conv_w"], pl["conv_b"])
+    xs, bb, cc = (xbc[..., :d_in], xbc[..., d_in:d_in + n],
+                  xbc[..., d_in + n:])
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32)
+                          + pl["dt_bias"].astype(jnp.float32))
+    a_neg = -jnp.exp(pl["A_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:2], h, cfg.ssm_headdim)
+    xh = shardctx.constrain(xh, "ssm_heads")
+    y, _ = ssd_chunked(xh, bb, cc, dtv, a_neg, cfg.ssm_chunk)
+    y = y + xh * pl["Dskip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 pl["gnorm"], cfg.norm_eps)
+    return y @ pl["out_proj"]
+
+
+def layer_fn(cfg: ModelConfig, pl: dict, x, positions=None):
+    x = x + mamba_mix(cfg, pl, rms_norm(x, pl["ln"], cfg.norm_eps))
+    return shardctx.constrain(x, "residual")
+
+
+def forward(cfg: ModelConfig, params: dict, tokens):
+    cd = dt(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[tokens]
+    body = _remat(cfg, functools.partial(layer_fn, cfg))
+    x, _ = lax.scan(lambda c, pl: (body(pl, c), None), x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    from .transformer import mask_pad_logits
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return shardctx.constrain(mask_pad_logits(cfg, logits), "logits")
+
+
+def hidden_fn(cfg: ModelConfig, params: dict, tokens):
+    cd = dt(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[tokens]
+    body = _remat(cfg, functools.partial(layer_fn, cfg))
+    x, _ = lax.scan(lambda c, pl: (body(pl, c), None), x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    from .transformer import lm_loss
+    x = hidden_fn(cfg, params, batch["tokens"])
+    return lm_loss(cfg, params, x, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# Recurrent decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> dict:
+    kd = dt(cfg.compute_dtype)
+    d_in, h, n, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.num_layers, batch, h, n, cfg.ssm_headdim),
+                         jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.conv_kernel - 1,
+                           conv_dim), kd),
+    }
+
+
+def mamba_decode_mix(cfg: ModelConfig, pl: dict, x1, ssm, conv):
+    """x1: (B, D) single token.  Returns (y, ssm', conv')."""
+    d_in, h, n, conv_dim = _dims(cfg)
+    z, xbc, dtr = _split_proj(cfg, x1 @ pl["in_proj"])
+    window = jnp.concatenate([conv, xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_new = window[:, 1:, :]
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, pl["conv_w"])
+                      + pl["conv_b"])
+    xs, bb, cc = (xbc[..., :d_in], xbc[..., d_in:d_in + n],
+                  xbc[..., d_in + n:])
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32)
+                          + pl["dt_bias"].astype(jnp.float32))   # (B,H)
+    a_neg = -jnp.exp(pl["A_log"].astype(jnp.float32))
+    xh = xs.reshape(-1, h, cfg.ssm_headdim).astype(jnp.float32)
+    decay = jnp.exp(dtv * a_neg)                                  # (B,H)
+    ssm_new = (ssm * decay[:, :, None, None]
+               + jnp.einsum("bh,bn,bhp->bhnp", dtv, bb.astype(jnp.float32),
+                            xh))
+    y = jnp.einsum("bn,bhnp->bhp", cc.astype(jnp.float32), ssm_new)
+    y = y + xh * pl["Dskip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, d_in).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 pl["gnorm"], cfg.norm_eps)
+    return y @ pl["out_proj"], ssm_new, conv_new
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token, pos):
+    cd = dt(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[token]                 # (B, D)
+
+    def scan_fn(x, inputs):
+        pl, ssm, conv = inputs
+        h = rms_norm(x, pl["ln"], cfg.norm_eps)
+        y, ssm, conv = mamba_decode_mix(cfg, pl, h, ssm, conv)
+        return x + y, (ssm, conv)
+
+    x, (ssm, conv) = lax.scan(scan_fn, x,
+                              (params["layers"], cache["ssm"],
+                               cache["conv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    from .transformer import mask_pad_logits
+    logits = mask_pad_logits(cfg, (x @ params["lm_head"].astype(x.dtype)
+                                   ).astype(jnp.float32))
+    return logits, {"ssm": ssm, "conv": conv}

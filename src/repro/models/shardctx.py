@@ -1,0 +1,41 @@
+"""Optional sharding-constraint context for model internals.
+
+The launcher installs NamedShardings for a few well-known activation keys
+(logits, hidden, moe dispatch); model code calls ``constrain`` at those
+points.  With no rules installed (CPU tests, single device) it is a no-op,
+so model code stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+
+_RULES: dict = {}
+
+
+def set_rules(**rules) -> None:
+    _RULES.update(rules)
+
+
+def clear() -> None:
+    _RULES.clear()
+
+
+@contextmanager
+def rules(**kw):
+    old = dict(_RULES)
+    _RULES.update(kw)
+    try:
+        yield
+    finally:
+        _RULES.clear()
+        _RULES.update(old)
+
+
+def constrain(x, key: str):
+    s = _RULES.get(key)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)

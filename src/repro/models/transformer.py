@@ -1,0 +1,286 @@
+"""Decoder-only transformer LM (dense GQA or MoE), scan-over-layers.
+
+Covers llama3/llama4-scout/qwen1.5/qwen2.5/qwen3/qwen3-moe and the LM
+backbone of internvl2.  All layer params carry a leading L dimension and the
+stack is a single `lax.scan`, keeping HLO size and compile time O(1) in depth
+(essential for the 512-device dry-run matrix).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import shardctx
+from .config import ModelConfig
+from .layers import (attn_param_shapes, attention_block, attention_decode,
+                     dt, init_from_shapes, mlp_block, mlp_param_shapes,
+                     rms_norm)
+from .moe import moe_block, moe_param_shapes
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+def layer_param_shapes(cfg: ModelConfig) -> dict:
+    shapes = {"ln1": (cfg.d_model,), "ln2": (cfg.d_model,)}
+    shapes |= {f"attn.{k}": v for k, v in attn_param_shapes(cfg).items()}
+    if cfg.is_moe:
+        shapes |= {f"moe.{k}": v for k, v in moe_param_shapes(cfg).items()}
+    else:
+        shapes |= {f"mlp.{k}": v for k, v in mlp_param_shapes(cfg).items()}
+    return shapes
+
+
+def _nest(flat: dict) -> dict:
+    out: dict = {}
+    for k, v in flat.items():
+        parts = k.split(".")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kd = dt(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    flat = init_from_shapes(k_layers, layer_param_shapes(cfg), kd,
+                            stacked=cfg.num_layers)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_padded, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(kd),
+        "layers": _nest(flat),
+        "final_norm": jnp.ones((cfg.d_model,), kd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_padded), jnp.float32
+        ) * 0.02).astype(kd)
+    return params
+
+
+def mask_pad_logits(cfg: ModelConfig, logits):
+    """Push padded vocab columns to -inf (fused iota-compare-select)."""
+    if cfg.vocab_padded == cfg.vocab_size:
+        return logits
+    idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                   logits.ndim - 1)
+    return jnp.where(idx < cfg.vocab_size, logits, -1e30)
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def layer_fn(cfg: ModelConfig, pl: dict, x, positions):
+    h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    x = x + attention_block(cfg, pl["attn"], h, positions)
+    h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        x = x + moe_block(cfg, pl["moe"], h)
+    else:
+        x = x + mlp_block(pl["mlp"], h)
+    # Sequence-parallel residual (Korthikanti et al.): between blocks the
+    # activations shard over the model axis, so remat's per-layer saves
+    # (L, B, S, D) shrink by the TP degree.  No-op without launcher rules.
+    return shardctx.constrain(x, "residual")
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def stack_forward(cfg: ModelConfig, layers: dict, x, positions):
+    body = _remat(cfg, functools.partial(layer_fn, cfg))
+
+    def scan_fn(carry, pl):
+        return body(pl, carry, positions), None
+
+    x, _ = lax.scan(scan_fn, x, layers)
+    return x
+
+
+def hidden_states(cfg: ModelConfig, params: dict, tokens,
+                  extra_embeds=None):
+    """tokens: (B, S) int32; extra_embeds: optional (B, P, D) prepended
+    (internvl patch embeddings)."""
+    cd = dt(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cd), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = stack_forward(cfg, params["layers"], x, positions)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_fn(cfg: ModelConfig, params: dict, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    # Keep logits vocab-sharded through the loss: the backward dlogits tensor
+    # (B,S,V in f32) otherwise replicates and dominates per-device memory.
+    return shardctx.constrain(mask_pad_logits(cfg, logits), "logits")
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, extra_embeds=None):
+    return logits_fn(cfg, params,
+                     hidden_states(cfg, params, tokens, extra_embeds))
+
+
+def xent_loss(logits, labels, mask=None):
+    """Softmax cross-entropy that stays correct (and cheap) when the vocab
+    dim is sharded: the label gather is a one-hot contraction (partial sums
+    + all-reduce) instead of take_along_axis (which would all-gather)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+#: sequence-chunk length for the streamed LM head + loss
+LOSS_CHUNK = 512
+
+
+def lm_xent_from_hidden(cfg: ModelConfig, x, head, labels, mask=None):
+    """Streamed LM head + cross-entropy: logits are materialized one
+    sequence chunk at a time, checkpointed so backward recomputes each
+    chunk's logits instead of keeping B x S x V alive.  This is the
+    standard big-vocab trick; it removed ~7 GiB/device of logits copies in
+    the dry-run."""
+    b, s, d = x.shape
+    c = min(LOSS_CHUNK, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask, ((0, 0), (0, pad)))
+    xc = jnp.moveaxis(xp.reshape(b, nc, c, d), 1, 0)        # (nc,B,c,D)
+    lc = jnp.moveaxis(lp.reshape(b, nc, c), 1, 0)
+    mc = jnp.moveaxis(mp.reshape(b, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        tot, cnt = carry
+        xi, li, mi = inp
+        logits = jnp.einsum("bcd,dv->bcv", xi, head.astype(xi.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = shardctx.constrain(mask_pad_logits(cfg, logits), "logits")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(li, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        nll = (lse - gold) * mi
+        return (tot + nll.sum(), cnt + mi.sum()), None
+
+    (tot, cnt), _ = lax.scan(chunk, (jnp.zeros((), jnp.float32),
+                                     jnp.zeros((), jnp.float32)),
+                             (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(cfg: ModelConfig, params: dict, x_hidden, tokens):
+    """Next-token loss from final hidden states (B,S,D) and the target token
+    ids (B,S): position t predicts token t+1."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    b, s, _ = x_hidden.shape
+    labels_next = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)],
+        axis=1)
+    return lm_xent_from_hidden(cfg, x_hidden, head, labels_next, mask)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    x = hidden_states(cfg, params, batch["tokens"], batch.get("patches"))
+    if "patches" in batch:   # labels align with the text positions only
+        x = x[:, batch["patches"].shape[1]:, :]
+    return lm_loss(cfg, params, x, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# KV-cache serving
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    kd = dt(cfg.kv_dtype or cfg.compute_dtype)
+    shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.hd)
+    return {"k": jnp.zeros(shape, kd), "v": jnp.zeros(shape, kd)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token, pos):
+    """token: (B,) int32; pos: () int32 current position.  One new token
+    against the cache; returns (logits (B, V), new_cache)."""
+    cd = dt(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[token][:, None, :]     # (B, 1, D)
+
+    def scan_fn(x, inputs):
+        pl, ck, cv = inputs
+        h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+        a, ck, cv = attention_decode(cfg, pl["attn"], h, ck, cv, pos)
+        x = x + a
+        h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            x = x + moe_block(cfg, pl["moe"], h)
+        else:
+            x = x + mlp_block(pl["mlp"], h)
+        return x, (ck, cv)
+
+    x, (ck, cv) = lax.scan(scan_fn, x,
+                           (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x)[:, 0, :]
+    return logits, {"k": ck, "v": cv}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, max_len: int):
+    """Run the prompt, returning (last-position logits, filled cache).
+
+    The cache is built by re-projecting K/V per layer inside the scan; the
+    KV-append is the sparse-update pattern the serving runtime guards with
+    the paper's sparse-undo-log discipline (repro.serving).
+    """
+    from .layers import attn_qkv
+
+    cd = dt(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = params["embed"].astype(cd)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def scan_fn(x, pl):
+        h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+        q, k, v = attn_qkv(cfg, pl["attn"], h, positions)
+        from .layers import blockwise_attention
+        o = blockwise_attention(q, k, v, causal=True,
+                                q_chunk=min(cfg.q_chunk, s),
+                                k_chunk=min(cfg.k_chunk, s))
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        x = x + o @ pl["attn"]["wo"]
+        h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            x = x + moe_block(cfg, pl["moe"], h)
+        else:
+            x = x + mlp_block(pl["mlp"], h)
+        pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0)]
+        return x, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+    x, (ck, cv) = lax.scan(scan_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x[:, -1:, :])[:, 0, :]
+    return logits, {"k": ck, "v": cv}

@@ -1,0 +1,202 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* attention+MLP
+block applied every ``attn_every`` mamba blocks.
+
+The shared block's weights are reused at every application (Zamba2's core
+memory trick); each application keeps its own KV cache.  We omit Zamba2's
+per-invocation LoRA deltas and embedding-concat input (noted in DESIGN.md) --
+the systems-relevant structure (hybrid scan, shared weights, per-application
+caches) is preserved.
+
+Layer layout for L layers and attn_every=a: ``n_super = L // a`` super-blocks
+of (a mamba blocks + 1 shared-attention application), then ``L % a`` trailing
+mamba blocks.  Both groups are lax.scans, keeping compile O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import mamba2, shardctx
+from .config import ModelConfig
+from .layers import (attn_param_shapes, attention_block, attention_decode,
+                     dt, init_from_shapes, mlp_block, mlp_param_shapes,
+                     rms_norm)
+from .transformer import _nest, _remat, xent_loss
+
+
+def _splits(cfg: ModelConfig):
+    a = cfg.attn_every
+    n_super = cfg.num_layers // a
+    trailing = cfg.num_layers - n_super * a
+    return a, n_super, trailing
+
+
+def shared_param_shapes(cfg: ModelConfig) -> dict:
+    shapes = {"ln1": (cfg.d_model,), "ln2": (cfg.d_model,)}
+    shapes |= {f"attn.{k}": v for k, v in attn_param_shapes(cfg).items()}
+    shapes |= {f"mlp.{k}": v for k, v in mlp_param_shapes(cfg).items()}
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kd = dt(cfg.param_dtype)
+    a, n_super, trailing = _splits(cfg)
+    k_m, k_s, k_e, k_h = jax.random.split(key, 4)
+    mflat = init_from_shapes(k_m, mamba2.layer_param_shapes(cfg), kd,
+                             stacked=cfg.num_layers)
+    # Mamba-specific inits (match mamba2.init_params).
+    h = cfg.ssm_heads
+    L = cfg.num_layers
+    mflat["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+                             )[None].repeat(L, 0).astype(kd)
+    mflat["Dskip"] = jnp.ones((L, h), kd)
+    mflat["dt_bias"] = jnp.full((L, h), -4.0, kd)
+    mflat["gnorm"] = jnp.ones((L, cfg.d_inner), kd)
+    mamba_all = _nest(mflat)
+
+    def split_stack(t):
+        main = t[:n_super * a].reshape(n_super, a, *t.shape[1:])
+        tail = t[n_super * a:]
+        return main, tail
+
+    main_tree = jax.tree.map(lambda t: split_stack(t)[0], mamba_all)
+    tail_tree = jax.tree.map(lambda t: split_stack(t)[1], mamba_all)
+
+    params = {
+        "embed": (jax.random.normal(k_e, (cfg.vocab_padded, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(kd),
+        "mamba_main": main_tree,       # (n_super, a, ...)
+        "mamba_tail": tail_tree,       # (trailing, ...)
+        "shared": _nest(init_from_shapes(k_s, shared_param_shapes(cfg), kd)),
+        "final_norm": jnp.ones((cfg.d_model,), kd),
+        "lm_head": (jax.random.normal(
+            k_h, (cfg.d_model, cfg.vocab_padded), jnp.float32
+        ) * 0.02).astype(kd),
+    }
+    return params
+
+
+def _shared_block(cfg: ModelConfig, ps: dict, x, positions):
+    h = rms_norm(x, ps["ln1"], cfg.norm_eps)
+    x = x + attention_block(cfg, ps["attn"], h, positions)
+    h = rms_norm(x, ps["ln2"], cfg.norm_eps)
+    return shardctx.constrain(x + mlp_block(ps["mlp"], h), "residual")
+
+
+def forward(cfg: ModelConfig, params: dict, tokens):
+    cd = dt(cfg.compute_dtype)
+    a, n_super, trailing = _splits(cfg)
+    x = params["embed"].astype(cd)[tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    mamba_body = _remat(cfg, functools.partial(mamba2.layer_fn, cfg))
+    shared_body = _remat(cfg, functools.partial(_shared_block, cfg))
+
+    def super_fn(x, pl_group):
+        x, _ = lax.scan(lambda c, pl: (mamba_body(pl, c), None), x, pl_group)
+        return shared_body(params["shared"], x, positions), None
+
+    x, _ = lax.scan(super_fn, x, params["mamba_main"])
+    x, _ = lax.scan(lambda c, pl: (mamba_body(pl, c), None), x,
+                    params["mamba_tail"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    from .transformer import mask_pad_logits
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return shardctx.constrain(mask_pad_logits(cfg, logits), "logits")
+
+
+def hidden_fn(cfg: ModelConfig, params: dict, tokens):
+    cd = dt(cfg.compute_dtype)
+    a, n_super, trailing = _splits(cfg)
+    x = params["embed"].astype(cd)[tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    mamba_body = _remat(cfg, functools.partial(mamba2.layer_fn, cfg))
+    shared_body = _remat(cfg, functools.partial(_shared_block, cfg))
+
+    def super_fn(x, pl_group):
+        x, _ = lax.scan(lambda c, pl: (mamba_body(pl, c), None), x, pl_group)
+        return shared_body(params["shared"], x, positions), None
+
+    x, _ = lax.scan(super_fn, x, params["mamba_main"])
+    x, _ = lax.scan(lambda c, pl: (mamba_body(pl, c), None), x,
+                    params["mamba_tail"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    from .transformer import lm_loss
+    x = hidden_fn(cfg, params, batch["tokens"])
+    return lm_loss(cfg, params, x, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    kd = dt(cfg.compute_dtype)
+    a, n_super, trailing = _splits(cfg)
+    d_in, h, n, conv_dim = mamba2._dims(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.num_layers, batch, h, n, cfg.ssm_headdim),
+                         jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.conv_kernel - 1,
+                           conv_dim), kd),
+        # one KV cache per shared-attention application
+        "k": jnp.zeros((n_super, batch, cfg.num_kv_heads, max_len, cfg.hd),
+                       kd),
+        "v": jnp.zeros((n_super, batch, cfg.num_kv_heads, max_len, cfg.hd),
+                       kd),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token, pos):
+    cd = dt(cfg.compute_dtype)
+    a, n_super, trailing = _splits(cfg)
+    x = params["embed"].astype(cd)[token]                  # (B, D)
+
+    def mamba_step(x, inputs):
+        pl, ssm, conv = inputs
+        h = rms_norm(x, pl["ln"], cfg.norm_eps)
+        y, ssm, conv = mamba2.mamba_decode_mix(cfg, pl, h, ssm, conv)
+        return x + y, (ssm, conv)
+
+    def shared_step(x, ck, cv):
+        ps = params["shared"]
+        h = rms_norm(x, ps["ln1"], cfg.norm_eps)[:, None, :]
+        y, ck, cv = attention_decode(cfg, ps["attn"], h, ck, cv, pos)
+        x = x + y[:, 0, :]
+        h = rms_norm(x, ps["ln2"], cfg.norm_eps)
+        return x + mlp_block(ps["mlp"], h), ck, cv
+
+    def super_fn(x, inputs):
+        pl_group, ssm, conv, ck, cv = inputs
+        x, (ssm, conv) = lax.scan(mamba_step, x, (pl_group, ssm, conv))
+        x, ck, cv = shared_step(x, ck, cv)
+        return x, (ssm, conv, ck, cv)
+
+    main = n_super * a
+    ssm_main = cache["ssm"][:main].reshape(n_super, a,
+                                           *cache["ssm"].shape[1:])
+    conv_main = cache["conv"][:main].reshape(n_super, a,
+                                             *cache["conv"].shape[1:])
+    x, (ssm_m, conv_m, ck, cv) = lax.scan(
+        super_fn, x,
+        (params["mamba_main"], ssm_main, conv_main, cache["k"], cache["v"]))
+    x, (ssm_t, conv_t) = lax.scan(
+        mamba_step, x,
+        (params["mamba_tail"], cache["ssm"][main:], cache["conv"][main:]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    from .transformer import mask_pad_logits
+    logits = mask_pad_logits(cfg, (x @ params["lm_head"].astype(x.dtype)
+                                   ).astype(jnp.float32))
+    new_cache = {
+        "ssm": jnp.concatenate(
+            [ssm_m.reshape(main, *cache["ssm"].shape[1:]), ssm_t], axis=0),
+        "conv": jnp.concatenate(
+            [conv_m.reshape(main, *cache["conv"].shape[1:]), conv_t], axis=0),
+        "k": ck, "v": cv,
+    }
+    return logits, new_cache

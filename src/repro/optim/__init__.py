@@ -1,0 +1,18 @@
+"""Optimizers from scratch (no optax): AdamW, SGD-momentum, schedules,
+global-norm clipping, and int8 gradient compression with error feedback.
+
+Optimizer states mirror the parameter pytree, so the same sharding rules
+apply (ZeRO-1 style: each TP shard owns its slice of m/v; nothing is
+replicated that the params don't replicate).
+"""
+
+from .adamw import (OptState, Optimizer, adamw, clip_by_global_norm,
+                    cosine_schedule, sgd_momentum)
+from .compress_grads import (compress_int8, decompress_int8,
+                             ErrorFeedbackState, compressed_allreduce_ref)
+
+__all__ = [
+    "ErrorFeedbackState", "OptState", "Optimizer", "adamw",
+    "clip_by_global_norm", "compress_int8", "compressed_allreduce_ref",
+    "cosine_schedule", "decompress_int8", "sgd_momentum",
+]

@@ -1,0 +1,115 @@
+"""AdamW / SGD with decoupled weight decay, pure pytree implementation."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict        # empty dict for sgd
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable     # (grads, state, params) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01,
+          max_grad_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(zeros, params),
+                        jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        lr_t = lr_fn(stepf)
+        c1 = 1.0 - b1 ** stepf
+        c2 = 1.0 - b2 ** stepf
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / c1
+            vh = v / c2
+            step_p = mh / (jnp.sqrt(vh) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_p).astype(p.dtype), \
+                m, v
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step, new_m, new_v)
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr=1e-2, momentum=0.9, weight_decay=0.0,
+                 max_grad_norm: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape,
+                                                         jnp.float32),
+                                     params), {})
+
+    def update(grads, state, params):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr_t = lr_fn(step.astype(jnp.float32))
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, params, grads, state.m)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step, new_m, {})
+
+    return Optimizer(init, update)

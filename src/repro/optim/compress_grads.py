@@ -1,0 +1,85 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantized gradients cut cross-pod all-reduce bytes 4x (bf16->int8
+plus one f32 scale per block); the residual quantization error is carried in
+an error-feedback accumulator so the optimizer sees an unbiased-in-the-limit
+gradient stream (EF-SGD / 1-bit-Adam style).
+
+The collective itself is issued by XLA from the sharded train step; this
+module provides the quantize/dequantize pair (used inside the step under a
+config flag) and a reference ring all-reduce for unit tests.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: dict     # same pytree as grads, f32
+
+
+BLOCK = 256
+
+
+def _pad_to(x, mult):
+    n = x.size
+    pad = (-n) % mult
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def compress_int8(g):
+    """g: any-shape float array -> (int8 values, f32 per-block scales)."""
+    flat, n = _pad_to(g.astype(jnp.float32), BLOCK)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def decompress_int8(q, scale, n, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compress_tree(grads, ef: ErrorFeedbackState | None):
+    """Quantize a grad pytree, folding in and updating error feedback."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        q, s, n = compress_int8(gf)
+        deq = decompress_int8(q, s, n, g.shape)
+        return (q, s, n), gf - deq
+
+    if ef is None:
+        pairs = jax.tree.map(lambda g: one(g, None), grads)
+    else:
+        pairs = jax.tree.map(one, grads, ef.residual)
+    packed = jax.tree.map(lambda t: t[0], pairs,
+                          is_leaf=lambda t: isinstance(t, tuple)
+                          and len(t) == 2 and isinstance(t[0], tuple))
+    resid = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple)
+                         and len(t) == 2 and isinstance(t[0], tuple))
+    return packed, ErrorFeedbackState(resid)
+
+
+def decompress_tree(packed, shapes):
+    return jax.tree.map(
+        lambda qsn, sh: decompress_int8(*qsn, sh), packed, shapes,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+
+
+def compressed_allreduce_ref(grads_per_worker: list):
+    """Reference semantics for tests: quantize each worker's grad, sum the
+    dequantized streams (what the wire carries), average."""
+    n = len(grads_per_worker)
+    total = None
+    for g in grads_per_worker:
+        q, s, sz = compress_int8(g)
+        d = decompress_int8(q, s, sz, g.shape)
+        total = d if total is None else total + d
+    return total / n

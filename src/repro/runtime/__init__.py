@@ -1,0 +1,10 @@
+"""Cluster runtime models: failure traces, straggler mitigation, elastic
+rescale -- the large-scale-runnability substrate."""
+
+from .elastic import ElasticEvent, MeshChoice, choose_mesh, simulate_elastic
+from .failures import FleetSpec, JobSpec, RunStats, simulate
+from .straggler import StragglerSpec, efficiency, host_times, step_times
+
+__all__ = ["ElasticEvent", "FleetSpec", "JobSpec", "MeshChoice", "RunStats",
+           "StragglerSpec", "choose_mesh", "efficiency", "host_times",
+           "simulate", "simulate_elastic", "step_times"]

@@ -1,0 +1,6 @@
+"""Preemption-safe serving: cursor-committed decode + undo-logged KV pages."""
+
+from .engine import Request, ServeEngine
+from .kvstore import PagedKVStore
+
+__all__ = ["PagedKVStore", "Request", "ServeEngine"]

@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: reduced configs of the same family run one
+forward/train step (and one decode step) on CPU; shapes checked, no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) -- see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, all_configs, get_config
+from repro.models import ModelConfig, get_model
+from repro.models.config import SHAPES
+
+
+def make_batch(cfg: ModelConfig, rng, b=2, s=16):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, s)),
+                       jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_config(arch).scaled_down()
+    api = get_model(cfg)
+    rng = np.random.default_rng(0)
+    params = api.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, rng)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss_fn(cfg, p, batch))(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    flat = jax.tree.leaves(grads)
+    assert all(jnp.isfinite(g).all() for g in flat), f"{arch}: NaN grads"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).scaled_down()
+    api = get_model(cfg)
+    rng = np.random.default_rng(1)
+    params = api.init_params(cfg, jax.random.key(1))
+    b, max_len = 2, 16
+    cache = api.init_cache(cfg, b, max_len)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b,)), jnp.int32)
+    if cfg.family == "encdec":
+        from repro.models import whisper
+        frames = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+        cache = whisper.prefill_cross(cfg, params, cache, frames)
+    logits, cache2 = api.decode_step(cfg, params, cache, tok, 0)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{arch}: NaN decode logits"
+    # cache must actually advance (some leaf changed)
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b_))
+        for a, b_ in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)))
+    assert changed, f"{arch}: decode did not update its cache"
+
+
+def test_full_configs_match_assignment():
+    """The registry must carry the exact assigned hyperparameters."""
+    cfgs = all_configs()
+    expect = {
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 202_048),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 151_936),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 151_936),
+        "qwen2.5-14b": (48, 5120, 40, 8, 152_064),
+        "qwen3-0.6b": (28, 1024, 16, 8, 151_936),
+        "llama3-8b": (32, 4096, 32, 8, 128_256),
+        "internvl2-26b": (48, 6144, 48, 8, 92_553),
+        "whisper-small": (12, 768, 12, 12, 51_865),
+        "zamba2-7b": (81, 3584, 32, 32, 32_000),
+    }
+    for name, (L, d, h, kv, v) in expect.items():
+        c = cfgs[name]
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.vocab_size) == (L, d, h, kv, v), name
+    m = cfgs["mamba2-370m"]
+    assert (m.num_layers, m.d_model, m.vocab_size, m.ssm_state) == \
+        (48, 1024, 50_280, 128)
+    assert cfgs["qwen3-moe-30b-a3b"].num_experts == 128
+    assert cfgs["qwen3-moe-30b-a3b"].experts_per_tok == 8
+    assert cfgs["llama4-scout-17b-a16e"].num_experts == 16
+    assert cfgs["llama4-scout-17b-a16e"].experts_per_tok == 1
+    assert cfgs["llama4-scout-17b-a16e"].shared_expert
+
+
+def test_shape_cells_match_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32_768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32_768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert SHAPES["long_500k"].global_batch == 1

@@ -1,0 +1,77 @@
+"""Crash-safe checkpoint store: A/B slots, cursors, sparse deltas."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Cursor, SlotStore, SparseDeltaFile
+
+
+def test_slot_store_roundtrip(tmp_path):
+    store = SlotStore(tmp_path / "ck")
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.ones(4, np.int32)}}
+    store.save(tree, meta={"step": 7})
+    got, meta = store.restore(like=tree)
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(got["b"]["c"], tree["b"]["c"])
+
+
+def test_slot_store_alternates_and_survives_torn_back_slot(tmp_path):
+    store = SlotStore(tmp_path / "ck")
+    t1 = {"w": np.full(8, 1.0, np.float32)}
+    t2 = {"w": np.full(8, 2.0, np.float32)}
+    s1 = store.save(t1, meta={"step": 1})
+    s2 = store.save(t2, meta={"step": 2})
+    assert s1 != s2, "slots must alternate (A/B buffering)"
+    # Corrupt the *back* slot (a torn write of checkpoint 3): the committed
+    # front must be unaffected -- the loop-ordered-buffering guarantee.
+    back = store.back_slot()
+    (store.root / back / "leaf00000.npy").write_bytes(b"GARBAGE")
+    got, meta = store.restore(like=t2)
+    assert meta["step"] == 2
+    np.testing.assert_array_equal(got["w"], t2["w"])
+
+
+def test_cursor_atomic_commit(tmp_path):
+    c = Cursor(tmp_path / "cur.json")
+    assert c.read() == {}
+    c.commit(step=3)
+    c.commit(data_pos=11)
+    assert c.read() == {"step": 3, "data_pos": 11}
+
+
+def test_sparse_delta_update_and_recovery(tmp_path):
+    f = SparseDeltaFile(tmp_path / "emb.npy", shape=(10, 4))
+    f.update_rows(np.asarray([2, 5]), np.ones((2, 4), np.float32))
+    assert f.completed == 1
+    arr = f.read()
+    np.testing.assert_array_equal(arr[2], np.ones(4))
+    np.testing.assert_array_equal(arr[0], np.zeros(4))
+
+    # Simulate a torn update: manually apply phase 1 + the in-place write,
+    # but leave the write cursor un-bumped -- recover() must roll back.
+    orig = arr.copy()
+    rows = np.asarray([1])
+    np.savez(open(f.undo_path, "wb"), rows=rows, values=orig[rows])
+    cur = json.loads(f.cursor_path.read_text())
+    f._set_cursors(cur["read"] + 1, cur["write"])
+    mm = np.load(f.path, mmap_mode="r+")
+    mm[1] = 99.0
+    mm.flush()
+    f.recover()
+    np.testing.assert_array_equal(f.read(), orig)
+    # and the interrupted update can be redone exactly once
+    f.update_rows(rows, np.full((1, 4), 7.0, np.float32))
+    assert f.read()[1, 0] == 7.0
+
+
+def test_sparse_delta_work_scales_with_modifications(tmp_path):
+    """Constant-space undo state regardless of array size (the paper's
+    sparse-undo-logging property)."""
+    f = SparseDeltaFile(tmp_path / "big.npy", shape=(4096, 64))
+    f.update_rows(np.asarray([7]), np.ones((1, 64), np.float32))
+    undo = np.load(f.undo_path)
+    assert undo["values"].shape == (1, 64)   # one row, not the whole array

@@ -1,0 +1,109 @@
+"""GENESIS compression: decompositions, pruning, sweep + IMpJ selection."""
+
+import numpy as np
+import pytest
+
+from repro.compress import (DEVICE_WEIGHT_BYTES, LayerChoice, apply_config,
+                            hooi, pareto_frontier, prune_by_sparsity, select,
+                            separate_conv_spatial, sparsity_of, svd_factor,
+                            sweep, tucker_reconstruct, tucker2_conv)
+from repro.core import WILDLIFE
+from repro.core.inference import Conv2D, DenseFC, MaxPool2D, SimNet
+from repro.data import make_task
+from repro.models.dnn import har_net, mnist_net, okg_net
+
+
+def test_prune_sparsity_and_values():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    p = prune_by_sparsity(w, 0.9)
+    assert abs(sparsity_of(p) - 0.9) < 0.02
+    kept = p != 0
+    assert np.abs(p[kept]).min() >= np.abs(w[~kept]).max() - 1e-6
+
+
+def test_hooi_reconstruction_improves_with_rank():
+    rng = np.random.default_rng(1)
+    t = rng.normal(size=(8, 6, 5, 5)).astype(np.float32)
+    errs = []
+    for r in [(2, 2, 3, 3), (4, 4, 5, 5), (8, 6, 5, 5)]:
+        core, factors = hooi(t, list(r))
+        rec = tucker_reconstruct(core, factors)
+        errs.append(np.linalg.norm(rec - t) / np.linalg.norm(t))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-5          # exact at full rank
+
+
+def test_spatial_separation_exact_at_full_rank():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(4, 3, 5, 5)).astype(np.float32)
+    v, h = separate_conv_spatial(w, rank=min(3 * 5, 4 * 5))
+    comp = np.einsum("jcy,kjx->kcyx", v[..., 0], h[:, :, 0, :])
+    np.testing.assert_allclose(comp, w, rtol=1e-4, atol=1e-5)
+
+
+def test_separated_conv_network_forward_equivalence():
+    """Full-rank separated convs give the same network output."""
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(4, 1, 3, 3)).astype(np.float32)
+    b = rng.normal(size=4).astype(np.float32)
+    net = SimNet([Conv2D(w, b)], (1, 8, 8))
+    sep = apply_config(net, (LayerChoice("separate", min(1 * 3, 4 * 3)),))
+    x = rng.normal(size=(1, 8, 8)).astype(np.float32)
+    np.testing.assert_allclose(sep.ref_forward(x), net.ref_forward(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_svd_config_forward_equivalence():
+    rng = np.random.default_rng(4)
+    w = rng.normal(size=(6, 10)).astype(np.float32)
+    b = rng.normal(size=6).astype(np.float32)
+    net = SimNet([DenseFC(w, b, relu=False)], (10,))
+    cfg = apply_config(net, (LayerChoice("svd", 6),))
+    x = rng.normal(size=(10,)).astype(np.float32)
+    np.testing.assert_allclose(cfg.ref_forward(x), net.ref_forward(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_tucker2_shapes():
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=(16, 8, 5, 5)).astype(np.float32)
+    pw_in, core, pw_out = tucker2_conv(w, 6, 4)
+    assert pw_in.shape == (4, 8, 1, 1)
+    assert core.shape == (6, 4, 5, 5)
+    assert pw_out.shape == (16, 6, 1, 1)
+
+
+@pytest.mark.parametrize("maker", [mnist_net, har_net, okg_net])
+def test_paper_nets_infeasible_uncompressed(maker):
+    """Table 2 / Fig. 4: every original network exceeds device memory."""
+    net = maker()
+    assert net.params_bytes() > DEVICE_WEIGHT_BYTES, net.name
+
+
+def test_sweep_and_selection_small():
+    """End-to-end GENESIS on a reduced net: the selected config must fit,
+    and compression must actually shrink the network."""
+    rng = np.random.default_rng(6)
+    net = SimNet([
+        Conv2D(rng.normal(size=(6, 1, 5, 5)).astype(np.float32) * 0.3,
+               np.zeros(6, np.float32)),
+        MaxPool2D(2),
+        DenseFC(rng.normal(size=(600, 864)).astype(np.float32) * 0.05,
+                np.zeros(600, np.float32)),
+        DenseFC(rng.normal(size=(10, 600)).astype(np.float32) * 0.1,
+                np.zeros(10, np.float32), relu=False),
+    ], (1, 28, 28), "mini")
+    data = make_task("mnist", n_train=384, n_test=192, noise=0.8)
+    results = sweep(net, data, WILDLIFE, epochs=1, max_configs=6)
+    assert len(results) == 6
+    front = pareto_frontier(results)
+    assert front, "empty Pareto frontier"
+    # monotone: frontier sorted by energy has non-decreasing accuracy
+    accs = [r.accuracy for r in front]
+    assert accs == sorted(accs)
+    feasible = [r for r in results if r.feasible]
+    if feasible:
+        best = select(results)
+        assert best.impj == max(r.impj for r in feasible)
+        assert best.params_bytes <= DEVICE_WEIGHT_BYTES

@@ -1,0 +1,50 @@
+"""IMpJ application model (Sec. 3, Eqs. 1-4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import WILDLIFE, accuracy_sweep
+from repro.core.imp import AppModel
+
+
+def test_ordering_at_high_accuracy():
+    m = WILDLIFE
+    assert m.baseline() < m.inference(0.99, 0.99) < m.oracle() < m.ideal()
+
+
+def test_ideal_gain_approaches_one_over_p():
+    # communication dominates => ideal/baseline -> (E_comm)/(p E_comm) = 1/p
+    m = AppModel(p=0.05, e_sense=1e-6, e_comm=10.0, e_infer=0.0)
+    assert m.ideal() / m.baseline() == pytest.approx(1 / 0.05, rel=1e-3)
+
+
+def test_wildlife_case_study_magnitudes():
+    """Sec. 3.2: local inference gives on the order of 1/p = 20x; sending
+    results only (Fig. 2) unlocks far more (paper: ~480x over baseline)."""
+    m = WILDLIFE
+    gain_full = m.inference(0.99, 0.99) / m.baseline()
+    assert 10 < gain_full < 25
+    m2 = m.with_result_only_comm(98.0)
+    gain_results = m2.inference(0.99, 0.99) / m.baseline()
+    assert 300 < gain_results < 700
+    # and the oracle-vs-ideal gap opens to ~2.2x (Sec. 3.2)
+    gap = m2.ideal() / m2.oracle()
+    assert 1.5 < gap < 3.0
+
+
+def test_accuracy_collapse():
+    """Fig. 1: benefits deteriorate quickly as accuracy declines."""
+    sweep = accuracy_sweep(WILDLIFE, np.linspace(0.6, 1.0, 5))
+    inf = sweep["inference"]
+    assert inf[-1] > 3 * inf[0]          # 100% acc >> 60% acc
+    assert all(b == sweep["baseline"][0] for b in sweep["baseline"])
+
+
+def test_false_negative_threshold():
+    """Sec. 3.2: with p=0.05, ~95% true-negative rate is needed for the
+    signal not to drown in false positives (sent-uninteresting <= real)."""
+    p = 0.05
+    tn = 0.95
+    false_pos_rate = (1 - p) * (1 - tn)
+    true_pos_rate = p * 1.0
+    assert false_pos_rate <= true_pos_rate * 1.0 + 1e-9

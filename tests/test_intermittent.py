@@ -1,0 +1,98 @@
+"""End-to-end behaviour of the six inference implementations (Fig. 9)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC,
+                        STRATEGIES, evaluate)
+
+
+@pytest.fixture(scope="module")
+def tiny_net():
+    rng = np.random.default_rng(0)
+    w1 = rng.normal(size=(4, 1, 3, 3)).astype(np.float32)
+    wfc = (rng.normal(size=(10, 100)) * 0.1).astype(np.float32)
+    wsp = (rng.normal(size=(6, 10)) * (rng.random((6, 10)) < 0.3)
+           ).astype(np.float32)
+    net = SimNet([
+        Conv2D(w1, rng.normal(size=4).astype(np.float32)),
+        MaxPool2D(2),
+        DenseFC(wfc, rng.normal(size=10).astype(np.float32)),
+        SparseFC(wsp, rng.normal(size=6).astype(np.float32), relu=False),
+    ], input_shape=(1, 12, 12), name="tiny")
+    x = rng.normal(size=(1, 12, 12)).astype(np.float32)
+    return net, x
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_all_strategies_match_reference(tiny_net, strategy):
+    net, x = tiny_net
+    ref = net.ref_forward(x)
+    r = evaluate(net, x, strategy, "continuous")
+    assert r.completed
+    np.testing.assert_allclose(r.output, ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("power", ["100uF", "1mF"])
+def test_intermittent_equals_continuous(tiny_net, strategy, power):
+    """evaluate() internally asserts bit-identical output; DNF is allowed
+    only for implementations the paper also shows failing."""
+    net, x = tiny_net
+    r = evaluate(net, x, strategy, power)
+    if not r.completed:
+        assert strategy in ("naive", "tile-128"), \
+            f"{strategy} must terminate on {power}: {r.dnf_reason}"
+    else:
+        ref = net.ref_forward(x)
+        np.testing.assert_allclose(r.output, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_sonic_and_tails_always_terminate(tiny_net):
+    net, x = tiny_net
+    for power in ("100uF", "1mF", "50mF"):
+        for strategy in ("sonic", "tails"):
+            r = evaluate(net, x, strategy, power)
+            assert r.completed, f"{strategy}@{power}: {r.dnf_reason}"
+
+
+def test_sonic_beats_tiled_alpaca(tiny_net):
+    """Headline claim: SONIC uses far less energy than tiled Alpaca, and its
+    overhead over naive is small (paper: 1.45x vs gmean 13.4x for Tile-8)."""
+    net, x = tiny_net
+    naive = evaluate(net, x, "naive", "continuous").energy_j
+    sonic = evaluate(net, x, "sonic", "continuous").energy_j
+    tails = evaluate(net, x, "tails", "continuous").energy_j
+    tile8 = evaluate(net, x, "tile-8", "continuous").energy_j
+    assert sonic < tile8 / 4, "SONIC must dominate Tile-8"
+    assert sonic / naive < 2.5, "SONIC overhead over naive must be small"
+    assert tails < naive, "TAILS (LEA+DMA) should beat naive (paper: 1.2x)"
+
+
+def test_naive_dnf_on_small_capacitor():
+    """A network too large for one charge cycle must be detected as
+    non-terminating for naive (Fig. 9b) rather than looping forever."""
+    rng = np.random.default_rng(1)
+    big = SimNet([
+        Conv2D(rng.normal(size=(8, 1, 5, 5)).astype(np.float32),
+               np.zeros(8, np.float32)),
+        DenseFC((rng.normal(size=(16, 8 * 24 * 24)) * 0.02
+                 ).astype(np.float32), np.zeros(16, np.float32)),
+    ], input_shape=(1, 28, 28), name="big")
+    x = rng.normal(size=(1, 28, 28)).astype(np.float32)
+    r = evaluate(big, x, "naive", "100uF")
+    assert not r.completed and "exceeds" in r.dnf_reason
+    # SONIC still completes on the same net + power system.
+    r2 = evaluate(big, x, "sonic", "100uF")
+    assert r2.completed and r2.reboots > 0
+
+
+def test_energy_breakdown_shape(tiny_net):
+    """Fig. 12: SONIC's energy is dominated by memory + control + mac, with
+    a visible share of FRAM writes for loop indices."""
+    net, x = tiny_net
+    r = evaluate(net, x, "sonic", "continuous")
+    frac = {k: v / sum(r.by_class.values()) for k, v in r.by_class.items()}
+    assert frac["mac"] > 0.2
+    assert frac["fram_write"] > 0.10   # includes per-iteration cursors
+    assert frac["fram_read"] > 0.05

@@ -1,0 +1,218 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+
+Each kernel targets TPU (pl.pallas_call + BlockSpec VMEM tiling); on CPU the
+interpreter executes the same kernel body, so numerical equivalence against
+ref.py holds end to end.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (BlockSparseFC, MatmulTiles, dense_matmul,
+                           fir_conv1d, fir_tiles, matmul_tiles)
+from repro.kernels.ref import (block_sparse_matvec_ref, fir_conv1d_ref,
+                               matmul_ref)
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# dense matmul
+# --------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 200),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_dense_matmul_matches_oracle(m, k, n, dtype):
+    rng = np.random.default_rng(m * 7919 + k * 31 + n)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.dtype(dtype))
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.dtype(dtype))
+    got = dense_matmul(x, w, interpret=True)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dtype == "bfloat16" else 2e-4,
+                               atol=3e-2 if dtype == "bfloat16" else 2e-4)
+
+
+@pytest.mark.parametrize("tiles", [MatmulTiles(8, 128, 128),
+                                   MatmulTiles(16, 256, 128)])
+def test_dense_matmul_explicit_tiles(tiles):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 512)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(512, 384)), jnp.float32)
+    got = dense_matmul(x, w, tiles=tiles, interpret=True)
+    np.testing.assert_allclose(got, matmul_ref(x, w), **TOL)
+
+
+def test_calibration_respects_vmem_budget():
+    t = matmul_tiles(8192, 8192, 8192, bytes_per_el=4, budget=2 << 20)
+    assert t.working_set(4) <= 2 << 20
+    assert t.bn % 128 == 0 and t.bk % 128 == 0 and t.bm % 8 == 0
+    # larger budget must never pick smaller tiles
+    t2 = matmul_tiles(8192, 8192, 8192, bytes_per_el=4, budget=8 << 20)
+    assert t2.working_set(4) <= 8 << 20
+    assert (t2.bm, t2.bk, t2.bn) >= (t.bm, t.bk, t.bn)
+
+
+# --------------------------------------------------------------------------
+# block-sparse FC
+# --------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(nbr=st.integers(1, 3), nbc=st.integers(1, 3),
+       density=st.floats(0.2, 1.0), batch=st.integers(1, 17))
+def test_block_sparse_fc_matches_oracle(nbr, nbc, density, batch):
+    rng = np.random.default_rng(nbr * 100 + nbc * 10 + batch)
+    bm = bk = 128
+    w = rng.normal(size=(nbr * bm, nbc * bk)).astype(np.float32)
+    for i in range(nbr):
+        for j in range(nbc):
+            if rng.random() > density:
+                w[i * bm:(i + 1) * bm, j * bk:(j + 1) * bk] = 0
+    fc = BlockSparseFC(w, bm=bm, bk=bk, bn=8)
+    x = jnp.asarray(rng.normal(size=(batch, w.shape[1])), jnp.float32)
+    got = fc(x, interpret=True)
+    np.testing.assert_allclose(got, block_sparse_matvec_ref(x, w), **TOL)
+
+
+def test_block_sparse_skips_zero_blocks():
+    """The stored bundle must shrink with sparsity (compute scales with
+    modifications, not matrix size -- the sparse-undo-log principle)."""
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=(512, 512)).astype(np.float32)
+    w[128:, :] = 0          # 3 of 4 row-blocks empty
+    w[:128, 256:] = 0       # half the remaining row pruned
+    fc = BlockSparseFC(w)
+    assert fc.vals.shape[0] == 2 + 3   # 2 real + 3 padding blocks
+    x = jnp.asarray(rng.normal(size=(8, 512)), jnp.float32)
+    np.testing.assert_allclose(fc(x, interpret=True),
+                               block_sparse_matvec_ref(x, w), **TOL)
+
+
+# --------------------------------------------------------------------------
+# FIR conv1d
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.integers(1, 40), length=st.integers(8, 100),
+       k=st.integers(1, 7))
+def test_fir_conv1d_matches_oracle(c, length, k):
+    if k > length:
+        k = length
+    rng = np.random.default_rng(c * 31 + length)
+    x = jnp.asarray(rng.normal(size=(c, length)), jnp.float32)
+    taps = jnp.asarray(rng.normal(size=(c, k)), jnp.float32)
+    got = fir_conv1d(x, taps, interpret=True)
+    np.testing.assert_allclose(got, fir_conv1d_ref(x, taps), **TOL)
+
+
+def test_fir_composes_2d_convolution():
+    """TAILS composes 2-D convs from 1-D FIRs + accumulation (Sec. 7.2):
+    verify against a direct 2-D convolution."""
+    rng = np.random.default_rng(9)
+    ci, h, w_, kh, kw = 3, 12, 16, 3, 5
+    x = rng.normal(size=(ci, h, w_)).astype(np.float32)
+    filt = rng.normal(size=(ci, kh, kw)).astype(np.float32)
+    ho, wo = h - kh + 1, w_ - kw + 1
+    # direct
+    want = np.zeros((ho, wo), np.float32)
+    for c in range(ci):
+        for dy in range(kh):
+            for dx in range(kw):
+                want += filt[c, dy, dx] * x[c, dy:dy + ho, dx:dx + wo]
+    # TAILS-style: per (ci, dy) run a kw-tap FIR along rows, accumulate
+    got = np.zeros((ho, wo), np.float32)
+    for c in range(ci):
+        for dy in range(kh):
+            rows = jnp.asarray(x[c, dy:dy + ho, :])              # (ho, w)
+            taps = jnp.asarray(np.tile(filt[c, dy][None], (ho, 1)))
+            got += np.asarray(fir_conv1d(rows, taps, interpret=True))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+from repro.kernels import flash_attention                      # noqa: E402
+from repro.kernels.ref import flash_attention_ref              # noqa: E402
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 2), h=st.integers(1, 3), sq=st.integers(4, 80),
+       sk=st.integers(4, 80), d=st.sampled_from([8, 16, 32]),
+       causal=st.booleans())
+def test_flash_attention_matches_oracle(b, h, sq, sk, d, causal):
+    rng = np.random.default_rng(sq * 131 + sk * 7 + d)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, sk, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=32, bk=32,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_matches_blockwise_jax():
+    """The Pallas kernel and the pure-JAX blockwise implementation used by
+    the models must agree (same start-aligned causal convention)."""
+    from repro.models.layers import blockwise_attention
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 4, 64, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 4, 64, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 4, 64, 16)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, bq=16, bk=16, interpret=True)
+    b_ = blockwise_attention(q, k, v, causal=True, q_chunk=16, k_chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-4,
+                               atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# SSD intra-chunk kernel
+# --------------------------------------------------------------------------
+
+from repro.kernels import ssd_intra                            # noqa: E402
+
+
+@settings(max_examples=6, deadline=None)
+@given(b=st.integers(1, 2), h=st.integers(1, 3), q=st.sampled_from([4, 8]),
+       p=st.sampled_from([4, 8]), n=st.sampled_from([3, 5]),
+       seed=st.integers(0, 50))
+def test_ssd_intra_matches_jnp_path(b, h, q, p, n, seed):
+    """The Pallas intra-chunk cell + a host inter-chunk scan must equal the
+    pure-JAX ssd_chunked output exactly."""
+    from repro.models import mamba2
+    rng = np.random.default_rng(seed)
+    s = 2 * q
+    xh = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    cc = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    dtv = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, s, h)), jnp.float32)
+    a_neg = -jnp.asarray(rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    y_ref, h_ref = mamba2.ssd_chunked(xh, bb, cc, dtv, a_neg, chunk=q)
+
+    nc = s // q
+    xdt = (xh.astype(jnp.float32) * dtv[..., None]).reshape(b, nc, q, h, p)
+    xdt = jnp.moveaxis(xdt, 3, 2).reshape(b * nc, h, q, p)
+    cs = jnp.cumsum((dtv * a_neg).reshape(b, nc, q, h), axis=2)
+    csk = jnp.moveaxis(cs, 3, 2).reshape(b * nc, h, q)
+    y_i, s_c = ssd_intra(xdt, bb.reshape(b * nc, q, n),
+                         cc.reshape(b * nc, q, n), csk, interpret=True)
+    y_i = y_i.reshape(b, nc, h, q, p)
+    s_c = s_c.reshape(b, nc, h, n, p)
+
+    decay = np.exp(np.asarray(cs[:, :, -1, :]))
+    r = np.zeros((b, h, n, p), np.float32)
+    y = np.zeros((b, nc, q, h, p), np.float32)
+    ccr = np.asarray(cc).reshape(b, nc, q, n)
+    for c in range(nc):
+        ee = np.exp(np.asarray(cs[:, c]))
+        y_int = np.einsum("bin,bhnp,bih->bihp", ccr[:, c], r, ee)
+        y[:, c] = y_int + np.moveaxis(np.asarray(y_i[:, c]), 1, 2)
+        r = r * decay[:, c][:, :, None, None] + np.asarray(s_c[:, c])
+    np.testing.assert_allclose(y.reshape(b, s, h, p), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(r, np.asarray(h_ref), rtol=3e-4, atol=3e-5)

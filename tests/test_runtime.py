@@ -1,0 +1,93 @@
+"""Fleet runtime models: failures (Fig. 6/9 at cluster scale), stragglers,
+elastic rescale, serving preemption recovery, gradient compression."""
+
+import numpy as np
+import pytest
+
+from repro.optim.compress_grads import (compress_int8, compressed_allreduce_ref,
+                                        decompress_int8)
+from repro.runtime import (ElasticEvent, FleetSpec, JobSpec, StragglerSpec,
+                           choose_mesh, efficiency, simulate,
+                           simulate_elastic)
+
+
+# 20k hosts at 30-day MTBF: one failure every ~130 s -- the fleet regime
+# where fine-grained resumability matters (the MSP430 analogue: the paper's
+# device fails every ~100k instructions).  Steps are long (a big model).
+FLEET = FleetSpec(n_hosts=20_000, mtbf_host_s=30 * 86400)
+JOB = JobSpec(total_steps=500, step_s=60.0, microbatches=8, mb_commit_s=0.5)
+
+
+def test_naive_fails_large_fleet():
+    """No checkpoints: the job needs 30000 failure-free seconds but the
+    fleet fails every ~130 s -- the paper's non-terminating naive baseline
+    (P(success) ~ e^-230 per attempt)."""
+    r = simulate("naive", FLEET, JOB, seed=0, horizon_factor=20)
+    assert not r.completed
+
+
+def test_continuation_beats_interval_checkpointing():
+    goods = {}
+    for policy in ("interval", "continuation"):
+        runs = [simulate(policy, FLEET, JOB, interval=2, seed=s)
+                for s in range(5)]
+        assert all(r.completed for r in runs), policy
+        goods[policy] = np.mean([r.goodput for r in runs])
+        wasted = np.mean([r.wasted_s for r in runs])
+        print(policy, goods[policy], wasted)
+    assert goods["continuation"] > goods["interval"]
+
+
+def test_interval_tradeoff_is_nonmonotone():
+    """Small intervals pay overhead, large ones re-execute more: the Tile-k
+    curve (Fig. 6) must show both losses relative to some middle point."""
+    res = {k: np.mean([simulate("interval", FLEET, JOB, interval=k,
+                                seed=s).goodput for s in range(5)])
+           for k in (1, 2, 20)}
+    assert res[2] >= max(res[1], res[20]) or res[2] > res[20]         or res[2] > res[1]
+    waste = {k: np.mean([
+        simulate("interval", FLEET, JOB, interval=k, seed=s).wasted_s
+        for s in range(5)]) for k in (1, 20)}
+    assert waste[20] > waste[1], "bigger interval must waste more work"
+
+
+def test_straggler_policies():
+    spec = StragglerSpec(n_hosts=512, slow_frac=0.02)
+    sync = efficiency("sync", spec)
+    backup = efficiency("backup", spec)
+    quorum = efficiency("quorum", spec)
+    assert sync["vs_ideal"] > backup["vs_ideal"] > 1.0
+    assert quorum["vs_ideal"] < sync["vs_ideal"]
+    assert quorum["vs_ideal"] < 1.3      # near-ideal with 5% drops
+
+
+def test_elastic_mesh_choice():
+    assert choose_mesh(256, tp=16).dp == 16
+    assert choose_mesh(255, tp=16).dp == 15
+    assert choose_mesh(15, tp=16) is None
+
+
+def test_elastic_simulation_counts_rescales():
+    events = [ElasticEvent(0, 256), ElasticEvent(1000, 240),
+              ElasticEvent(2000, 256), ElasticEvent(3000, 256)]
+    out = simulate_elastic(events, tp=16, step_s=2.0, horizon_s=4000)
+    assert out["rescales"] == 2       # dp 16 -> 15 -> 16 (last is a no-op)
+    assert out["batches"] > 0
+
+
+def test_int8_compression_error_bounded():
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(1000,)).astype(np.float32) * 0.01
+    q, s, n = compress_int8(g)
+    d = decompress_int8(q, s, n, g.shape)
+    rel = np.abs(d - g).max() / np.abs(g).max()
+    assert rel < 1e-2
+    assert q.dtype == np.int8
+
+
+def test_compressed_allreduce_unbiased_mean():
+    rng = np.random.default_rng(1)
+    grads = [rng.normal(size=(512,)).astype(np.float32) for _ in range(8)]
+    approx = compressed_allreduce_ref(grads)
+    exact = np.mean(grads, axis=0)
+    assert np.abs(approx - exact).max() < 0.02 * np.abs(exact).max() + 1e-3

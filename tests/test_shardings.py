@@ -1,0 +1,76 @@
+"""Sharding-rules engine: divisibility fallback, FSDP, ZeRO-1, strategies."""
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import shardings
+from repro.launch.shardings import param_pspec, set_strategy
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+@pytest.fixture(autouse=True)
+def _reset_strategy():
+    set_strategy("tp")
+    yield
+    set_strategy("tp")
+
+
+def test_tp_rules_basic():
+    assert param_pspec("wq", (48, 2048, 4096), MESH) == \
+        P("data", None, "model")          # FSDP lead + column parallel
+    assert param_pspec("wo", (2048, 1024), MESH) == P("model", None)
+    assert param_pspec("we_gate", (48, 128, 2048, 768), MESH) == \
+        P("data", "model", None, None)
+    assert param_pspec("ln1", (48, 1024), MESH) == P(None, None)
+
+
+def test_divisibility_fallback():
+    # vocab 50280 % 16 != 0 -> model axis dropped
+    assert param_pspec("lm_head", (1024, 50280), MESH) == P(None, None)
+    assert param_pspec("lm_head", (1024, 151936), MESH) == P(None, "model")
+
+
+def test_fsdp_only_for_large_stacked():
+    small = param_pspec("A_log", (48, 32), MESH)
+    assert small == P(None, "model")       # too small for FSDP lead
+    big = param_pspec("w_gate", (48, 4096, 14336), MESH)
+    assert big[0] == "data"
+
+
+def test_zero1_spreads_optimizer_state():
+    spec = param_pspec("final_norm", (4096,), MESH, zero1=True)
+    assert "data" in spec
+
+
+def test_dp_strategy_replicates():
+    set_strategy("dp")
+    assert param_pspec("wq", (48, 2048, 4096), MESH) == P()
+    assert param_pspec("we_gate", (48, 128, 2048, 768), MESH) == P()
+
+
+def test_ep_strategy_keeps_expert_sharding_only():
+    set_strategy("ep")
+    assert param_pspec("we_gate", (48, 128, 2048, 768), MESH) == \
+        P("data", "model", None, None)
+    wq = param_pspec("wq", (48, 2048, 4096), MESH)
+    assert "model" not in wq and wq[0] == "data"
+    assert param_pspec("embed", (151936, 1024), MESH) == P("data", None)
+
+
+def test_batch_pspec_strategies():
+    set_strategy("tp")
+    assert shardings.batch_pspec(MESH, 256) == ("data",)
+    set_strategy("dp")
+    assert shardings.batch_pspec(MESH, 256) == ("data", "model")
+    assert shardings.batch_pspec(MESH, 100) == ()   # 100 % 16 != 0
