@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.compress import LayerChoice, apply_config, pareto_frontier, select, sweep
 from repro.core import (POWER_SYSTEMS, STRATEGIES, WILDLIFE, accuracy_sweep,
-                        evaluate)
+                        fleet_evaluate)
 from repro.core.inference import Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC
 from repro.data import make_task
 from repro.models.dnn import NETWORKS
@@ -143,25 +143,28 @@ def fig4_5(budget_configs: int = 10, epochs: int = 2) -> list[tuple]:
 # --------------------------------------------------------------------------
 
 def _matrix(nets=("mnist", "har", "okg")) -> dict:
+    """The 6-strategy x 4-power matrix per network, replayed by the
+    vectorized fleet simulator (one jitted vmap'd call per network; the
+    differential tests pin its equivalence to the scalar ``evaluate``)."""
     cache = RESULTS / "fig9_matrix.json"
     if cache.exists():
         return json.loads(cache.read_text())
+    RESULTS.mkdir(parents=True, exist_ok=True)
     out = {}
     for name in nets:
         net = compressed_net(name)
         rng = np.random.default_rng(1)
         x = rng.normal(size=net.input_shape).astype(np.float32)
-        for strat in STRATEGIES:
-            for power in POWER_SYSTEMS:
-                r = evaluate(net, x, strat, power)
-                out[f"{name}/{strat}/{power}"] = {
-                    "completed": r.completed,
-                    "live_s": r.live_time_s, "dead_s": r.dead_time_s,
-                    "total_s": r.total_time_s,
-                    "energy_j": r.energy_j, "reboots": r.reboots,
-                    "by_class": r.by_class,
-                    "dnf": r.dnf_reason,
-                }
+        for r in fleet_evaluate(net, x, strategies=STRATEGIES,
+                                powers=POWER_SYSTEMS):
+            out[f"{name}/{r.strategy}/{r.power}"] = {
+                "completed": r.completed,
+                "live_s": r.live_time_s, "dead_s": r.dead_time_s,
+                "total_s": r.total_time_s,
+                "energy_j": r.energy_j, "reboots": r.reboots,
+                "by_class": r.by_class,
+                "dnf": r.dnf_reason,
+            }
     cache.write_text(json.dumps(out, indent=1))
     return out
 

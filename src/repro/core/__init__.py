@@ -2,14 +2,17 @@
 
 SONIC-style loop continuation + idempotence (buffering, undo logging), the
 Alpaca task-based baseline, the TAILS LEA/DMA acceleration model, the device
-energy model, and the IMpJ application model.
+energy model, the IMpJ application model, and the vectorized fleet-scale
+replay simulator.
 """
 
 from .buffering import LoopOrderedBuffer, SparseUndoLog
 from .continuation import ResumableLoop, run_intermittent
 from .energy import (CostTable, Device, DeviceStats, LEA_COSTS,
-                     NonTermination, PowerFailure, PowerSystem,
-                     SOFTWARE_COSTS, make_power_system)
+                     NonTermination, OP_CLASSES, PowerFailure, PowerSystem,
+                     SOFTWARE_COSTS, class_cycle_vector, make_power_system)
+from .fleetsim import (FleetPlan, FleetSweepResult, build_plan,
+                       fleet_evaluate, fleet_sweep, replay_plans)
 from .imp import AppModel, WILDLIFE, accuracy_sweep
 from .inference import (Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC)
 from .intermittent import (POWER_SYSTEMS, RunResult, STRATEGIES, evaluate)
@@ -17,9 +20,11 @@ from .nvstore import NVStore
 
 __all__ = [
     "AppModel", "Conv2D", "CostTable", "DenseFC", "Device", "DeviceStats",
-    "LEA_COSTS", "LoopOrderedBuffer", "MaxPool2D", "NVStore",
-    "NonTermination", "POWER_SYSTEMS", "PowerFailure", "PowerSystem",
-    "ResumableLoop", "RunResult", "STRATEGIES", "SOFTWARE_COSTS", "SimNet",
-    "SparseFC", "SparseUndoLog", "WILDLIFE", "accuracy_sweep", "evaluate",
-    "make_power_system", "run_intermittent",
+    "FleetPlan", "FleetSweepResult", "LEA_COSTS", "LoopOrderedBuffer",
+    "MaxPool2D", "NVStore", "NonTermination", "OP_CLASSES", "POWER_SYSTEMS",
+    "PowerFailure", "PowerSystem", "ResumableLoop", "RunResult",
+    "STRATEGIES", "SOFTWARE_COSTS", "SimNet", "SparseFC", "SparseUndoLog",
+    "WILDLIFE", "accuracy_sweep", "build_plan", "class_cycle_vector",
+    "evaluate", "fleet_evaluate", "fleet_sweep", "make_power_system",
+    "replay_plans", "run_intermittent",
 ]

@@ -86,6 +86,18 @@ class CostTable:
 SOFTWARE_COSTS = CostTable(name="software")
 LEA_COSTS = CostTable(name="lea")
 
+#: Canonical operation-class order shared by the scalar simulator's
+#: ``DeviceStats.by_class`` dicts and the vectorized fleet simulator's
+#: per-class energy vectors (``core.fleetsim``).
+OP_CLASSES: tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(CostTable) if f.name != "name")
+
+
+def class_cycle_vector(costs: CostTable, counts: dict) -> list[float]:
+    """Cycles per op class for one invocation of a cost dict, in
+    :data:`OP_CLASSES` order (dense vector form of ``charge_bulk``)."""
+    return [getattr(costs, op) * counts.get(op, 0.0) for op in OP_CLASSES]
+
 #: Energy per cycle at the paper's operating point (1 mW / 16 MHz).
 JOULES_PER_CYCLE = 62.5e-12
 CLOCK_HZ = 16e6

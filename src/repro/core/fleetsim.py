@@ -1,0 +1,501 @@
+"""Vectorized fleet-scale intermittent simulator (JAX ``lax.scan`` replay).
+
+The scalar simulator (``energy.py`` + ``intermittent.py``) charges energy one
+Python operation at a time and models power failure as an exception -- exact,
+but serial and unjittable.  This module separates the *plan* from the
+*execution*: every strategy's charge sequence is first flattened into a plan
+(a flat array of rows), and a jitted scan then replays the plan, advancing
+``(energy buffer, plan cursor, live cycles, per-class energy, reboot count)``
+row by row.  Power failure becomes a state transition (cursor rollback to the
+last commit + recharge), not an exception, so the whole Fig. 9 strategy x
+power matrix -- and thousand-device fleet sweeps with per-device harvest
+jitter -- run in one compiled ``vmap`` pass.
+
+Plan rows and the paper's Sec. 6 commit protocol
+------------------------------------------------
+Each row models one committed unit of work as ``(kind, n, iter_cycles,
+entry_cycles)`` plus per-class cycle vectors (:data:`repro.core.energy
+.OP_CLASSES` order):
+
+``kind=WORK, n > 0``  -- a SONIC/TAILS *segment* under loop continuation
+    (Sec. 6.1): ``n`` iterations of ``iter_cycles`` each, committed by the
+    single atomic NV-cursor word write after every energy-affordable chunk
+    (the cursor write's FRAM cost is inside ``iter_cycles``).  A/B buffer
+    polarity is a pure function of the cursor (loop-ordered buffering,
+    Sec. 6.2), so rollback is free: on power failure only the cursor's
+    chunk re-runs.  ``entry_cycles`` is the segment (re-)entry cost --
+    re-loading the filter weight / ``x[j]`` into a register -- re-paid on
+    every reboot into the segment.
+
+``kind=WORK, n = 0``  -- an *atomic* re-executable unit: one Alpaca Tile-k
+    task (k redo-logged iterations + commit + transition; on failure the
+    volatile redo log is lost and the whole task re-charges), a layer-
+    boundary commit (one atomic NV word), or a whole naive inference.
+    ``entry_cycles`` carries the full cost.
+
+``kind=BURN``  -- one failed TAILS tile-calibration attempt (Sec. 7.1): the
+    device dies mid-tile, burning the rest of the buffer (charged to
+    ``lea_mac``), and halves the tile after reboot.
+
+The replay is *exactly* equivalent to the scalar simulator: all cost-table
+constants are integral, so every energy quantity is an integer represented
+exactly in float64, and the per-row closed forms below reproduce the scalar
+chunk/retry arithmetic reboot-for-reboot (see ``tests/test_fleetsim.py``).
+Per-class attribution differs from the scalar path only for the partially
+charged operation at the instant of a power failure: the scalar simulator
+splits that burn across the ops of the interrupted cost dict, the replay
+books the whole burn to ``control`` (totals are identical).
+
+Follow-up work this engine is built for: replaying measured GPU/TPU harvest
+traces and energy-adaptive checkpoint policies (see ROADMAP open items).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from .energy import (CLOCK_HZ, Device, JOULES_PER_CYCLE, LEA_COSTS,
+                     OP_CLASSES, SOFTWARE_COSTS, class_cycle_vector,
+                     make_power_system)
+from .inference import (Conv2D, DenseFC, SimNet, build_layer_segments,
+                        iter_task_spans, naive_layer_cycles, run_naive,
+                        tails_tile_schedule)
+from .intermittent import (POWER_SYSTEMS, RunResult, STRATEGIES,
+                           _alloc_activations, _run_layer_chain)
+from .nvstore import NVStore
+
+KIND_WORK = 0
+KIND_BURN = 1
+
+_N_CLASSES = len(OP_CLASSES)
+_CONTROL_IDX = OP_CLASSES.index("control")
+_BURN_IDX = OP_CLASSES.index("lea_mac")
+_FRAM_WRITE_IDX = OP_CLASSES.index("fram_write")
+
+
+# ==========================================================================
+# Plan extraction
+# ==========================================================================
+
+@dataclass
+class FleetPlan:
+    """A (net, strategy, power) cell flattened into replayable rows."""
+
+    network: str
+    strategy: str
+    power: str
+    capacity: float              # cycles per charge (inf = continuous)
+    recharge_s: float            # dead time per reboot
+    kind: np.ndarray             # (S,) int32
+    n: np.ndarray                # (S,) float64 iterations (0 for atomic rows)
+    iter_cycles: np.ndarray      # (S,) float64 cycles per iteration
+    entry_cycles: np.ndarray     # (S,) float64 (re-)entry / atomic-unit cost
+    iter_class: np.ndarray       # (S, C) float64 per-iteration class cycles
+    entry_class: np.ndarray      # (S, C) float64 per-entry class cycles
+    max_atomic: float            # scalar simulator's non-termination bound
+    ref_output: np.ndarray       # continuous-execution output (bit-exact)
+
+    def __len__(self) -> int:
+        return self.kind.shape[0]
+
+    @property
+    def total_cycles(self) -> float:
+        """Continuous-power cycles (every row completed on first try)."""
+        return float(np.sum(self.entry_cycles + self.n * self.iter_cycles))
+
+
+class _RowBuffer:
+    def __init__(self, costs):
+        self.costs = costs
+        self.rows: list[tuple] = []
+
+    def work(self, n: int, iter_counts: dict, entry_counts: dict) -> None:
+        iv = np.asarray(class_cycle_vector(self.costs, iter_counts))
+        ev = np.asarray(class_cycle_vector(self.costs, entry_counts))
+        self.rows.append((KIND_WORK, float(n), float(iv.sum()),
+                          float(ev.sum()), iv, ev))
+
+    def burn(self) -> None:
+        z = np.zeros(_N_CLASSES)
+        self.rows.append((KIND_BURN, 0.0, 0.0, 0.0, z, z))
+
+    def arrays(self) -> dict:
+        kind, n, ic, ec, iv, ev = zip(*self.rows)
+        return dict(kind=np.asarray(kind, np.int32),
+                    n=np.asarray(n, np.float64),
+                    iter_cycles=np.asarray(ic, np.float64),
+                    entry_cycles=np.asarray(ec, np.float64),
+                    iter_class=np.stack(iv).astype(np.float64),
+                    entry_class=np.stack(ev).astype(np.float64))
+
+
+def _cycles(costs, counts: dict) -> float:
+    return float(sum(class_cycle_vector(costs, counts)))
+
+
+def _merge(into: dict, counts: dict, times: float = 1.0) -> None:
+    for op, k in counts.items():
+        into[op] = into.get(op, 0.0) + k * times
+
+
+def _reference_run(net: SimNet, x, strategy: str):
+    """Continuous-power scalar execution: bit-exact output + the scalar
+    simulator's atomic-region bound (which, for TAILS, is sized with the
+    continuously-calibrated tile -- mirroring ``evaluate``'s DNF check)."""
+    costs = LEA_COSTS if strategy == "tails" else SOFTWARE_COSTS
+    ref_dev = Device(make_power_system("continuous"), costs)
+    if strategy == "naive":
+        out = run_naive(net, x, ref_dev)
+        return np.asarray(out), float(ref_dev.stats.live_cycles)
+    out, max_atomic = _run_layer_chain(net, x, ref_dev, strategy)
+    return np.asarray(out), float(max_atomic)
+
+
+def build_plan(net: SimNet, x: np.ndarray, strategy: str, power: str,
+               ref: tuple | None = None) -> FleetPlan:
+    """Flatten one (net, strategy, power) cell into a :class:`FleetPlan`.
+
+    ``ref`` is an optional precomputed ``(ref_output, max_atomic)`` pair
+    (from :func:`_reference_run`) so callers building a whole power row can
+    amortize the single continuous scalar pass per strategy.
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    power_sys = make_power_system(power)
+    costs = LEA_COSTS if strategy == "tails" else SOFTWARE_COSTS
+    capacity = math.inf if power_sys.continuous else power_sys.cycles_per_charge
+    ref_out, max_atomic = ref if ref is not None else \
+        _reference_run(net, x, strategy)
+    buf = _RowBuffer(costs)
+
+    if strategy == "naive":
+        # The whole inference is one atomic unit: naive accumulates in
+        # registers and has no commits, so any power failure restarts it
+        # from scratch (a single row re-paying everything on each retry).
+        probe = Device(make_power_system("continuous"), costs)
+        counts: dict = {}
+        for layer, in_shape in zip(net.layers, net.shapes()):
+            _merge(counts, naive_layer_cycles(probe, layer, in_shape))
+        buf.work(0, {}, counts)
+        return FleetPlan(net.name, strategy, power, capacity,
+                         power_sys.recharge_s, max_atomic=max_atomic,
+                         ref_output=ref_out, **buf.arrays())
+
+    nv = NVStore(None)
+    names = _alloc_activations(nv, net, x)
+    probe = Device(make_power_system("continuous"), costs)
+    tile_k = int(strategy.split("-")[1]) if strategy.startswith("tile") else 0
+    calibrated: dict[int, int] = {}      # taps -> burn count (tails)
+
+    for pc, layer in enumerate(net.layers):
+        if strategy == "tails":
+            # Pre-seed the capacity-calibrated tile (pure schedule) and emit
+            # the charge-burning discovery attempts as BURN rows, in the
+            # first-use order the scalar executor performs them.
+            t = layer.w.shape[3] if isinstance(layer, Conv2D) else \
+                1 if isinstance(layer, DenseFC) else None
+            if t is not None and t not in calibrated:
+                tile, burns = tails_tile_schedule(costs, capacity, t)
+                nv.alloc(f"tails/tile/{t}", (), np.int64, init=tile)
+                calibrated[t] = burns
+                if not power_sys.continuous:
+                    for _ in range(burns):
+                        buf.burn()
+        segs = build_layer_segments(nv, probe, layer, names[pc],
+                                    names[pc + 1], f"L{pc}", strategy)
+        if strategy in ("sonic", "tails"):
+            for s in segs:
+                buf.work(s.n, s.iter_costs, s.seg_costs)
+        else:
+            # Tile-k: enumerate the actual tasks (a task may span segment
+            # boundaries), each an atomic redo-log + commit + transition.
+            for u, hi, spans in iter_task_spans(segs, tile_k):
+                counts: dict = {}
+                for seg, lo_l, hi_l in spans:
+                    _merge(counts, seg.seg_costs)
+                    _merge(counts, seg.iter_costs, hi_l - lo_l)
+                _merge(counts, {"commit_word": hi - u, "task_transition": 1})
+                buf.work(0, {}, counts)
+        # Layer-boundary commit: one atomic NV word (the layer cursor).
+        buf.work(0, {}, {"fram_write": 1})
+
+    return FleetPlan(net.name, strategy, power, capacity,
+                     power_sys.recharge_s, max_atomic=max_atomic,
+                     ref_output=ref_out, **buf.arrays())
+
+
+# ==========================================================================
+# Jitted replay
+# ==========================================================================
+
+def _scan_step(cap, state, row):
+    """Advance device state over one plan row (closed-form reboot count).
+
+    Power failure is a state transition: the buffer's remainder is burned
+    (torn work re-runs from the last commit), the reboot counter advances,
+    and the row resumes with a full buffer.  For ``n``-iteration rows the
+    number of reboots inside the row is ``ceil(remaining / per-charge
+    affordable iterations)`` -- the scalar chunk loop collapsed.
+    """
+    import jax.numpy as jnp  # deferred: keep `import repro.core` jax-free
+
+    rem, live, reboots, classes, stuck = state
+    n, c, e = row["n"], row["iter_cycles"], row["entry_cycles"]
+    has_iters = n > 0
+    c_safe = jnp.maximum(c, 1e-30)
+
+    needed = e + n * c
+    ok = rem >= needed
+
+    # -- failure path (finite capacity; never selected when rem == inf) ----
+    entered = rem >= e
+    afford0 = jnp.clip(jnp.where(entered, jnp.floor((rem - e) / c_safe), 0.0),
+                       0.0, n)
+    rem_iters = n - afford0
+    afford_full = jnp.floor((cap - e) / c_safe)
+    row_stuck = jnp.where(has_iters, afford_full < 1.0, e > cap)
+    afford_full = jnp.maximum(afford_full, 1.0)
+    visits = jnp.where(has_iters,
+                       jnp.maximum(jnp.ceil(rem_iters / afford_full), 1.0),
+                       1.0)
+    n_last = jnp.where(has_iters,
+                       rem_iters - (visits - 1.0) * afford_full, 0.0)
+    fail_live = rem + (visits - 1.0) * cap + e + n_last * c
+    fail_rem = cap - e - n_last * c
+    entries = visits + entered.astype(rem.dtype)
+    fail_classes = entries * row["entry_class"] + n * row["iter_class"]
+    residue = fail_live - entries * e - n * c   # drains + torn partial burns
+    fail_classes = fail_classes.at[_CONTROL_IDX].add(residue)
+
+    ok_classes = row["entry_class"] + n * row["iter_class"]
+    new_rem = jnp.where(ok, rem - needed, fail_rem)
+    new_live = live + jnp.where(ok, needed, fail_live)
+    new_reboots = reboots + jnp.where(ok, 0.0, visits)
+    new_classes = classes + jnp.where(ok, ok_classes, fail_classes)
+    new_stuck = stuck | ((~ok) & row_stuck)
+
+    # -- BURN rows: a failed calibration attempt drains the whole buffer ---
+    is_burn = row["kind"] == KIND_BURN
+    new_rem = jnp.where(is_burn, cap, new_rem)
+    new_live = jnp.where(is_burn, live + rem, new_live)
+    new_reboots = jnp.where(is_burn, reboots + 1.0, new_reboots)
+    burn_vec = jnp.zeros_like(classes).at[_BURN_IDX].add(rem)
+    new_classes = jnp.where(is_burn, classes + burn_vec, new_classes)
+    new_stuck = jnp.where(is_burn, stuck, new_stuck)
+
+    return (new_rem, new_live, new_reboots, new_classes, new_stuck), None
+
+
+def _scan_one(rows, cap, rem0):
+    import jax.numpy as jnp
+    from jax import lax
+
+    state0 = (rem0, jnp.asarray(0.0, rem0.dtype),
+              jnp.asarray(0.0, rem0.dtype),
+              jnp.zeros((_N_CLASSES,), rem0.dtype),
+              jnp.asarray(False))
+    final, _ = lax.scan(lambda s, r: _scan_step(cap, s, r), state0, rows)
+    rem, live, reboots, classes, stuck = final
+    return dict(live=live, reboots=reboots, classes=classes, stuck=stuck,
+                rem=rem)
+
+
+@lru_cache(maxsize=None)
+def _jit_replay(shared_rows: bool):
+    """The compiled replay.  ``shared_rows=False``: rows, caps, rem0 all
+    batched on axis 0 (one lane per plan -- the Fig. 9 matrix).
+    ``shared_rows=True``: one plan broadcast across every device lane (fleet
+    sweeps; avoids materializing D copies of the plan)."""
+    import jax
+    in_axes = (None, 0, 0) if shared_rows else (0, 0, 0)
+    return jax.jit(jax.vmap(_scan_one, in_axes=in_axes))
+
+
+def _x64():
+    from jax.experimental import enable_x64
+    return enable_x64()
+
+
+def _pad_stack(plans: list[FleetPlan]) -> dict:
+    """Stack plans of different lengths; padding rows are no-op WORK rows."""
+    smax = max(len(p) for p in plans)
+    out = {k: [] for k in ("kind", "n", "iter_cycles", "entry_cycles",
+                           "iter_class", "entry_class")}
+    for p in plans:
+        pad = smax - len(p)
+        out["kind"].append(np.pad(p.kind, (0, pad)))
+        for k in ("n", "iter_cycles", "entry_cycles"):
+            out[k].append(np.pad(getattr(p, k), (0, pad)))
+        for k in ("iter_class", "entry_class"):
+            out[k].append(np.pad(getattr(p, k), ((0, pad), (0, 0))))
+    return {k: np.stack(v) for k, v in out.items()}
+
+
+def _plan_rows(plan: FleetPlan) -> dict:
+    return {k: getattr(plan, k) for k in
+            ("kind", "n", "iter_cycles", "entry_cycles", "iter_class",
+             "entry_class")}
+
+
+def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
+                shared_rows: bool) -> dict:
+    with _x64():
+        import jax.numpy as jnp
+        out = _jit_replay(shared_rows)(
+            {k: jnp.asarray(v) for k, v in rows.items()},
+            jnp.asarray(caps), jnp.asarray(rem0))
+        return {k: np.asarray(v) for k, v in out.items()}
+
+
+@dataclass
+class ReplayOut:
+    """Raw replay state for one (plan, device) lane."""
+    live_cycles: float
+    reboots: int
+    by_class: dict
+    completed: bool
+
+
+def replay_plans(plans: list[FleetPlan],
+                 init_frac: np.ndarray | None = None) -> list[ReplayOut]:
+    """Replay many plans in one jitted vmap'd call (one lane per plan).
+
+    ``init_frac`` optionally scales each lane's initial buffer charge
+    (default 1.0: every device starts a full charge, like the scalar
+    ``evaluate``)."""
+    caps = np.asarray([p.capacity for p in plans], np.float64)
+    rem0 = caps if init_frac is None else \
+        np.where(np.isinf(caps), np.inf, caps * np.asarray(init_frac))
+    out = _run_replay(_pad_stack(plans), caps, rem0, shared_rows=False)
+    results = []
+    for i, p in enumerate(plans):
+        dnf = p.max_atomic > caps[i]
+        completed = bool(not dnf and not out["stuck"][i])
+        by_class = {op: float(v) for op, v in
+                    zip(OP_CLASSES, out["classes"][i]) if v > 0.0}
+        results.append(ReplayOut(float(out["live"][i]),
+                                 int(round(float(out["reboots"][i]))),
+                                 by_class, completed))
+    return results
+
+
+# ==========================================================================
+# Fig. 9 matrix + fleet sweeps
+# ==========================================================================
+
+def fleet_evaluate(net: SimNet, x: np.ndarray,
+                   strategies=STRATEGIES,
+                   powers=POWER_SYSTEMS) -> list[RunResult]:
+    """The full strategy x power matrix as one vectorized replay.
+
+    Returns :class:`RunResult` rows interchangeable with the scalar
+    ``evaluate`` (outputs are bit-identical: both execute the same plan;
+    ``tests/test_fleetsim.py`` asserts field-level equivalence).
+    """
+    import dataclasses
+
+    plans = []
+    for strat in strategies:
+        ref = _reference_run(net, x, strat)
+        # Only TAILS plans depend on the power system (tile calibration);
+        # the other strategies' rows are built once and restamped with each
+        # power's capacity/recharge (the replay's per-lane inputs).
+        base = None
+        for power in powers:
+            if strat == "tails" or base is None:
+                base = build_plan(net, x, strat, power, ref=ref)
+                plans.append(base)
+            else:
+                ps = make_power_system(power)
+                plans.append(dataclasses.replace(
+                    base, power=power, recharge_s=ps.recharge_s,
+                    capacity=math.inf if ps.continuous
+                    else ps.cycles_per_charge))
+    outs = replay_plans(plans)
+    results = []
+    for p, o in zip(plans, outs):
+        if not o.completed:
+            results.append(RunResult(
+                p.network, p.strategy, p.power, False, None, 0.0, 0.0,
+                float("inf"), float("inf"), 0, p.max_atomic,
+                dnf_reason=f"atomic region of {p.max_atomic:.0f} cycles "
+                           f"exceeds the {p.capacity:.0f}-cycle buffer"))
+            continue
+        live_s = o.live_cycles / CLOCK_HZ
+        dead_s = o.reboots * p.recharge_s
+        results.append(RunResult(
+            p.network, p.strategy, p.power, True, p.ref_output, live_s,
+            dead_s, live_s + dead_s, o.live_cycles * JOULES_PER_CYCLE,
+            o.reboots, p.max_atomic, by_class=o.by_class))
+    return results
+
+
+@dataclass
+class FleetSweepResult:
+    """Per-device outcomes of one plan replayed across a fleet."""
+    strategy: str
+    power: str
+    n_devices: int
+    completed: np.ndarray        # (D,) bool
+    live_s: np.ndarray           # (D,)
+    dead_s: np.ndarray           # (D,)
+    reboots: np.ndarray          # (D,)
+    energy_j: np.ndarray         # (D,)
+    wall_s: float                # build + replay wall-clock
+
+    @property
+    def total_s(self) -> np.ndarray:
+        return self.live_s + self.dead_s
+
+    def summary(self) -> dict:
+        done = self.completed
+        return {
+            "devices": self.n_devices,
+            "completed": int(done.sum()),
+            "mean_total_s": float(self.total_s[done].mean()) if done.any()
+            else float("inf"),
+            "p95_total_s": float(np.percentile(self.total_s[done], 95))
+            if done.any() else float("inf"),
+            "mean_reboots": float(self.reboots[done].mean()) if done.any()
+            else 0.0,
+            "wall_s": round(self.wall_s, 3),
+        }
+
+
+def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
+                n_devices: int = 1000, seed: int = 0,
+                recharge_cv: float = 0.25,
+                plan: FleetPlan | None = None) -> FleetSweepResult:
+    """Replay one (strategy, power) plan across ``n_devices`` simulated
+    devices with per-device harvest-trace jitter, in one compiled pass.
+
+    Each device wakes at a random buffer level and refills at its own
+    harvest rate (lognormal recharge multiplier; the distributions live in
+    ``repro.runtime.failures`` alongside the fleet failure traces).  The
+    plan is broadcast across device lanes, so memory scales with plan size
+    + fleet size, not their product.
+    """
+    from repro.runtime.failures import harvest_jitter, initial_charge_fraction
+
+    t0 = time.perf_counter()
+    if plan is None:
+        plan = build_plan(net, x, strategy, power)
+    frac = initial_charge_fraction(n_devices, seed=seed)
+    jit_mult = harvest_jitter(n_devices, seed=seed + 1, cv=recharge_cv)
+    caps = np.full(n_devices, plan.capacity, np.float64)
+    rem0 = np.where(np.isinf(caps), np.inf, caps * frac)
+    out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True)
+    reboots = out["reboots"]
+    return FleetSweepResult(
+        strategy, power, n_devices,
+        completed=(plan.max_atomic <= caps) & ~out["stuck"],
+        live_s=out["live"] / CLOCK_HZ,
+        dead_s=reboots * plan.recharge_s * jit_mult,
+        reboots=reboots,
+        energy_j=out["live"] * JOULES_PER_CYCLE,
+        wall_s=time.perf_counter() - t0)

@@ -463,11 +463,30 @@ LEA_SRAM_WORDS = 2048
 LEA_MAX_TILE = LEA_SRAM_WORDS // 3
 
 
-def tails_tile_cost(device: Device, taps: int, tile: int) -> float:
-    c = device.costs
+def tails_tile_cost_from(costs, taps: int, tile: int) -> float:
+    """Cycles for one calibrated FIR tile (pure function of the cost table)."""
+    c = costs
     return (2 * c.dma_setup + 3 * tile * c.dma_word + c.lea_invoke
             + taps * tile * c.lea_mac + 2 * tile * c.shift_sw
             + c.fram_write + 2 * c.control)
+
+
+def tails_tile_cost(device: Device, taps: int, tile: int) -> float:
+    return tails_tile_cost_from(device.costs, taps, tile)
+
+
+def tails_tile_schedule(costs, capacity: float, taps: int) -> tuple[int, int]:
+    """Pure calibration schedule: the tile size that fits one charge, and the
+    number of failed (charge-burning) attempts it takes to discover it.
+
+    Separated from :func:`tails_calibrate` so the batched fleet simulator can
+    emit the calibration burns as plan rows without a live device.
+    """
+    tile, burns = LEA_MAX_TILE, 0
+    while tile > 1 and tails_tile_cost_from(costs, taps, tile) > capacity:
+        burns += 1
+        tile //= 2
+    return tile, burns
 
 
 def tails_calibrate(nv: NVStore, device: Device, taps: int) -> int:
@@ -477,15 +496,14 @@ def tails_calibrate(nv: NVStore, device: Device, taps: int) -> int:
     key = f"tails/tile/{taps}"
     if key in nv and int(nv.raw(key)) > 0:
         return int(nv.raw(key))
-    tile = LEA_MAX_TILE
-    while tile > 1 and tails_tile_cost(device, taps, tile) > device.capacity:
-        # a real device discovers this by dying mid-tile: burn a charge
-        if not device.power.continuous:
+    tile, burns = tails_tile_schedule(device.costs, device.capacity, taps)
+    if not device.power.continuous:
+        for _ in range(burns):
+            # a real device discovers this by dying mid-tile: burn a charge
             try:
                 device.charge("lea_mac", device.capacity + 1)
             except PowerFailure:
                 device.reboot()
-        tile //= 2
     nv.alloc(key, (), np.int64, init=tile)
     return tile
 
@@ -608,6 +626,24 @@ def tails_segments(nv, device, layer, in_name, out_name, ln) -> list[Segment]:
     return sonic_segments(nv, layer, in_name, out_name, ln)
 
 
+def build_layer_segments(nv: NVStore, device: Device, layer, in_name: str,
+                         out_name: str, ln: str, strategy: str
+                         ) -> list[Segment]:
+    """Segment plan for one layer under one strategy.
+
+    The single entry point used by both the scalar executor
+    (``intermittent._run_layer_chain``) and the batched fleet simulator's
+    plan extraction (``fleetsim.build_plan``): a segment plan is pure data
+    (iteration counts + per-class costs + apply closures), so the same plan
+    can be executed one charge at a time or replayed vectorized.
+    """
+    if strategy == "sonic":
+        return sonic_segments(nv, layer, in_name, out_name, ln)
+    if strategy == "tails":
+        return tails_segments(nv, device, layer, in_name, out_name, ln)
+    return alpaca_segments(nv, layer, in_name, out_name, ln)
+
+
 # ==========================================================================
 # Alpaca baseline: in-place segment plans + tiled task execution
 # ==========================================================================
@@ -708,6 +744,32 @@ def alpaca_segments(nv: NVStore, layer, in_name: str, out_name: str,
     return segs
 
 
+def iter_task_spans(segments: list[Segment], k: int, start: int = 0):
+    """Yield one Tile-k task at a time as ``(u, hi, spans)``: the task's
+    global iteration range plus its segment-local ``(segment, lo, hi)``
+    spans (a task may cross segment boundaries).
+
+    The single source of the task-splitting geometry, shared by
+    :class:`TiledTaskRunner` and the batched fleet simulator's plan
+    extraction (``fleetsim.build_plan``) so the two stay bit-equivalent.
+    """
+    bounds = np.cumsum([0] + [s.n for s in segments])
+    total = int(bounds[-1])
+    u = start
+    while u < total:
+        hi = min(u + k, total)
+        spans = []
+        v = u
+        while v < hi:
+            si = int(np.searchsorted(bounds, v, side="right") - 1)
+            lo_l = v - int(bounds[si])
+            hi_l = min(lo_l + (hi - v), segments[si].n)
+            spans.append((segments[si], lo_l, hi_l))
+            v += hi_l - lo_l
+        yield u, hi, spans
+        u = hi
+
+
 class TiledTaskRunner:
     """Executes segments as fixed tasks of k iterations (Fig. 6 Tile-k).
 
@@ -735,23 +797,11 @@ class TiledTaskRunner:
         return max(self.task_cycles(s, min(self.k, s.n)) for s in segments)
 
     def run(self, segments: list[Segment]) -> None:
-        bounds = np.cumsum([0] + [s.n for s in segments])
-        total = int(bounds[-1])
-        while True:
-            u = int(self.nv.raw(self.pc)) * self.k
-            if u >= total:
-                return
-            hi = min(u + self.k, total)
-            # A task may span segment boundaries; charge & apply per span.
-            spans = []
-            v = u
-            while v < hi:
-                si = int(np.searchsorted(bounds, v, side="right") - 1)
-                lo_l = v - int(bounds[si])
-                hi_l = min(lo_l + (hi - v), segments[si].n)
-                spans.append((segments[si], lo_l, hi_l))
-                v += hi_l - lo_l
-            # Phase 1: execute (charges may die mid-task; log is volatile).
+        start = int(self.nv.raw(self.pc)) * self.k
+        for u, hi, spans in iter_task_spans(segments, self.k, start):
+            # Phase 1: execute (charges may die mid-task; log is volatile --
+            # a PowerFailure abandons the iterator and re-entry resumes
+            # from the committed task cursor).
             for seg, lo_l, hi_l in spans:
                 charge_bulk(self.device, seg.seg_costs, 1)
                 charge_bulk(self.device, seg.iter_costs, hi_l - lo_l)

@@ -15,8 +15,7 @@ import numpy as np
 from .energy import (Device, LEA_COSTS, NonTermination, PowerFailure,
                      SOFTWARE_COSTS, make_power_system)
 from .inference import (FlatLoopRunner, SimNet, TiledTaskRunner,
-                        alpaca_segments, run_naive, sonic_segments,
-                        tails_segments)
+                        build_layer_segments, run_naive)
 from .nvstore import NVStore
 
 STRATEGIES = ("naive", "tile-8", "tile-32", "tile-128", "sonic", "tails")
@@ -79,26 +78,17 @@ def _run_layer_chain(net: SimNet, x: np.ndarray, device: Device,
                 return
             layer = net.layers[pc]
             ln = f"L{pc}"
-            if strategy == "sonic":
-                segs = sonic_segments(nv, layer, names[pc], names[pc + 1], ln)
+            segs = build_layer_segments(nv, device, layer, names[pc],
+                                        names[pc + 1], ln, strategy)
+            if strategy in ("sonic", "tails"):
                 runner = FlatLoopRunner(nv, device, f"{ln}/u")
-                max_atomic = max(max_atomic, runner.max_iter_cycles(segs))
-                device.check_region(ln, runner.max_iter_cycles(segs))
-                runner.run(segs)
-            elif strategy == "tails":
-                segs = tails_segments(nv, device, layer, names[pc],
-                                      names[pc + 1], ln)
-                runner = FlatLoopRunner(nv, device, f"{ln}/u")
-                max_atomic = max(max_atomic, runner.max_iter_cycles(segs))
-                device.check_region(ln, runner.max_iter_cycles(segs))
-                runner.run(segs)
+                region = runner.max_iter_cycles(segs)
             else:
-                segs = alpaca_segments(nv, layer, names[pc], names[pc + 1],
-                                       ln)
                 runner = TiledTaskRunner(nv, device, f"{ln}/pc", tile_k)
-                max_atomic = max(max_atomic, runner.max_task_cycles(segs))
-                device.check_region(ln, runner.max_task_cycles(segs))
-                runner.run(segs)
+                region = runner.max_task_cycles(segs)
+            max_atomic = max(max_atomic, region)
+            device.check_region(ln, region)
+            runner.run(segs)
             # Layer cursors are unique per layer, so this single atomic word
             # is the only cross-layer commit needed.
             device.charge("fram_write", 1)

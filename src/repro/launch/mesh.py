@@ -10,20 +10,36 @@ from __future__ import annotations
 import jax
 
 
+def axis_type_kwargs(n_axes: int) -> dict:
+    """Version-compat shim for ``jax.make_mesh(..., axis_types=...)``.
+
+    ``jax.sharding.AxisType`` (and the ``axis_types`` kwarg) only exist on
+    newer JAX; older releases (<= 0.4.x) treat every axis as Auto already,
+    so omitting the kwarg is semantically identical there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types on any supported JAX version."""
+    return jax.make_mesh(shape, axes, **axis_type_kwargs(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2x16x16 =
     512 chips (pod, data, model); the pod axis carries pure data parallelism
     over DCN, proving the cross-pod sharding lowers."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     """Small mesh over whatever devices exist (CPU tests, examples)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:

@@ -72,6 +72,43 @@ def _failure_times(spec: FleetSpec, horizon_s: float, seed: int):
     return out
 
 
+# --------------------------------------------------------------------------
+# Harvest-trace distributions (device-fleet analogue of the failure trace)
+# --------------------------------------------------------------------------
+# The same intermittence model at the other end of the scale: instead of a
+# datacenter host dying, an energy-harvesting device's capacitor drains.
+# These distributions parameterize the vectorized device simulator
+# (``repro.core.fleetsim.fleet_sweep``): per-device harvest rates vary with
+# antenna distance/orientation, and a device joins the fleet at an arbitrary
+# point of its charge cycle.
+
+def harvest_jitter(n_devices: int, seed: int = 0,
+                   cv: float = 0.25) -> np.ndarray:
+    """Per-device recharge-time multipliers: lognormal with mean 1 and
+    coefficient of variation ``cv`` (RF harvest power spread)."""
+    rng = np.random.default_rng(seed)
+    sigma = np.sqrt(np.log1p(cv * cv))
+    return rng.lognormal(mean=-sigma * sigma / 2, sigma=sigma,
+                         size=n_devices)
+
+
+def initial_charge_fraction(n_devices: int, seed: int = 0) -> np.ndarray:
+    """Buffer fill level at which each device wakes, uniform over the charge
+    cycle (devices are not phase-aligned)."""
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.05, 1.0, size=n_devices)
+
+
+def reboot_recharge_times(n_devices: int, n_reboots: int,
+                          mean_recharge_s: float, seed: int = 0) -> np.ndarray:
+    """Exponential per-reboot recharge times, shape ``(n_devices,
+    n_reboots)`` -- the device-level analogue of :func:`_failure_times` for
+    trace-replay experiments that need full dead-time traces rather than
+    per-device means."""
+    rng = np.random.default_rng(seed)
+    return rng.exponential(mean_recharge_s, size=(n_devices, n_reboots))
+
+
 def simulate(policy: str, fleet: FleetSpec, job: JobSpec, interval: int = 50,
              seed: int = 0, horizon_factor: float = 50.0) -> RunStats:
     """Run the job under a fault-tolerance policy against a failure trace."""

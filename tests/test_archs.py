@@ -10,6 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# hypothesis is optional: the conftest shim makes @given tests skip without
+# it, while the deterministic cases below still run.
+from conftest import given, settings, st
+
 from repro.configs import ARCHS, all_configs, get_config
 from repro.models import ModelConfig, get_model
 from repro.models.config import SHAPES
@@ -94,6 +98,33 @@ def test_full_configs_match_assignment():
     assert cfgs["llama4-scout-17b-a16e"].num_experts == 16
     assert cfgs["llama4-scout-17b-a16e"].experts_per_tok == 1
     assert cfgs["llama4-scout-17b-a16e"].shared_expert
+
+
+def _check_scaled_down(arch):
+    full = get_config(arch)
+    small = full.scaled_down()
+    assert small.family == full.family, arch
+    assert small.num_layers <= full.num_layers, arch
+    assert small.d_model <= full.d_model, arch
+    assert small.vocab_size <= full.vocab_size, arch
+
+
+@settings(max_examples=12, deadline=None)
+@given(arch=st.sampled_from(sorted(ARCHS)), layers=st.integers(1, 4))
+def test_scaled_down_respects_overrides(arch, layers):
+    """scaled_down(**overrides) must apply the override and stay in-family
+    for any architecture x override combination."""
+    full = get_config(arch)
+    small = full.scaled_down(num_layers=layers)
+    assert small.num_layers == layers, arch
+    assert small.family == full.family, arch
+
+
+def test_scaled_down_shrinks_every_arch():
+    """Deterministic: scaled_down() never grows any dimension, exhaustively
+    over the registry (runs with or without hypothesis)."""
+    for arch in sorted(ARCHS):
+        _check_scaled_down(arch)
 
 
 def test_shape_cells_match_assignment():

@@ -1,0 +1,132 @@
+"""Differential tests: the vectorized fleet simulator vs the scalar one.
+
+The batched ``lax.scan`` replay must reproduce the scalar simulator's
+``RunResult`` -- completed flag, reboot count, energy within 1e-6 J, and
+bit-identical outputs -- across the full strategy x power matrix.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (POWER_SYSTEMS, STRATEGIES, Conv2D, DenseFC,
+                        MaxPool2D, SimNet, SparseFC, build_plan, evaluate,
+                        fleet_evaluate, fleet_sweep, replay_plans)
+from repro.core.energy import CLOCK_HZ
+
+
+@pytest.fixture(scope="module")
+def small_net():
+    """All four layer types, small enough for the scalar matrix."""
+    rng = np.random.default_rng(0)
+    w1 = rng.normal(size=(3, 1, 3, 3)).astype(np.float32)
+    wfc = (rng.normal(size=(8, 75)) * 0.1).astype(np.float32)
+    wsp = (rng.normal(size=(5, 8)) * (rng.random((5, 8)) < 0.35)
+           ).astype(np.float32)
+    net = SimNet([
+        Conv2D(w1, rng.normal(size=3).astype(np.float32)),
+        MaxPool2D(2),
+        DenseFC(wfc, rng.normal(size=8).astype(np.float32)),
+        SparseFC(wsp, rng.normal(size=5).astype(np.float32), relu=False),
+    ], input_shape=(1, 12, 12), name="diff")
+    x = rng.normal(size=(1, 12, 12)).astype(np.float32)
+    return net, x
+
+
+@pytest.fixture(scope="module")
+def matrix(small_net):
+    net, x = small_net
+    return {(r.strategy, r.power): r for r in fleet_evaluate(net, x)}
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("power", POWER_SYSTEMS)
+def test_fleet_matches_scalar(small_net, matrix, strategy, power):
+    net, x = small_net
+    s = evaluate(net, x, strategy, power)
+    v = matrix[(strategy, power)]
+    assert v.completed == s.completed, \
+        f"{strategy}/{power}: completed {v.completed} vs {s.completed}"
+    if not s.completed:
+        assert v.reboots == s.reboots == 0
+        return
+    assert v.reboots == s.reboots, \
+        f"{strategy}/{power}: reboots {v.reboots} vs {s.reboots}"
+    assert abs(v.energy_j - s.energy_j) < 1e-6
+    np.testing.assert_array_equal(v.output, s.output)   # bit-identical
+    assert np.isclose(v.live_time_s, s.live_time_s, rtol=1e-9, atol=0)
+    assert np.isclose(v.dead_time_s, s.dead_time_s, rtol=1e-9, atol=1e-12)
+    assert np.isclose(v.total_time_s, s.total_time_s, rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_continuous_by_class_exact(small_net, matrix, strategy):
+    """On continuous power nothing is ever torn, so the replay's per-class
+    energy must match the scalar breakdown exactly, class by class."""
+    net, x = small_net
+    s = evaluate(net, x, strategy, "continuous")
+    v = matrix[(strategy, "continuous")]
+    assert set(v.by_class) == set(s.by_class)
+    for op, cyc in s.by_class.items():
+        assert v.by_class[op] == pytest.approx(cyc, rel=1e-12), op
+
+
+def test_plan_total_matches_continuous_live(small_net):
+    """A plan's total cycles are its continuous-power live cycles."""
+    net, x = small_net
+    for strategy in STRATEGIES:
+        plan = build_plan(net, x, strategy, "continuous")
+        s = evaluate(net, x, strategy, "continuous")
+        assert plan.total_cycles == pytest.approx(
+            s.live_time_s * CLOCK_HZ, rel=1e-12), strategy
+
+
+def test_fleet_sweep_smoke(small_net):
+    """A jittered fleet completes, and jitter actually spreads dead time."""
+    net, x = small_net
+    r = fleet_sweep(net, x, "sonic", "1mF", n_devices=64, seed=3)
+    assert r.completed.all()
+    assert (r.reboots >= 0).all() and r.reboots.max() > 0
+    assert r.dead_s.std() > 0          # per-device harvest jitter
+    # Every device does at least the plan's useful work; the spread across
+    # devices is only the torn-burn residue of their differing wake charges.
+    cont = evaluate(net, x, "sonic", "continuous").energy_j
+    assert (r.energy_j >= cont - 1e-12).all()
+    assert r.energy_j.max() / r.energy_j.min() < 1.05
+    ref = evaluate(net, x, "sonic", "1mF")
+    # a full-charge-start device matches the scalar reboot count within 1
+    assert abs(r.reboots.mean() - ref.reboots) <= 1.5
+
+
+def test_fleet_naive_restarts_whole_inference(small_net):
+    """Naive has no commits: a device waking with less charge than the whole
+    inference burns it, reboots, and re-executes everything from scratch."""
+    net, x = small_net
+    plan = build_plan(net, x, "naive", "1mF")
+    total = plan.total_cycles
+    assert total < plan.capacity        # otherwise naive DNFs on 1mF
+    out = replay_plans([plan], init_frac=[0.5 * total / plan.capacity])[0]
+    assert out.completed and out.reboots == 1
+    # half an inference torn away + one clean full pass
+    assert out.live_cycles == pytest.approx(1.5 * total, rel=1e-12)
+
+
+def test_fleet_dnf_matches_scalar():
+    """Naive on a too-large net DNFs in both simulators (Fig. 9b)."""
+    rng = np.random.default_rng(1)
+    big = SimNet([
+        Conv2D(rng.normal(size=(8, 1, 5, 5)).astype(np.float32),
+               np.zeros(8, np.float32)),
+        DenseFC((rng.normal(size=(16, 8 * 24 * 24)) * 0.02
+                 ).astype(np.float32), np.zeros(16, np.float32)),
+    ], input_shape=(1, 28, 28), name="big")
+    x = rng.normal(size=(1, 28, 28)).astype(np.float32)
+    res = {(r.strategy, r.power): r
+           for r in fleet_evaluate(big, x, strategies=("naive", "sonic"),
+                                   powers=("100uF",))}
+    assert not res[("naive", "100uF")].completed
+    assert "exceeds" in res[("naive", "100uF")].dnf_reason
+    sonic = res[("sonic", "100uF")]
+    assert sonic.completed and sonic.reboots > 0
+    s = evaluate(big, x, "sonic", "100uF")
+    assert sonic.reboots == s.reboots
+    assert abs(sonic.energy_j - s.energy_j) < 1e-6

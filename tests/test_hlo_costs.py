@@ -20,10 +20,10 @@ import jax, jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch import hlo_costs
+from repro.launch.mesh import compat_make_mesh
 
 out = {}
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 
 # 1) nested scan: 3 x 5 = 15 matmuls of 64^3
 W = jnp.zeros((64, 64), jnp.float32)

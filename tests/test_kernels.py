@@ -8,7 +8,10 @@ ref.py holds end to end.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional: the conftest shim makes @given tests skip without
+# it, while the deterministic cases below still run.
+from conftest import given, settings, st
 
 from repro.kernels import (BlockSparseFC, MatmulTiles, dense_matmul,
                            fir_conv1d, fir_tiles, matmul_tiles)
@@ -35,6 +38,16 @@ def test_dense_matmul_matches_oracle(m, k, n, dtype):
                                np.asarray(want, np.float32),
                                rtol=3e-2 if dtype == "bfloat16" else 2e-4,
                                atol=3e-2 if dtype == "bfloat16" else 2e-4)
+
+
+def test_dense_matmul_fixed_case():
+    """Deterministic fallback for the hypothesis sweep above: one odd-shaped
+    matmul against the oracle, runnable without hypothesis installed."""
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.normal(size=(13, 57)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(57, 31)), jnp.float32)
+    got = dense_matmul(x, w, interpret=True)
+    np.testing.assert_allclose(got, matmul_ref(x, w), **TOL)
 
 
 @pytest.mark.parametrize("tiles", [MatmulTiles(8, 128, 128),

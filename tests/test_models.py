@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional: the conftest shim makes @given tests skip without
+# it, while the deterministic cases below still run.
+from conftest import given, settings, st
 
 from repro.models import mamba2, transformer, whisper, zamba2
 from repro.models.config import ModelConfig
@@ -88,6 +91,22 @@ def test_ssd_chunk_invariance(chunk, seed):
     dtv = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, s, h)), jnp.float32)
     a_neg = -jnp.asarray(rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
     y1, h1 = mamba2.ssd_chunked(xh, bb, cc, dtv, a_neg, chunk=chunk)
+    y2, h2 = mamba2.ssd_chunked(xh, bb, cc, dtv, a_neg, chunk=16)
+    np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(h1, h2, rtol=3e-4, atol=3e-5)
+
+
+def test_ssd_chunk_invariance_fixed_case():
+    """Deterministic fallback for the hypothesis sweep above (chunk=2 vs 16),
+    runnable without hypothesis installed."""
+    rng = np.random.default_rng(7)
+    b, s, h, pdim, n = 1, 16, 2, 4, 3
+    xh = jnp.asarray(rng.normal(size=(b, s, h, pdim)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    cc = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    dtv = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, s, h)), jnp.float32)
+    a_neg = -jnp.asarray(rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    y1, h1 = mamba2.ssd_chunked(xh, bb, cc, dtv, a_neg, chunk=2)
     y2, h2 = mamba2.ssd_chunked(xh, bb, cc, dtv, a_neg, chunk=16)
     np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-5)
     np.testing.assert_allclose(h1, h2, rtol=3e-4, atol=3e-5)

@@ -1,0 +1,48 @@
+"""Property-style strategy equivalence over randomized small networks.
+
+All six implementations compute the same function (Sec. 6's correctness
+claim), and every strategy that survives a power system is bit-identical to
+its own continuous execution (``evaluate`` asserts this internally).  Runs
+across the ``seeded_net`` fixture's >= 5 random nets (see conftest.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import STRATEGIES, evaluate
+
+#: Implementations the paper itself shows failing small buffers (Fig. 9b):
+#: naive is atomic, and large tiles may exceed a 100uF charge.
+MAY_DNF = ("naive", "tile-32", "tile-128")
+
+
+def test_all_strategies_identical_outputs(seeded_net):
+    net, x = seeded_net
+    outs = {s: evaluate(net, x, s, "continuous").output for s in STRATEGIES}
+    base = outs["naive"]
+    assert base is not None and np.isfinite(base).all()
+    for s, out in outs.items():
+        np.testing.assert_allclose(out, base, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{net.name}: {s} != naive")
+
+
+@pytest.mark.parametrize("power", ["100uF", "1mF"])
+def test_intermittent_equals_continuous(seeded_net, power):
+    net, x = seeded_net
+    for s in STRATEGIES:
+        cont = evaluate(net, x, s, "continuous")
+        r = evaluate(net, x, s, power)   # asserts bit-identical internally
+        if not r.completed:
+            assert s in MAY_DNF, \
+                f"{net.name}: {s} must terminate on {power}: {r.dnf_reason}"
+            continue
+        np.testing.assert_array_equal(r.output, cont.output)
+        assert r.total_time_s >= cont.total_time_s
+
+
+def test_sonic_and_tails_always_survive(seeded_net):
+    net, x = seeded_net
+    for power in ("100uF", "1mF", "50mF"):
+        for s in ("sonic", "tails"):
+            r = evaluate(net, x, s, power)
+            assert r.completed, f"{net.name}/{s}@{power}: {r.dnf_reason}"
