@@ -4,19 +4,34 @@ with capacitor size replaced by fleet failure rate).
 Sweeps fault-tolerance policy x fleet size, straggler mitigation policy,
 elastic-rescale throughput, and the vectorized device-fleet simulator
 (thousands of intermittently-powered devices replayed in one compiled pass,
-with a measured speedup over looping the scalar simulator).
+with a measured speedup over looping the scalar simulator, plus a
+(devices x capacitor sizes) TAILS sweep of ONE parameterized plan).
+
+Each run records the machine-readable perf trajectory in
+``BENCH_fleet.json`` at the repo root (devices/sec, speedup vs scalar,
+per-strategy wall time) so regressions are visible across PRs.  ``python
+benchmarks/fleet.py --smoke`` runs a tiny fleet and *asserts* the replay
+beats the scalar loop (the CI smoke job).
 """
 
 from __future__ import annotations
 
+import json
+import sys
 import time
+from pathlib import Path
 
-import numpy as np
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import Conv2D, DenseFC, MaxPool2D, SimNet, evaluate, \
-    fleet_sweep
-from repro.runtime import (ElasticEvent, FleetSpec, JobSpec, StragglerSpec,
-                           efficiency, simulate, simulate_elastic)
+import numpy as np  # noqa: E402
+
+from repro.core import Conv2D, DenseFC, MaxPool2D, SimNet, build_plan, \
+    capacitor_sweep, evaluate, fleet_sweep  # noqa: E402
+from repro.runtime import (ElasticEvent, FleetSpec, JobSpec,  # noqa: E402
+                           StragglerSpec, efficiency, simulate,
+                           simulate_elastic)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_fleet.json"
 
 
 def policy_sweep() -> list[tuple]:
@@ -79,26 +94,48 @@ def _device_net():
     return net, x
 
 
-def device_fleet_sweep(n_devices: int = 1000,
-                       scalar_sample: int = 8) -> list[tuple]:
+def device_fleet_sweep(n_devices: int = 1000, scalar_sample: int = 8,
+                       bench: dict | None = None,
+                       warm: bool = False) -> list[tuple]:
     """>=1000 intermittent devices per strategy in one vectorized replay,
     vs looping the scalar ``evaluate`` (timed on ``scalar_sample`` runs and
-    extrapolated to the fleet size)."""
+    extrapolated to the fleet size).  Per-strategy numbers land in
+    ``bench`` for ``BENCH_fleet.json``.  ``warm=True`` runs each sweep once
+    to compile and reports the hot replay (the CI smoke gate: tiny fleets
+    on noisy runners would otherwise compare XLA compile time against a
+    2-sample scalar estimate); the recorded trajectory numbers stay cold
+    (build + jit + replay)."""
     net, x = _device_net()
     rows = []
     for strategy in ("sonic", "tails", "tile-8"):
-        r = fleet_sweep(net, x, strategy, "1mF", n_devices=n_devices, seed=7)
+        if warm:
+            fleet_sweep(net, x, strategy, "1mF", n_devices=n_devices,
+                        seed=7, trace_reboots=64)
+        r = fleet_sweep(net, x, strategy, "1mF", n_devices=n_devices, seed=7,
+                        trace_reboots=64)
         t0 = time.perf_counter()
         for _ in range(scalar_sample):
             evaluate(net, x, strategy, "1mF")
         scalar_per = (time.perf_counter() - t0) / scalar_sample
         scalar_est = scalar_per * n_devices
         s = r.summary()
+        speedup = scalar_est / r.wall_s
+        if bench is not None:
+            bench[strategy] = {
+                "devices": n_devices,
+                "wall_s": round(r.wall_s, 4),
+                "devices_per_sec": round(n_devices / r.wall_s, 1),
+                "scalar_s_per_device": round(scalar_per, 5),
+                "speedup_vs_scalar": round(speedup, 1),
+                "completed": s["completed"],
+                "warm": warm,
+            }
         rows.append((
             f"fleetsim/{strategy}_1mF_speedup",
-            round(scalar_est / r.wall_s, 1),
-            f"{n_devices} devices in {r.wall_s:.3f}s (build+jit+replay) vs "
-            f"scalar {scalar_per * 1e3:.1f}ms/device = {scalar_est:.1f}s "
+            round(speedup, 1),
+            f"{n_devices} devices in {r.wall_s:.3f}s (build+jit+replay, "
+            f"trace-driven recharges) vs scalar "
+            f"{scalar_per * 1e3:.1f}ms/device = {scalar_est:.1f}s "
             f"extrapolated from {scalar_sample}; "
             f"completed={s['completed']}/{n_devices} "
             f"mean_reboots={s['mean_reboots']:.1f} "
@@ -106,6 +143,105 @@ def device_fleet_sweep(n_devices: int = 1000,
     return rows
 
 
+def tails_capacitor_sweep(n_devices_per_cap: int = 128,
+                          bench: dict | None = None) -> list[tuple]:
+    """The parameterized-IR payoff: ONE TAILS plan, ONE vmapped replay over
+    a (capacitor sizes x devices) grid -- tile calibration happens inside
+    the scan per lane, no per-capacitor plan re-extraction."""
+    from repro.core.energy import LEA_COSTS
+    from repro.core.inference import tails_tile_candidates, tails_tile_index
+
+    net, x = _device_net()
+    caps = np.asarray([6e3, 2e4, 1e5, 1e6, 5e7])
+    t0 = time.perf_counter()
+    plan = build_plan(net, x, "tails", "1mF", parametric=True)
+    build_s = time.perf_counter() - t0
+    r = capacitor_sweep(net, x, caps, n_devices=n_devices_per_cap, seed=7,
+                        plan=plan)
+    lanes = caps.size * n_devices_per_cap
+    kw = net.layers[0].w.shape[3]
+    cands = tails_tile_candidates()
+    tiles = [cands[tails_tile_index(LEA_COSTS, c, kw)] for c in caps]
+    if bench is not None:
+        bench.update({
+            "strategy": "tails",
+            "capacitors_cycles": caps.tolist(),
+            "devices_per_cap": n_devices_per_cap,
+            "lanes": int(lanes),
+            "plan_build_s": round(build_s, 4),
+            "replay_wall_s": round(r.wall_s, 4),
+            "lanes_per_sec": round(lanes / r.wall_s, 1),
+            "conv_tile_per_cap": tiles,
+            "completed_per_cap": r.completed.sum(axis=1).tolist(),
+            "mean_reboots_per_cap":
+                [round(float(v), 2) for v in r.reboots.mean(axis=1)],
+        })
+    return [(
+        "fleetsim/tails_capacitor_sweep_lanes_per_sec",
+        round(lanes / r.wall_s, 1),
+        f"{caps.size} capacitors x {n_devices_per_cap} devices = {lanes} "
+        f"lanes in {r.wall_s:.3f}s from ONE parametric plan "
+        f"(built once in {build_s:.3f}s); conv tiles per cap={tiles} "
+        f"completed={r.completed.sum(axis=1).tolist()}")]
+
+
+def write_bench(fleet: dict, capsweep: dict,
+                path: Path = BENCH_PATH) -> None:
+    path.write_text(json.dumps({
+        "schema": 1,
+        "generated_unix": round(time.time(), 1),
+        "fleet": fleet,
+        "tails_capacitor_sweep": capsweep,
+    }, indent=1) + "\n")
+
+
+def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
+                   n_devices_per_cap: int = 128,
+                   warm: bool = False) -> tuple[list, dict, dict]:
+    """The fleetsim benchmark pair + its BENCH_fleet.json payloads -- the
+    single composition shared by :func:`run` and the CLI so the recorded
+    schema cannot drift between them."""
+    fleet_bench: dict = {}
+    cap_bench: dict = {}
+    rows = (device_fleet_sweep(n_devices=n_devices,
+                               scalar_sample=scalar_sample,
+                               bench=fleet_bench, warm=warm)
+            + tails_capacitor_sweep(n_devices_per_cap=n_devices_per_cap,
+                                    bench=cap_bench))
+    write_bench(fleet_bench, cap_bench)
+    return rows, fleet_bench, cap_bench
+
+
 def run() -> list[tuple]:
-    return (policy_sweep() + straggler_sweep() + elastic_sweep()
-            + device_fleet_sweep())
+    sim_rows, _, _ = _fleetsim_rows()
+    return (policy_sweep() + straggler_sweep() + elastic_sweep() + sim_rows)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fleet; assert replay beats the scalar loop")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows, fleet_bench, _ = _fleetsim_rows(
+            n_devices=200, scalar_sample=2, n_devices_per_cap=16, warm=True)
+    else:
+        rows, fleet_bench, _ = _fleetsim_rows()
+    for n, v, d in rows:
+        print(f'{n},{v},"{d}"')
+    print(f"wrote {BENCH_PATH}")
+    slow = {s: b["speedup_vs_scalar"] for s, b in fleet_bench.items()
+            if b["speedup_vs_scalar"] <= 1.0}
+    if slow:
+        raise SystemExit(
+            f"replay no faster than the scalar simulator: {slow}")
+    print("replay >= scalar speedup: "
+          + ", ".join(f"{s}={b['speedup_vs_scalar']}x"
+                      for s, b in fleet_bench.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,21 +10,26 @@ from .buffering import LoopOrderedBuffer, SparseUndoLog
 from .continuation import ResumableLoop, run_intermittent
 from .energy import (CostTable, Device, DeviceStats, LEA_COSTS,
                      NonTermination, OP_CLASSES, PowerFailure, PowerSystem,
-                     SOFTWARE_COSTS, class_cycle_vector, make_power_system)
-from .fleetsim import (FleetPlan, FleetSweepResult, build_plan,
-                       fleet_evaluate, fleet_sweep, replay_plans)
+                     SOFTWARE_COSTS, class_cycle_vector, custom_power_system,
+                     make_power_system)
+from .fleetsim import (CapacitorSweepResult, FleetPlan, FleetSweepResult,
+                       REPLAY_POLICIES, ReplayOut, build_plan,
+                       capacitor_sweep, fleet_evaluate, fleet_sweep,
+                       replay_plans)
 from .imp import AppModel, WILDLIFE, accuracy_sweep
 from .inference import (Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC)
 from .intermittent import (POWER_SYSTEMS, RunResult, STRATEGIES, evaluate)
 from .nvstore import NVStore
 
 __all__ = [
-    "AppModel", "Conv2D", "CostTable", "DenseFC", "Device", "DeviceStats",
-    "FleetPlan", "FleetSweepResult", "LEA_COSTS", "LoopOrderedBuffer",
-    "MaxPool2D", "NVStore", "NonTermination", "OP_CLASSES", "POWER_SYSTEMS",
-    "PowerFailure", "PowerSystem", "ResumableLoop", "RunResult",
+    "AppModel", "CapacitorSweepResult", "Conv2D", "CostTable", "DenseFC",
+    "Device", "DeviceStats", "FleetPlan", "FleetSweepResult", "LEA_COSTS",
+    "LoopOrderedBuffer", "MaxPool2D", "NVStore", "NonTermination",
+    "OP_CLASSES", "POWER_SYSTEMS", "PowerFailure", "PowerSystem",
+    "REPLAY_POLICIES", "ReplayOut", "ResumableLoop", "RunResult",
     "STRATEGIES", "SOFTWARE_COSTS", "SimNet", "SparseFC", "SparseUndoLog",
-    "WILDLIFE", "accuracy_sweep", "build_plan", "class_cycle_vector",
-    "evaluate", "fleet_evaluate", "fleet_sweep", "make_power_system",
-    "replay_plans", "run_intermittent",
+    "WILDLIFE", "accuracy_sweep", "build_plan", "capacitor_sweep",
+    "class_cycle_vector", "custom_power_system", "evaluate",
+    "fleet_evaluate", "fleet_sweep", "make_power_system", "replay_plans",
+    "run_intermittent",
 ]

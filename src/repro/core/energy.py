@@ -126,13 +126,34 @@ class PowerSystem:
         return self.cycles_per_charge is None
 
 
-def _rf_recharge_seconds(cycles: float, harvest_mw: float = 0.2) -> float:
-    """Dead time to harvest `cycles * JOULES_PER_CYCLE` at `harvest_mw`."""
+def rf_recharge_seconds(cycles, harvest_mw: float = 0.2):
+    """Dead time to harvest `cycles * JOULES_PER_CYCLE` at `harvest_mw`.
+
+    Accepts scalars or numpy arrays (the fleet simulator's capacitor sweeps
+    compute per-lane recharge times in one shot)."""
     return cycles * JOULES_PER_CYCLE / (harvest_mw * 1e-3)
 
 
-def make_power_system(name: str) -> PowerSystem:
-    """The four power systems of Fig. 9: continuous, 100uF, 1mF, 50mF."""
+_rf_recharge_seconds = rf_recharge_seconds
+
+
+def custom_power_system(cycles_per_charge: float,
+                        harvest_mw: float = 0.2) -> PowerSystem:
+    """An anonymous capacitor: ``cycles_per_charge`` usable cycles per charge
+    with RF recharge dead time scaled to the stored energy.  Used by the
+    fleet simulator's capacitor sweeps; :func:`make_power_system` (and hence
+    plan extraction) accepts the returned object anywhere a power-system
+    name is accepted."""
+    return PowerSystem(f"cap{cycles_per_charge:g}", float(cycles_per_charge),
+                       recharge_s=rf_recharge_seconds(cycles_per_charge,
+                                                      harvest_mw))
+
+
+def make_power_system(name: "str | PowerSystem") -> PowerSystem:
+    """The four power systems of Fig. 9 by name (continuous, 100uF, 1mF,
+    50mF), or any :class:`PowerSystem` instance passed through unchanged."""
+    if isinstance(name, PowerSystem):
+        return name
     if name in ("continuous", "cont"):
         return PowerSystem("continuous", None)
     budgets = {

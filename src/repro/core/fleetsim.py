@@ -3,51 +3,93 @@
 The scalar simulator (``energy.py`` + ``intermittent.py``) charges energy one
 Python operation at a time and models power failure as an exception -- exact,
 but serial and unjittable.  This module separates the *plan* from the
-*execution*: every strategy's charge sequence is first flattened into a plan
-(a flat array of rows), and a jitted scan then replays the plan, advancing
-``(energy buffer, plan cursor, live cycles, per-class energy, reboot count)``
-row by row.  Power failure becomes a state transition (cursor rollback to the
-last commit + recharge), not an exception, so the whole Fig. 9 strategy x
-power matrix -- and thousand-device fleet sweeps with per-device harvest
-jitter -- run in one compiled ``vmap`` pass.
+*execution*: every strategy's charge sequence is first flattened into a
+:class:`FleetPlan` (a flat array of rows), and a jitted scan then replays the
+plan, advancing ``(energy buffer, live cycles, reboot count, dead time,
+per-class energy)`` row by row.  Power failure becomes a state transition
+(cursor rollback to the last commit + recharge), not an exception, so the
+whole Fig. 9 strategy x power matrix -- and million-device fleet sweeps with
+per-device harvest traces -- run in one compiled ``vmap`` (optionally
+``shard_map``) pass.
+
+The plan is a *parameterized IR*: rows describe the work, while three
+run-time decisions are taken per device lane **inside** ``_scan_step``:
+
+1. **TAILS tile selection** -- parameterized rows carry a per-candidate
+   table over the Sec. 7.1 calibration ladder
+   (:func:`repro.core.inference.tails_tile_candidates`): iteration counts,
+   per-iteration cycles, and per-class vectors for every candidate tile,
+   plus the pure calibration cost from ``tails_tile_cost_from``.  The scan
+   picks each lane's tile from its carried capacitor size (the first ladder
+   entry whose one-tile cost fits a charge), so a single plan replays
+   across arbitrary capacitor grids without re-extraction, and ``KIND_CALIB``
+   rows charge the same discovery burns the scalar calibration pays.
+2. **Commit granularity** -- rows carry the per-iteration commit portion of
+   their cost (``commit_cycles``/``commit_class``, the loop-cursor FRAM
+   write).  Under ``policy="adaptive"`` (the energy-adaptive checkpoint-free
+   policy of Islam et al. 2025, arXiv:2503.06663) each row branches on the
+   carried buffer level: above ``theta * capacity`` the lane batches commits
+   to one cursor write per charge chunk instead of one per iteration;
+   below it (or under ``policy="fixed"``, the default) it keeps the paper's
+   per-iteration commit.  ``policy`` is a replay-time axis orthogonal to the
+   six strategies.
+3. **Recharge dead time** -- the scan indexes a per-lane cumulative
+   recharge-trace table (``runtime.failures.recharge_trace_cumulative`` over
+   ``reboot_recharge_times``) by the lane's running reboot counter, so each
+   reboot pays its *own* measured dead time; reboots past the trace fall
+   back to the lane's mean (``tail_s``).  With no trace the same gather
+   degenerates to the closed-form ``reboots x recharge_s``.
 
 Plan rows and the paper's Sec. 6 commit protocol
 ------------------------------------------------
 Each row models one committed unit of work as ``(kind, n, iter_cycles,
-entry_cycles)`` plus per-class cycle vectors (:data:`repro.core.energy
-.OP_CLASSES` order):
+entry_cycles, commit_cycles)`` plus per-class cycle vectors
+(:data:`repro.core.energy.OP_CLASSES` order) and the charge-order offsets
+``entry_start`` (where each class begins inside one entry attempt):
 
 ``kind=WORK, n > 0``  -- a SONIC/TAILS *segment* under loop continuation
     (Sec. 6.1): ``n`` iterations of ``iter_cycles`` each, committed by the
-    single atomic NV-cursor word write after every energy-affordable chunk
-    (the cursor write's FRAM cost is inside ``iter_cycles``).  A/B buffer
-    polarity is a pure function of the cursor (loop-ordered buffering,
-    Sec. 6.2), so rollback is free: on power failure only the cursor's
-    chunk re-runs.  ``entry_cycles`` is the segment (re-)entry cost --
-    re-loading the filter weight / ``x[j]`` into a register -- re-paid on
-    every reboot into the segment.
+    single atomic NV-cursor word write after every energy-affordable chunk.
+    ``commit_cycles`` is the cursor write's share of ``iter_cycles`` (the
+    part the adaptive policy can batch).  A/B buffer polarity is a pure
+    function of the cursor (loop-ordered buffering, Sec. 6.2), so rollback
+    is free.  ``entry_cycles`` is the segment (re-)entry cost, re-paid on
+    every reboot into the segment.  Parameterized TAILS rows additionally
+    carry ``tile_n/tile_iter_cycles/tile_iter_class/tile_sel_cost`` tables
+    (one entry per calibration-ladder candidate) and set ``tile_flag``.
 
 ``kind=WORK, n = 0``  -- an *atomic* re-executable unit: one Alpaca Tile-k
-    task (k redo-logged iterations + commit + transition; on failure the
-    volatile redo log is lost and the whole task re-charges), a layer-
-    boundary commit (one atomic NV word), or a whole naive inference.
+    task (k redo-logged iterations + commit + transition), a layer-boundary
+    commit (one atomic NV word), or a whole naive inference.
     ``entry_cycles`` carries the full cost.
 
-``kind=BURN``  -- one failed TAILS tile-calibration attempt (Sec. 7.1): the
-    device dies mid-tile, burning the rest of the buffer (charged to
-    ``lea_mac``), and halves the tile after reboot.
+``kind=BURN``  -- one failed TAILS tile-calibration attempt (Sec. 7.1) baked
+    for the plan's nominal capacitor: the device dies mid-tile, burning the
+    rest of the buffer (charged to ``lea_mac``), and halves the tile.
 
-The replay is *exactly* equivalent to the scalar simulator: all cost-table
-constants are integral, so every energy quantity is an integer represented
-exactly in float64, and the per-row closed forms below reproduce the scalar
-chunk/retry arithmetic reboot-for-reboot (see ``tests/test_fleetsim.py``).
-Per-class attribution differs from the scalar path only for the partially
-charged operation at the instant of a power failure: the scalar simulator
-splits that burn across the ops of the interrupted cost dict, the replay
-books the whole burn to ``control`` (totals are identical).
+``kind=CALIB``  -- the parameterized form of the same calibration: the scan
+    derives the burn count per lane from its capacitor (the number of ladder
+    candidates that do not fit) and charges them in one step.
 
-Follow-up work this engine is built for: replaying measured GPU/TPU harvest
-traces and energy-adaptive checkpoint policies (see ROADMAP open items).
+Equivalence guarantees (pinned by ``tests/test_fleetsim.py`` and
+``tests/test_fleet_replay_decisions.py``):
+
+* ``policy="fixed"`` replay of a non-parameterized plan is *exactly* the
+  scalar simulator: all cost-table constants are integral, so every energy
+  quantity is an integer represented exactly in float64, and the per-row
+  closed forms reproduce the scalar chunk/retry arithmetic
+  reboot-for-reboot across the full strategy x power matrix.
+* A parameterized TAILS plan replayed at a fixed capacitor is bit-identical
+  to the plan extracted for that capacitor, and the in-scan tile choice
+  equals ``tails_tile_schedule`` run per device.
+* The trace-driven dead-time path with every trace entry equal to
+  ``recharge_s`` reduces to the closed-form model (completed / reboots /
+  energy / outputs bit-exact; dead time to float tolerance).
+* Torn partial burns are attributed by charge order: when a lane dies
+  before affording a row's entry, the burned prefix is booked to the entry
+  ops' own classes via ``entry_start`` (matching the scalar simulator's
+  per-op accounting); only chunk-boundary drains are booked to ``control``.
+  Totals are exact in both schemes.
 """
 
 from __future__ import annotations
@@ -61,21 +103,36 @@ import numpy as np
 
 from .energy import (CLOCK_HZ, Device, JOULES_PER_CYCLE, LEA_COSTS,
                      OP_CLASSES, SOFTWARE_COSTS, class_cycle_vector,
-                     make_power_system)
-from .inference import (Conv2D, DenseFC, SimNet, build_layer_segments,
-                        iter_task_spans, naive_layer_cycles, run_naive,
-                        tails_tile_schedule)
+                     make_power_system, rf_recharge_seconds)
+from .inference import (Conv2D, DenseFC, SimNet, TAILS_FC_ENTRY_COSTS,
+                        build_layer_segments, iter_task_spans,
+                        naive_layer_cycles, run_naive, sonic_segments,
+                        tails_conv_entry_costs, tails_stage_iter_costs,
+                        tails_tile_candidates, tails_tile_cost_from,
+                        tails_tile_index, tails_tile_schedule)
 from .intermittent import (POWER_SYSTEMS, RunResult, STRATEGIES,
                            _alloc_activations, _run_layer_chain)
 from .nvstore import NVStore
 
 KIND_WORK = 0
 KIND_BURN = 1
+KIND_CALIB = 2
+
+REPLAY_POLICIES = ("fixed", "adaptive")
 
 _N_CLASSES = len(OP_CLASSES)
 _CONTROL_IDX = OP_CLASSES.index("control")
 _BURN_IDX = OP_CLASSES.index("lea_mac")
 _FRAM_WRITE_IDX = OP_CLASSES.index("fram_write")
+_K_TILES = len(tails_tile_candidates())
+
+#: Scanned row fields shared by every plan.
+_ROW_FIELDS = ("kind", "n", "iter_cycles", "entry_cycles", "iter_class",
+               "entry_class", "commit_cycles", "commit_class", "entry_start",
+               "tile_flag")
+#: Additional scanned fields of parameterized (TAILS) plans.
+_TILE_FIELDS = ("tile_n", "tile_iter_cycles", "tile_iter_class",
+                "tile_sel_cost")
 
 
 # ==========================================================================
@@ -90,48 +147,131 @@ class FleetPlan:
     strategy: str
     power: str
     capacity: float              # cycles per charge (inf = continuous)
-    recharge_s: float            # dead time per reboot
+    recharge_s: float            # mean dead time per reboot
     kind: np.ndarray             # (S,) int32
     n: np.ndarray                # (S,) float64 iterations (0 for atomic rows)
     iter_cycles: np.ndarray      # (S,) float64 cycles per iteration
     entry_cycles: np.ndarray     # (S,) float64 (re-)entry / atomic-unit cost
     iter_class: np.ndarray       # (S, C) float64 per-iteration class cycles
     entry_class: np.ndarray      # (S, C) float64 per-entry class cycles
+    commit_cycles: np.ndarray    # (S,) per-iteration commit share of iter
+    commit_class: np.ndarray     # (S, C) class vector of that share
+    entry_start: np.ndarray      # (S, C) charge-order start offsets of entry
+    tile_flag: np.ndarray        # (S,) int32: 1 = row uses the tile tables
     max_atomic: float            # scalar simulator's non-termination bound
     ref_output: np.ndarray       # continuous-execution output (bit-exact)
+    parametric: bool = False     # TAILS tile tables are live
+    tile_n: np.ndarray | None = None            # (S, K) iters per candidate
+    tile_iter_cycles: np.ndarray | None = None  # (S, K)
+    tile_iter_class: np.ndarray | None = None   # (S, K, C)
+    tile_sel_cost: np.ndarray | None = None     # (S, K) calibration fit cost
 
     def __len__(self) -> int:
         return self.kind.shape[0]
 
     @property
     def total_cycles(self) -> float:
-        """Continuous-power cycles (every row completed on first try)."""
+        """Continuous-power cycles (every row completed on first try; for
+        parameterized plans, at the nominal capacitor's tile)."""
         return float(np.sum(self.entry_cycles + self.n * self.iter_cycles))
 
 
 class _RowBuffer:
-    def __init__(self, costs):
+    def __init__(self, costs, parametric: bool = False):
         self.costs = costs
+        self.parametric = parametric
         self.rows: list[tuple] = []
 
-    def work(self, n: int, iter_counts: dict, entry_counts: dict) -> None:
-        iv = np.asarray(class_cycle_vector(self.costs, iter_counts))
-        ev = np.asarray(class_cycle_vector(self.costs, entry_counts))
-        self.rows.append((KIND_WORK, float(n), float(iv.sum()),
-                          float(ev.sum()), iv, ev))
+    def _vec(self, counts: dict) -> np.ndarray:
+        return np.asarray(class_cycle_vector(self.costs, counts))
+
+    def _charge_order(self, counts: dict) -> np.ndarray:
+        """Start offset of each class inside one charge_bulk pass over
+        ``counts`` in dict (= charge) order; classes absent stay at 0 with a
+        zero length in ``entry_class``, so they book nothing."""
+        start = np.zeros(_N_CLASSES)
+        off = 0.0
+        for op, k in counts.items():
+            start[OP_CLASSES.index(op)] = off
+            off += getattr(self.costs, op) * k
+        return start
+
+    def _append(self, kind, n, iv, ev, cv, start, tile_flag=0, tile=None):
+        if tile is None:
+            tile = (np.zeros(_K_TILES), np.zeros(_K_TILES),
+                    np.zeros((_K_TILES, _N_CLASSES)), np.zeros(_K_TILES))
+        self.rows.append((kind, float(n), float(iv.sum()), float(ev.sum()),
+                          iv, ev, float(cv.sum()), cv, start,
+                          int(tile_flag), *tile))
+
+    def work(self, n: int, iter_counts: dict, entry_counts: dict,
+             commit_counts: dict | None = None) -> None:
+        self._append(KIND_WORK, n, self._vec(iter_counts),
+                     self._vec(entry_counts), self._vec(commit_counts or {}),
+                     self._charge_order(entry_counts))
 
     def burn(self) -> None:
         z = np.zeros(_N_CLASSES)
-        self.rows.append((KIND_BURN, 0.0, 0.0, 0.0, z, z))
+        self._append(KIND_BURN, 0.0, z, z, z, z.copy())
+
+    def calib(self, taps: int) -> None:
+        """One parameterized calibration for ``taps``: the scan derives the
+        per-lane burn count from the lane's capacitor."""
+        z = np.zeros(_N_CLASSES)
+        sel = np.asarray([tails_tile_cost_from(self.costs, taps, c)
+                          for c in tails_tile_candidates()])
+        self._append(KIND_CALIB, 0.0, z, z, z, z.copy(),
+                     tile=(np.zeros(_K_TILES), np.zeros(_K_TILES),
+                           np.zeros((_K_TILES, _N_CLASSES)), sel))
+
+    def tails_work(self, total: int, taps: int, stage: str,
+                   entry_counts: dict, commit_counts: dict,
+                   nominal_k: int) -> None:
+        """Parameterized TAILS row: one ``(n, iter)`` pair per calibration
+        candidate; the direct fields carry the nominal capacitor's pick so
+        ``total_cycles`` and non-parameterized consumers stay meaningful."""
+        tile_n = np.zeros(_K_TILES)
+        tile_ic = np.zeros(_K_TILES)
+        tile_iv = np.zeros((_K_TILES, _N_CLASSES))
+        sel = np.zeros(_K_TILES)
+        for k, cand in enumerate(tails_tile_candidates()):
+            t = max(1, min(cand, total))
+            iv = self._vec(tails_stage_iter_costs(stage, t, taps))
+            tile_n[k] = -(-total // t)
+            tile_ic[k] = iv.sum()
+            tile_iv[k] = iv
+            sel[k] = tails_tile_cost_from(self.costs, taps, cand)
+        ev = self._vec(entry_counts)
+        cv = self._vec(commit_counts or {})
+        self.rows.append((KIND_WORK, tile_n[nominal_k], tile_ic[nominal_k],
+                          float(ev.sum()), tile_iv[nominal_k], ev,
+                          float(cv.sum()), cv,
+                          self._charge_order(entry_counts), 1,
+                          tile_n, tile_ic, tile_iv, sel))
 
     def arrays(self) -> dict:
-        kind, n, ic, ec, iv, ev = zip(*self.rows)
-        return dict(kind=np.asarray(kind, np.int32),
-                    n=np.asarray(n, np.float64),
-                    iter_cycles=np.asarray(ic, np.float64),
-                    entry_cycles=np.asarray(ec, np.float64),
-                    iter_class=np.stack(iv).astype(np.float64),
-                    entry_class=np.stack(ev).astype(np.float64))
+        cols = list(zip(*self.rows))
+        out = dict(kind=np.asarray(cols[0], np.int32),
+                   n=np.asarray(cols[1], np.float64),
+                   iter_cycles=np.asarray(cols[2], np.float64),
+                   entry_cycles=np.asarray(cols[3], np.float64),
+                   iter_class=np.stack(cols[4]).astype(np.float64),
+                   entry_class=np.stack(cols[5]).astype(np.float64),
+                   commit_cycles=np.asarray(cols[6], np.float64),
+                   commit_class=np.stack(cols[7]).astype(np.float64),
+                   entry_start=np.stack(cols[8]).astype(np.float64),
+                   tile_flag=np.asarray(cols[9], np.int32))
+        if self.parametric:
+            out.update(tile_n=np.stack(cols[10]).astype(np.float64),
+                       tile_iter_cycles=np.stack(cols[11]).astype(np.float64),
+                       tile_iter_class=np.stack(cols[12]).astype(np.float64),
+                       tile_sel_cost=np.stack(cols[13]).astype(np.float64))
+        return out
+
+
+#: Per-iteration commit share of SONIC/TAILS loop rows: the single atomic
+#: cursor-word FRAM write (what the adaptive policy batches per chunk).
+_CURSOR_COMMIT = {"fram_write": 1}
 
 
 def _cycles(costs, counts: dict) -> float:
@@ -156,22 +296,53 @@ def _reference_run(net: SimNet, x, strategy: str):
     return np.asarray(out), float(max_atomic)
 
 
-def build_plan(net: SimNet, x: np.ndarray, strategy: str, power: str,
-               ref: tuple | None = None) -> FleetPlan:
+def _emit_parametric_tails_layer(buf: _RowBuffer, layer, in_shape,
+                                 nominal_k: int) -> None:
+    """Rows of one conv/FC layer with per-candidate tile tables, mirroring
+    the segment order of ``inference.tails_segments`` exactly."""
+    if isinstance(layer, Conv2D):
+        co, ho, wo = layer.out_shape(in_shape)
+        hw = ho * wo
+        ci_n, kh, kw = layer.w.shape[1:]
+        for _f in range(co):
+            buf.tails_work(hw, kw, "init", {}, _CURSOR_COMMIT, nominal_k)
+            for _s in range(ci_n * kh):
+                buf.tails_work(hw, kw, "mac", tails_conv_entry_costs(kw),
+                               _CURSOR_COMMIT, nominal_k)
+            buf.tails_work(hw, kw, "store", {}, _CURSOR_COMMIT, nominal_k)
+    else:
+        m, n = layer.w.shape
+        buf.tails_work(m, 1, "init", {}, _CURSOR_COMMIT, nominal_k)
+        for _j in range(n):
+            buf.tails_work(m, 1, "mac", dict(TAILS_FC_ENTRY_COSTS),
+                           _CURSOR_COMMIT, nominal_k)
+        buf.tails_work(m, 1, "store", {}, _CURSOR_COMMIT, nominal_k)
+
+
+def build_plan(net: SimNet, x: np.ndarray, strategy: str, power,
+               ref: tuple | None = None,
+               parametric: bool = False) -> FleetPlan:
     """Flatten one (net, strategy, power) cell into a :class:`FleetPlan`.
 
-    ``ref`` is an optional precomputed ``(ref_output, max_atomic)`` pair
-    (from :func:`_reference_run`) so callers building a whole power row can
-    amortize the single continuous scalar pass per strategy.
+    ``power`` is a system name or a :class:`~repro.core.energy.PowerSystem`
+    (custom capacitors for sweeps).  ``ref`` is an optional precomputed
+    ``(ref_output, max_atomic)`` pair (from :func:`_reference_run`) so
+    callers building a whole power row can amortize the single continuous
+    scalar pass per strategy.  ``parametric=True`` (TAILS only) emits
+    per-candidate tile tables and ``CALIB`` rows instead of baking the
+    nominal capacitor's tile, so one plan replays across capacitor grids.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}")
+    if parametric and strategy != "tails":
+        raise ValueError("parametric plans exist only for TAILS "
+                         "(tile calibration is the power-dependent choice)")
     power_sys = make_power_system(power)
     costs = LEA_COSTS if strategy == "tails" else SOFTWARE_COSTS
     capacity = math.inf if power_sys.continuous else power_sys.cycles_per_charge
     ref_out, max_atomic = ref if ref is not None else \
         _reference_run(net, x, strategy)
-    buf = _RowBuffer(costs)
+    buf = _RowBuffer(costs, parametric=parametric)
 
     if strategy == "naive":
         # The whole inference is one atomic unit: naive accumulates in
@@ -182,7 +353,7 @@ def build_plan(net: SimNet, x: np.ndarray, strategy: str, power: str,
         for layer, in_shape in zip(net.layers, net.shapes()):
             _merge(counts, naive_layer_cycles(probe, layer, in_shape))
         buf.work(0, {}, counts)
-        return FleetPlan(net.name, strategy, power, capacity,
+        return FleetPlan(net.name, strategy, power_sys.name, capacity,
                          power_sys.recharge_s, max_atomic=max_atomic,
                          ref_output=ref_out, **buf.arrays())
 
@@ -191,73 +362,125 @@ def build_plan(net: SimNet, x: np.ndarray, strategy: str, power: str,
     probe = Device(make_power_system("continuous"), costs)
     tile_k = int(strategy.split("-")[1]) if strategy.startswith("tile") else 0
     calibrated: dict[int, int] = {}      # taps -> burn count (tails)
+    shapes = net.shapes()
 
     for pc, layer in enumerate(net.layers):
         if strategy == "tails":
             # Pre-seed the capacity-calibrated tile (pure schedule) and emit
-            # the charge-burning discovery attempts as BURN rows, in the
-            # first-use order the scalar executor performs them.
+            # the charge-burning discovery attempts -- as BURN rows baked for
+            # this capacitor, or as one CALIB row whose burn count the scan
+            # derives per lane -- in the first-use order the scalar executor
+            # performs them.
             t = layer.w.shape[3] if isinstance(layer, Conv2D) else \
                 1 if isinstance(layer, DenseFC) else None
             if t is not None and t not in calibrated:
                 tile, burns = tails_tile_schedule(costs, capacity, t)
-                nv.alloc(f"tails/tile/{t}", (), np.int64, init=tile)
                 calibrated[t] = burns
-                if not power_sys.continuous:
-                    for _ in range(burns):
-                        buf.burn()
-        segs = build_layer_segments(nv, probe, layer, names[pc],
-                                    names[pc + 1], f"L{pc}", strategy)
-        if strategy in ("sonic", "tails"):
-            for s in segs:
-                buf.work(s.n, s.iter_costs, s.seg_costs)
+                if parametric:
+                    buf.calib(t)
+                else:
+                    nv.alloc(f"tails/tile/{t}", (), np.int64, init=tile)
+                    if not power_sys.continuous:
+                        for _ in range(burns):
+                            buf.burn()
+        if parametric and isinstance(layer, (Conv2D, DenseFC)):
+            t = layer.w.shape[3] if isinstance(layer, Conv2D) else 1
+            _emit_parametric_tails_layer(
+                buf, layer, shapes[pc],
+                nominal_k=tails_tile_index(costs, capacity, t))
         else:
-            # Tile-k: enumerate the actual tasks (a task may span segment
-            # boundaries), each an atomic redo-log + commit + transition.
-            for u, hi, spans in iter_task_spans(segs, tile_k):
-                counts: dict = {}
-                for seg, lo_l, hi_l in spans:
-                    _merge(counts, seg.seg_costs)
-                    _merge(counts, seg.iter_costs, hi_l - lo_l)
-                _merge(counts, {"commit_word": hi - u, "task_transition": 1})
-                buf.work(0, {}, counts)
+            if parametric:
+                segs = sonic_segments(nv, layer, names[pc], names[pc + 1],
+                                      f"L{pc}")
+            else:
+                segs = build_layer_segments(nv, probe, layer, names[pc],
+                                            names[pc + 1], f"L{pc}", strategy)
+            if strategy in ("sonic", "tails"):
+                for s in segs:
+                    buf.work(s.n, s.iter_costs, s.seg_costs, _CURSOR_COMMIT)
+            else:
+                # Tile-k: enumerate the actual tasks (a task may span segment
+                # boundaries), each an atomic redo-log + commit + transition.
+                for u, hi, spans in iter_task_spans(segs, tile_k):
+                    counts = {}
+                    for seg, lo_l, hi_l in spans:
+                        _merge(counts, seg.seg_costs)
+                        _merge(counts, seg.iter_costs, hi_l - lo_l)
+                    _merge(counts, {"commit_word": hi - u,
+                                    "task_transition": 1})
+                    buf.work(0, {}, counts)
         # Layer-boundary commit: one atomic NV word (the layer cursor).
         buf.work(0, {}, {"fram_write": 1})
 
-    return FleetPlan(net.name, strategy, power, capacity,
+    return FleetPlan(net.name, strategy, power_sys.name, capacity,
                      power_sys.recharge_s, max_atomic=max_atomic,
-                     ref_output=ref_out, **buf.arrays())
+                     ref_output=ref_out, parametric=parametric,
+                     **buf.arrays())
 
 
 # ==========================================================================
 # Jitted replay
 # ==========================================================================
 
-def _scan_step(cap, state, row):
+def _scan_step(cap, trace_cum, tail_s, adaptive, theta, parametric,
+               state, row):
     """Advance device state over one plan row (closed-form reboot count).
 
     Power failure is a state transition: the buffer's remainder is burned
     (torn work re-runs from the last commit), the reboot counter advances,
     and the row resumes with a full buffer.  For ``n``-iteration rows the
     number of reboots inside the row is ``ceil(remaining / per-charge
-    affordable iterations)`` -- the scalar chunk loop collapsed.
+    affordable iterations)`` -- the scalar chunk loop collapsed.  The three
+    per-lane decisions (tile, commit granularity, per-reboot dead time) are
+    taken here; ``adaptive``/``theta``/``parametric`` are static, so the
+    ``policy="fixed"`` non-parameterized compile is instruction-for-
+    instruction the legacy closed form (bit-exact vs the scalar simulator).
     """
     import jax.numpy as jnp  # deferred: keep `import repro.core` jax-free
 
-    rem, live, reboots, classes, stuck = state
-    n, c, e = row["n"], row["iter_cycles"], row["entry_cycles"]
-    has_iters = n > 0
-    c_safe = jnp.maximum(c, 1e-30)
+    rem, live, reboots, dead, classes, stuck = state
 
-    needed = e + n * c
+    # -- decision 1: TAILS tile from the carried capacitor -----------------
+    if parametric:
+        sel = row["tile_sel_cost"]                        # (K,) fit costs
+        k = jnp.clip(jnp.sum((sel > cap).astype(jnp.int32)), 0, _K_TILES - 1)
+        is_param = row["tile_flag"] > 0
+        n = jnp.where(is_param, row["tile_n"][k], row["n"])
+        c = jnp.where(is_param, row["tile_iter_cycles"][k],
+                      row["iter_cycles"])
+        iter_class = jnp.where(is_param, row["tile_iter_class"][k],
+                               row["iter_class"])
+    else:
+        n, c, iter_class = row["n"], row["iter_cycles"], row["iter_class"]
+    e, entry_class = row["entry_cycles"], row["entry_class"]
+    cc, commit_class = row["commit_cycles"], row["commit_class"]
+    has_iters = n > 0
+
+    # -- decision 2: commit granularity from the carried buffer level ------
+    if adaptive:
+        # Above the threshold the lane batches the per-iteration cursor
+        # commit to one write per charge chunk: entry effectively grows by
+        # one commit, iterations shed theirs.  Continuous lanes always
+        # qualify (infinite buffer == maximal energy).
+        lvl_ok = jnp.where(jnp.isinf(cap), True, rem >= theta * cap)
+        batched = has_iters & (cc > 0.0) & lvl_ok
+        e_eff = jnp.where(batched, e + cc, e)
+        c_eff = jnp.where(batched, c - cc, c)
+    else:
+        batched = jnp.asarray(False)
+        e_eff, c_eff = e, c
+    c_safe = jnp.maximum(c_eff, 1e-30)
+
+    needed = e_eff + n * c_eff
     ok = rem >= needed
 
     # -- failure path (finite capacity; never selected when rem == inf) ----
     entered = rem >= e
-    afford0 = jnp.clip(jnp.where(entered, jnp.floor((rem - e) / c_safe), 0.0),
+    afford0 = jnp.clip(jnp.where(entered,
+                                 jnp.floor((rem - e_eff) / c_safe), 0.0),
                        0.0, n)
     rem_iters = n - afford0
-    afford_full = jnp.floor((cap - e) / c_safe)
+    afford_full = jnp.floor((cap - e_eff) / c_safe)
     row_stuck = jnp.where(has_iters, afford_full < 1.0, e > cap)
     afford_full = jnp.maximum(afford_full, 1.0)
     visits = jnp.where(has_iters,
@@ -265,14 +488,30 @@ def _scan_step(cap, state, row):
                        1.0)
     n_last = jnp.where(has_iters,
                        rem_iters - (visits - 1.0) * afford_full, 0.0)
-    fail_live = rem + (visits - 1.0) * cap + e + n_last * c
-    fail_rem = cap - e - n_last * c
+    fail_live = rem + (visits - 1.0) * cap + e_eff + n_last * c_eff
+    fail_rem = cap - e_eff - n_last * c_eff
     entries = visits + entered.astype(rem.dtype)
-    fail_classes = entries * row["entry_class"] + n * row["iter_class"]
-    residue = fail_live - entries * e - n * c   # drains + torn partial burns
+
+    # Batched-commit bookkeeping: one cursor write per visit that executed
+    # iterations (+1 if attempt 0 entered and progressed).
+    ok_commits = jnp.where(batched, 1.0, 0.0)
+    fail_commits = jnp.where(
+        batched, visits + (afford0 > 0).astype(rem.dtype), 0.0)
+    iter_vec = jnp.where(batched, iter_class - commit_class, iter_class)
+
+    fail_classes = (entries * entry_class + n * iter_vec
+                    + fail_commits * commit_class)
+    # Torn first-attempt burn: a lane that dies before affording the entry
+    # books the burned prefix to the entry ops' own classes in charge order
+    # (what the scalar's per-op `charge` does); only drains go to control.
+    torn = jnp.where(entered, jnp.zeros_like(entry_class),
+                     jnp.clip(rem - row["entry_start"], 0.0, entry_class))
+    fail_classes = fail_classes + torn
+    residue = (fail_live - entries * e - n * c_eff - fail_commits * cc
+               - jnp.where(entered, 0.0, rem))   # drains at chunk boundaries
     fail_classes = fail_classes.at[_CONTROL_IDX].add(residue)
 
-    ok_classes = row["entry_class"] + n * row["iter_class"]
+    ok_classes = entry_class + n * iter_vec + ok_commits * commit_class
     new_rem = jnp.where(ok, rem - needed, fail_rem)
     new_live = live + jnp.where(ok, needed, fail_live)
     new_reboots = reboots + jnp.where(ok, 0.0, visits)
@@ -288,32 +527,93 @@ def _scan_step(cap, state, row):
     new_classes = jnp.where(is_burn, classes + burn_vec, new_classes)
     new_stuck = jnp.where(is_burn, stuck, new_stuck)
 
-    return (new_rem, new_live, new_reboots, new_classes, new_stuck), None
+    # -- CALIB rows: per-lane burn count from the capacitor (Sec. 7.1) -----
+    if parametric:
+        is_calib = row["kind"] == KIND_CALIB
+        burns = k.astype(rem.dtype)     # ladder candidates that do not fit
+        calib_live = jnp.where(burns > 0, rem + (burns - 1.0) * cap, 0.0)
+        new_rem = jnp.where(is_calib,
+                            jnp.where(burns > 0, cap, rem), new_rem)
+        new_live = jnp.where(is_calib, live + calib_live, new_live)
+        new_reboots = jnp.where(is_calib, reboots + burns, new_reboots)
+        calib_vec = jnp.zeros_like(classes).at[_BURN_IDX].add(calib_live)
+        new_classes = jnp.where(is_calib, classes + calib_vec, new_classes)
+        new_stuck = jnp.where(is_calib, stuck, new_stuck)
+
+    # -- decision 3: per-reboot dead time from the lane's recharge trace ---
+    r_cap = trace_cum.shape[0] - 1
+    i0 = jnp.clip(reboots, 0.0, r_cap).astype(jnp.int32)
+    i1 = jnp.clip(new_reboots, 0.0, r_cap).astype(jnp.int32)
+    over = (jnp.maximum(new_reboots - r_cap, 0.0)
+            - jnp.maximum(reboots - r_cap, 0.0))
+    new_dead = dead + (trace_cum[i1] - trace_cum[i0]) + over * tail_s
+
+    return (new_rem, new_live, new_reboots, new_dead, new_classes,
+            new_stuck), None
 
 
-def _scan_one(rows, cap, rem0):
+def _scan_one(rows, cap, rem0, trace_cum, tail_s, adaptive, theta,
+              parametric):
     import jax.numpy as jnp
     from jax import lax
 
     state0 = (rem0, jnp.asarray(0.0, rem0.dtype),
               jnp.asarray(0.0, rem0.dtype),
+              jnp.asarray(0.0, rem0.dtype),
               jnp.zeros((_N_CLASSES,), rem0.dtype),
               jnp.asarray(False))
-    final, _ = lax.scan(lambda s, r: _scan_step(cap, s, r), state0, rows)
-    rem, live, reboots, classes, stuck = final
-    return dict(live=live, reboots=reboots, classes=classes, stuck=stuck,
-                rem=rem)
+    final, _ = lax.scan(
+        lambda s, r: _scan_step(cap, trace_cum, tail_s, adaptive, theta,
+                                parametric, s, r),
+        state0, rows)
+    rem, live, reboots, dead, classes, stuck = final
+    return dict(live=live, reboots=reboots, dead=dead, classes=classes,
+                stuck=stuck, rem=rem)
 
 
 @lru_cache(maxsize=None)
-def _jit_replay(shared_rows: bool):
-    """The compiled replay.  ``shared_rows=False``: rows, caps, rem0 all
-    batched on axis 0 (one lane per plan -- the Fig. 9 matrix).
+def _vmap_replay(shared_rows: bool, adaptive: bool, theta: float,
+                 parametric: bool):
+    """The vmapped replay.  ``shared_rows=False``: rows, caps, rem0, traces
+    all batched on axis 0 (one lane per plan -- the Fig. 9 matrix).
     ``shared_rows=True``: one plan broadcast across every device lane (fleet
-    sweeps; avoids materializing D copies of the plan)."""
+    sweeps; avoids materializing D copies of the plan).  ``adaptive``/
+    ``theta``/``parametric`` are static so the default configuration
+    compiles to exactly the legacy closed form."""
     import jax
-    in_axes = (None, 0, 0) if shared_rows else (0, 0, 0)
-    return jax.jit(jax.vmap(_scan_one, in_axes=in_axes))
+    in_axes = ((None if shared_rows else 0), 0, 0, 0, 0)
+    return jax.vmap(
+        lambda rows, cap, rem0, tc, ts: _scan_one(
+            rows, cap, rem0, tc, ts, adaptive, theta, parametric),
+        in_axes=in_axes)
+
+
+@lru_cache(maxsize=None)
+def _jit_replay(shared_rows: bool, adaptive: bool, theta: float,
+                parametric: bool):
+    import jax
+    return jax.jit(_vmap_replay(shared_rows, adaptive, theta, parametric))
+
+
+@lru_cache(maxsize=None)
+def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
+                        theta: float, parametric: bool):
+    """The replay wrapped in ``shard_map`` over the fleet's device axis:
+    per-lane inputs/outputs split across the mesh, plan rows replicated.
+    Lanes are independent, so no collectives are needed -- the mesh purely
+    spreads lane memory and compute across chips."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import compat_shard_map
+
+    fn = _vmap_replay(shared_rows, adaptive, theta, parametric)
+    lane = P("devices")
+    rows_spec = P() if shared_rows else lane
+    return jax.jit(compat_shard_map(
+        fn, mesh,
+        in_specs=(rows_spec, lane, lane, lane, lane),
+        out_specs=lane))
 
 
 def _x64():
@@ -321,35 +621,77 @@ def _x64():
     return enable_x64()
 
 
+def _pad_axis0(a: np.ndarray, pad: int) -> np.ndarray:
+    return np.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+
+
 def _pad_stack(plans: list[FleetPlan]) -> dict:
-    """Stack plans of different lengths; padding rows are no-op WORK rows."""
+    """Stack plans of different lengths; padding rows are no-op WORK rows.
+    Tile tables are included iff any plan is parameterized (zero-filled for
+    the rest: ``tile_flag=0`` rows never read them)."""
     smax = max(len(p) for p in plans)
-    out = {k: [] for k in ("kind", "n", "iter_cycles", "entry_cycles",
-                           "iter_class", "entry_class")}
+    fields = _ROW_FIELDS + (_TILE_FIELDS if any(p.parametric for p in plans)
+                            else ())
+    out: dict[str, list] = {k: [] for k in fields}
     for p in plans:
         pad = smax - len(p)
-        out["kind"].append(np.pad(p.kind, (0, pad)))
-        for k in ("n", "iter_cycles", "entry_cycles"):
-            out[k].append(np.pad(getattr(p, k), (0, pad)))
-        for k in ("iter_class", "entry_class"):
-            out[k].append(np.pad(getattr(p, k), ((0, pad), (0, 0))))
+        for k in fields:
+            v = getattr(p, k)
+            if v is None:      # fixed plan in a mixed batch: zero tables
+                shape = ((len(p), _K_TILES, _N_CLASSES)
+                         if k == "tile_iter_class" else (len(p), _K_TILES))
+                v = np.zeros(shape)
+            out[k].append(_pad_axis0(v, pad))
     return {k: np.stack(v) for k, v in out.items()}
 
 
 def _plan_rows(plan: FleetPlan) -> dict:
-    return {k: getattr(plan, k) for k in
-            ("kind", "n", "iter_cycles", "entry_cycles", "iter_class",
-             "entry_class")}
+    fields = _ROW_FIELDS + (_TILE_FIELDS if plan.parametric else ())
+    return {k: getattr(plan, k) for k in fields}
 
 
 def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
-                shared_rows: bool) -> dict:
+                shared_rows: bool, trace_cum: np.ndarray | None = None,
+                tail_s: np.ndarray | None = None, policy: str = "fixed",
+                theta: float = 0.5, mesh=None) -> dict:
+    if policy not in REPLAY_POLICIES:
+        raise ValueError(f"unknown replay policy {policy!r}; "
+                         f"expected one of {REPLAY_POLICIES}")
+    n_lanes = caps.shape[0]
+    parametric = "tile_sel_cost" in rows
+    if trace_cum is None:
+        trace_cum = np.zeros((n_lanes, 1), np.float64)
+    if tail_s is None:
+        tail_s = np.zeros(n_lanes, np.float64)
+    adaptive = policy == "adaptive"
     with _x64():
         import jax.numpy as jnp
-        out = _jit_replay(shared_rows)(
-            {k: jnp.asarray(v) for k, v in rows.items()},
-            jnp.asarray(caps), jnp.asarray(rem0))
-        return {k: np.asarray(v) for k, v in out.items()}
+        args = [{k: jnp.asarray(v) for k, v in rows.items()},
+                jnp.asarray(caps), jnp.asarray(rem0),
+                jnp.asarray(trace_cum), jnp.asarray(np.broadcast_to(
+                    np.asarray(tail_s, np.float64), (n_lanes,)))]
+        if mesh is None:
+            out = _jit_replay(shared_rows, adaptive, float(theta),
+                              parametric)(*args)
+            return {k: np.asarray(v) for k, v in out.items()}
+        # shard_map: pad the lane axis to a mesh multiple with inert
+        # continuous lanes (cap = rem0 = inf completes every row in one
+        # pass), then strip the padding from the outputs.
+        n_shards = int(mesh.devices.size)
+        pad = (-n_lanes) % n_shards
+        if pad:
+            fills = (np.inf, np.inf, 0.0, 0.0)   # caps, rem0, trace, tail
+            for i, fill in enumerate(fills, start=1):
+                args[i] = jnp.concatenate(
+                    [args[i], jnp.full((pad,) + args[i].shape[1:], fill,
+                                       args[i].dtype)], axis=0)
+            if not shared_rows:
+                args[0] = {k: jnp.concatenate(
+                    [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
+                    for k, v in args[0].items()}
+        out = _jit_sharded_replay(mesh, shared_rows, adaptive, float(theta),
+                                  parametric)(*args)
+        return {k: np.asarray(v)[:n_lanes] for k, v in out.items()}
 
 
 @dataclass
@@ -359,19 +701,39 @@ class ReplayOut:
     reboots: int
     by_class: dict
     completed: bool
+    dead_s: float = 0.0
 
 
 def replay_plans(plans: list[FleetPlan],
-                 init_frac: np.ndarray | None = None) -> list[ReplayOut]:
+                 init_frac: np.ndarray | None = None,
+                 policy: str = "fixed", theta: float = 0.5,
+                 recharge_traces: np.ndarray | None = None
+                 ) -> list[ReplayOut]:
     """Replay many plans in one jitted vmap'd call (one lane per plan).
 
     ``init_frac`` optionally scales each lane's initial buffer charge
     (default 1.0: every device starts a full charge, like the scalar
-    ``evaluate``)."""
+    ``evaluate``).  ``recharge_traces`` is an optional ``(len(plans), R)``
+    matrix of per-reboot recharge times; reboots beyond ``R`` fall back to
+    each plan's mean ``recharge_s``.  ``policy``/``theta`` select the
+    commit-granularity policy (see the module docstring)."""
+    from repro.runtime.failures import recharge_trace_cumulative
+
     caps = np.asarray([p.capacity for p in plans], np.float64)
     rem0 = caps if init_frac is None else \
         np.where(np.isinf(caps), np.inf, caps * np.asarray(init_frac))
-    out = _run_replay(_pad_stack(plans), caps, rem0, shared_rows=False)
+    tail = np.asarray([p.recharge_s for p in plans], np.float64)
+    cum = None
+    if recharge_traces is not None:
+        recharge_traces = np.asarray(recharge_traces)
+        if recharge_traces.ndim != 2 or \
+                recharge_traces.shape[0] != len(plans):
+            raise ValueError(
+                f"recharge_traces must be (len(plans), R) = "
+                f"({len(plans)}, R), got {recharge_traces.shape}")
+        cum = recharge_trace_cumulative(recharge_traces)
+    out = _run_replay(_pad_stack(plans), caps, rem0, shared_rows=False,
+                      trace_cum=cum, tail_s=tail, policy=policy, theta=theta)
     results = []
     for i, p in enumerate(plans):
         dnf = p.max_atomic > caps[i]
@@ -380,7 +742,8 @@ def replay_plans(plans: list[FleetPlan],
                     zip(OP_CLASSES, out["classes"][i]) if v > 0.0}
         results.append(ReplayOut(float(out["live"][i]),
                                  int(round(float(out["reboots"][i]))),
-                                 by_class, completed))
+                                 by_class, completed,
+                                 dead_s=float(out["dead"][i])))
     return results
 
 
@@ -390,13 +753,18 @@ def replay_plans(plans: list[FleetPlan],
 
 def fleet_evaluate(net: SimNet, x: np.ndarray,
                    strategies=STRATEGIES,
-                   powers=POWER_SYSTEMS) -> list[RunResult]:
+                   powers=POWER_SYSTEMS,
+                   policy: str = "fixed", theta: float = 0.5,
+                   recharge_traces: np.ndarray | None = None
+                   ) -> list[RunResult]:
     """The full strategy x power matrix as one vectorized replay.
 
     Returns :class:`RunResult` rows interchangeable with the scalar
     ``evaluate`` (outputs are bit-identical: both execute the same plan;
     ``tests/test_fleetsim.py`` asserts field-level equivalence).
-    """
+    ``recharge_traces`` (one row per matrix cell, in strategy-major order)
+    switches dead time to trace replay; ``policy`` selects the commit
+    granularity."""
     import dataclasses
 
     plans = []
@@ -413,10 +781,11 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
             else:
                 ps = make_power_system(power)
                 plans.append(dataclasses.replace(
-                    base, power=power, recharge_s=ps.recharge_s,
+                    base, power=ps.name, recharge_s=ps.recharge_s,
                     capacity=math.inf if ps.continuous
                     else ps.cycles_per_charge))
-    outs = replay_plans(plans)
+    outs = replay_plans(plans, policy=policy, theta=theta,
+                        recharge_traces=recharge_traces)
     results = []
     for p, o in zip(plans, outs):
         if not o.completed:
@@ -427,10 +796,9 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
                            f"exceeds the {p.capacity:.0f}-cycle buffer"))
             continue
         live_s = o.live_cycles / CLOCK_HZ
-        dead_s = o.reboots * p.recharge_s
         results.append(RunResult(
             p.network, p.strategy, p.power, True, p.ref_output, live_s,
-            dead_s, live_s + dead_s, o.live_cycles * JOULES_PER_CYCLE,
+            o.dead_s, live_s + o.dead_s, o.live_cycles * JOULES_PER_CYCLE,
             o.reboots, p.max_atomic, by_class=o.by_class))
     return results
 
@@ -470,17 +838,28 @@ class FleetSweepResult:
 def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                 n_devices: int = 1000, seed: int = 0,
                 recharge_cv: float = 0.25,
-                plan: FleetPlan | None = None) -> FleetSweepResult:
+                plan: FleetPlan | None = None,
+                policy: str = "fixed", theta: float = 0.5,
+                trace_reboots: int = 0, mesh=None) -> FleetSweepResult:
     """Replay one (strategy, power) plan across ``n_devices`` simulated
     devices with per-device harvest-trace jitter, in one compiled pass.
 
     Each device wakes at a random buffer level and refills at its own
     harvest rate (lognormal recharge multiplier; the distributions live in
-    ``repro.runtime.failures`` alongside the fleet failure traces).  The
-    plan is broadcast across device lanes, so memory scales with plan size
-    + fleet size, not their product.
+    ``repro.runtime.failures`` alongside the fleet failure traces).  With
+    ``trace_reboots > 0`` each device additionally draws that many
+    per-reboot recharge times (exponential around its mean) and the scan
+    replays them reboot by reboot; beyond the trace it falls back to the
+    device's mean.  ``policy="adaptive"`` turns on energy-adaptive commit
+    batching, ``mesh`` (e.g. ``repro.launch.mesh.make_fleet_mesh()``)
+    shards the device axis across chips.  The plan is broadcast across
+    device lanes, so memory scales with plan size + fleet size, not their
+    product.
     """
-    from repro.runtime.failures import harvest_jitter, initial_charge_fraction
+    from repro.runtime.failures import (harvest_jitter,
+                                        initial_charge_fraction,
+                                        reboot_recharge_times,
+                                        recharge_trace_cumulative)
 
     t0 = time.perf_counter()
     if plan is None:
@@ -489,13 +868,80 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
     jit_mult = harvest_jitter(n_devices, seed=seed + 1, cv=recharge_cv)
     caps = np.full(n_devices, plan.capacity, np.float64)
     rem0 = np.where(np.isinf(caps), np.inf, caps * frac)
-    out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True)
-    reboots = out["reboots"]
+    tail = plan.recharge_s * jit_mult
+    cum = None
+    if trace_reboots > 0:
+        traces = reboot_recharge_times(n_devices, trace_reboots,
+                                       plan.recharge_s, seed=seed + 2)
+        cum = recharge_trace_cumulative(traces * jit_mult[:, None])
+    out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
+                      trace_cum=cum, tail_s=tail, policy=policy,
+                      theta=theta, mesh=mesh)
     return FleetSweepResult(
         strategy, power, n_devices,
         completed=(plan.max_atomic <= caps) & ~out["stuck"],
         live_s=out["live"] / CLOCK_HZ,
-        dead_s=reboots * plan.recharge_s * jit_mult,
-        reboots=reboots,
+        dead_s=out["dead"],
+        reboots=out["reboots"],
         energy_j=out["live"] * JOULES_PER_CYCLE,
+        wall_s=time.perf_counter() - t0)
+
+
+@dataclass
+class CapacitorSweepResult:
+    """One parameterized plan replayed over a (capacitors x devices) grid."""
+    strategy: str
+    capacities: np.ndarray       # (P,) cycles per charge
+    n_devices: int               # devices per capacitor
+    completed: np.ndarray        # (P, D) bool
+    live_s: np.ndarray           # (P, D)
+    dead_s: np.ndarray           # (P, D)
+    reboots: np.ndarray          # (P, D)
+    energy_j: np.ndarray         # (P, D)
+    wall_s: float
+
+    @property
+    def total_s(self) -> np.ndarray:
+        return self.live_s + self.dead_s
+
+
+def capacitor_sweep(net: SimNet, x: np.ndarray,
+                    capacities, n_devices: int = 64, seed: int = 0,
+                    recharge_cv: float = 0.25, strategy: str = "tails",
+                    plan: FleetPlan | None = None, policy: str = "fixed",
+                    theta: float = 0.5, mesh=None) -> CapacitorSweepResult:
+    """Sweep (capacitor size x device) in ONE vmapped/sharded replay of ONE
+    parameterized plan -- no per-capacitor re-extraction.
+
+    ``capacities`` are buffer sizes in cycles per charge; each gets
+    ``n_devices`` jittered lanes.  TAILS tile calibration happens inside the
+    scan per lane, so every capacitor picks its own tile (and pays its own
+    discovery burns) from the shared plan.
+    """
+    from repro.runtime.failures import harvest_jitter, initial_charge_fraction
+
+    t0 = time.perf_counter()
+    if plan is None:
+        plan = build_plan(net, x, strategy, "1mF", parametric=True)
+    if not plan.parametric:
+        raise ValueError("capacitor_sweep needs a parametric plan "
+                         "(build_plan(..., parametric=True))")
+    capacities = np.asarray(capacities, np.float64)
+    n_caps = capacities.shape[0]
+    lanes = n_caps * n_devices
+    caps = np.repeat(capacities, n_devices)
+    frac = initial_charge_fraction(lanes, seed=seed)
+    jit_mult = harvest_jitter(lanes, seed=seed + 1, cv=recharge_cv)
+    rem0 = np.where(np.isinf(caps), np.inf, caps * frac)
+    tail = np.where(np.isinf(caps), 0.0, rf_recharge_seconds(caps) * jit_mult)
+    out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
+                      tail_s=tail, policy=policy, theta=theta, mesh=mesh)
+    shape = (n_caps, n_devices)
+    return CapacitorSweepResult(
+        strategy, capacities, n_devices,
+        completed=((plan.max_atomic <= caps) & ~out["stuck"]).reshape(shape),
+        live_s=(out["live"] / CLOCK_HZ).reshape(shape),
+        dead_s=out["dead"].reshape(shape),
+        reboots=out["reboots"].reshape(shape),
+        energy_j=(out["live"] * JOULES_PER_CYCLE).reshape(shape),
         wall_s=time.perf_counter() - t0)

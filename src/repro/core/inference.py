@@ -471,6 +471,64 @@ def tails_tile_cost_from(costs, taps: int, tile: int) -> float:
             + c.fram_write + 2 * c.control)
 
 
+def tails_stage_iter_costs(stage: str, tile: int, taps: int = 1) -> dict:
+    """Per-iteration op counts of one TAILS stage at a given tile size.
+
+    The single source of the per-tile cost dicts, shared by the live segment
+    builders below and the fleet simulator's parameterized plan extraction
+    (``fleetsim.build_plan(parametric=True)``) so the two cannot diverge.
+    ``"mac"`` is one LEA FIR/vector-MAC invocation over a tile (``taps`` = kw
+    for convolution rows, 1 for FC columns); ``"init"``/``"store"`` are the
+    DMA-tiled bias fill and activation write-back.
+    """
+    if stage == "init":
+        return {"dma_setup": 1, "dma_word": tile, "fram_write": 1,
+                "control": 1}
+    if stage == "mac":
+        return {"dma_setup": 2, "dma_word": 3 * tile, "lea_invoke": 1,
+                "lea_mac": taps * tile, "shift_sw": 2 * tile,
+                "fram_write": 1, "control": 2}
+    if stage == "store":
+        return {"dma_setup": 1, "dma_word": tile, "shift_sw": tile,
+                "fram_write": 1, "control": 1}
+    raise KeyError(stage)
+
+
+def tails_conv_entry_costs(kw: int) -> dict:
+    """Segment (re-)entry cost of one conv FIR stage: DMA the kw-tap filter
+    row into LEA SRAM plus dispatch bookkeeping."""
+    return {"dma_setup": 1, "dma_word": kw, "control": 4}
+
+
+#: Segment (re-)entry cost of one FC column stage: re-load ``x[j]``.
+TAILS_FC_ENTRY_COSTS = {"fram_read": 1, "control": 4}
+
+
+def tails_tile_candidates() -> tuple[int, ...]:
+    """The Sec. 7.1 calibration ladder: ``LEA_MAX_TILE`` halved down to 1.
+
+    ``tails_tile_schedule`` walks exactly this ladder, so the candidate at
+    index ``i`` is the tile selected after ``i`` failed (charge-burning)
+    attempts.
+    """
+    out, t = [], LEA_MAX_TILE
+    while t > 1:
+        out.append(t)
+        t //= 2
+    out.append(1)
+    return tuple(out)
+
+
+def tails_tile_index(costs, capacity: float, taps: int) -> int:
+    """Index into :func:`tails_tile_candidates` that calibration selects for
+    ``capacity`` -- equal to the number of failed attempts (burns)."""
+    cands = tails_tile_candidates()
+    for i, t in enumerate(cands[:-1]):
+        if tails_tile_cost_from(costs, taps, t) <= capacity:
+            return i
+    return len(cands) - 1
+
+
 def tails_tile_cost(device: Device, taps: int, tile: int) -> float:
     return tails_tile_cost_from(device.costs, taps, tile)
 
@@ -530,16 +588,14 @@ def _tails_conv_segments(nv: NVStore, device: Device, layer: Conv2D,
     out_flat = nv.raw(out_name).reshape(co, -1)
     st = layer.stride
     act = RELU if layer.relu else (lambda v: v)
-    per_tile = {"dma_setup": 2, "dma_word": 3 * tile, "lea_invoke": 1,
-                "lea_mac": kw * tile, "shift_sw": 2 * tile,
-                "fram_write": 1, "control": 2}
+    per_tile = tails_stage_iter_costs("mac", tile, kw)
     segs: list[Segment] = []
 
     for f in range(co):
         def init(lo, hi, f=f):
             nv.raw(a1)[lo * tile:min(hi * tile, hw)] = layer.b[f]
-        segs.append(Segment(n_tiles, {"dma_setup": 1, "dma_word": tile,
-                                      "fram_write": 1, "control": 1}, init))
+        segs.append(Segment(n_tiles, tails_stage_iter_costs("init", tile),
+                            init))
         s_idx = 0
         for c in range(ci_n):
             for dy in range(kh):
@@ -559,15 +615,13 @@ def _tails_conv_segments(nv: NVStore, device: Device, layer: Conv2D,
                         accum = accum + wv * win[plo:phi]
                     wb[plo:phi] = accum
                 segs.append(Segment(n_tiles, dict(per_tile), fir,
-                                    {"dma_setup": 1, "dma_word": kw,
-                                     "control": 4}))
+                                    tails_conv_entry_costs(kw)))
         def store(lo, hi, f=f, s=ci_n * kh + 1):
             rb = nv.raw(a0 if s % 2 == 0 else a1)
             plo, phi = lo * tile, min(hi * tile, hw)
             out_flat[f, plo:phi] = act(rb[plo:phi])
-        segs.append(Segment(n_tiles, {"dma_setup": 1, "dma_word": tile,
-                                      "shift_sw": tile, "fram_write": 1,
-                                      "control": 1}, store))
+        segs.append(Segment(n_tiles, tails_stage_iter_costs("store", tile),
+                            store))
     return segs
 
 
@@ -590,8 +644,7 @@ def _tails_fc_segments(nv: NVStore, device: Device, layer: DenseFC,
     def init(lo, hi):
         plo, phi = lo * tile, min(hi * tile, m)
         nv.raw(a1)[plo:phi] = layer.b[plo:phi]
-    segs.append(Segment(n_tiles, {"dma_setup": 1, "dma_word": tile,
-                                  "fram_write": 1, "control": 1}, init))
+    segs.append(Segment(n_tiles, tails_stage_iter_costs("init", tile), init))
 
     for j in range(n):
         def acc(lo, hi, j=j, s=j + 1):
@@ -599,20 +652,15 @@ def _tails_fc_segments(nv: NVStore, device: Device, layer: DenseFC,
             wb = nv.raw(a1 if s % 2 == 0 else a0)
             plo, phi = lo * tile, min(hi * tile, m)
             wb[plo:phi] = rb[plo:phi] + layer.w[plo:phi, j] * np.float32(x[j])
-        segs.append(Segment(
-            n_tiles,
-            {"dma_setup": 2, "dma_word": 3 * tile, "lea_invoke": 1,
-             "lea_mac": tile, "shift_sw": 2 * tile, "fram_write": 1,
-             "control": 2},
-            acc, {"fram_read": 1, "control": 4}))
+        segs.append(Segment(n_tiles, tails_stage_iter_costs("mac", tile),
+                            acc, dict(TAILS_FC_ENTRY_COSTS)))
 
     def store(lo, hi, s=n + 1):
         rb = nv.raw(a0 if s % 2 == 0 else a1)
         plo, phi = lo * tile, min(hi * tile, m)
         y[plo:phi] = act(rb[plo:phi])
-    segs.append(Segment(n_tiles, {"dma_setup": 1, "dma_word": tile,
-                                  "shift_sw": tile, "fram_write": 1,
-                                  "control": 1}, store))
+    segs.append(Segment(n_tiles, tails_stage_iter_costs("store", tile),
+                        store))
     return segs
 
 

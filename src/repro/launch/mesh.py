@@ -42,6 +42,29 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     return compat_make_mesh(shape, axes)
 
 
+def make_fleet_mesh(n_shards: int | None = None):
+    """1-D mesh over host chips for sharding the fleet simulator's device
+    axis (``repro.core.fleetsim``): fleets past ~1e6 simulated devices split
+    their lanes across the mesh instead of living in one chip's memory.
+    Defaults to every available device; on a single-chip host this is a
+    ``(1,)`` mesh, which exercises the identical sharded code path."""
+    n = len(jax.devices()) if n_shards is None else n_shards
+    return compat_make_mesh((n,), ("devices",))
+
+
+def compat_shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
+
+    The experimental module is the only home of ``shard_map`` up to ~0.4.x;
+    newer releases promote it to the top-level namespace (and will eventually
+    drop the experimental alias), so probe the stable location first.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axes of a mesh (pod folds into DP)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -4,10 +4,11 @@ rescale -- the large-scale-runnability substrate."""
 from .elastic import ElasticEvent, MeshChoice, choose_mesh, simulate_elastic
 from .failures import (FleetSpec, JobSpec, RunStats, harvest_jitter,
                        initial_charge_fraction, reboot_recharge_times,
-                       simulate)
+                       recharge_trace_cumulative, simulate)
 from .straggler import StragglerSpec, efficiency, host_times, step_times
 
 __all__ = ["ElasticEvent", "FleetSpec", "JobSpec", "MeshChoice", "RunStats",
            "StragglerSpec", "choose_mesh", "efficiency", "harvest_jitter",
            "host_times", "initial_charge_fraction", "reboot_recharge_times",
-           "simulate", "simulate_elastic", "step_times"]
+           "recharge_trace_cumulative", "simulate", "simulate_elastic",
+           "step_times"]

@@ -109,6 +109,24 @@ def reboot_recharge_times(n_devices: int, n_reboots: int,
     return rng.exponential(mean_recharge_s, size=(n_devices, n_reboots))
 
 
+def recharge_trace_cumulative(traces: np.ndarray) -> np.ndarray:
+    """Prefix-sum a ``(devices, reboots)`` recharge-trace matrix into the
+    ``(devices, reboots + 1)`` float64 table the vectorized replay indexes
+    by each lane's running reboot counter (``repro.core.fleetsim``).
+
+    ``out[d, r]`` is device ``d``'s total dead time over its first ``r``
+    reboots, so the dead time of reboots ``[r0, r1)`` is one gather and a
+    subtraction inside the scan.  ``out[:, 0] == 0`` always.
+    """
+    traces = np.asarray(traces, np.float64)
+    if traces.ndim != 2:
+        raise ValueError(
+            f"recharge trace must be (devices, reboots), got {traces.shape}")
+    out = np.zeros((traces.shape[0], traces.shape[1] + 1), np.float64)
+    np.cumsum(traces, axis=1, out=out[:, 1:])
+    return out
+
+
 def simulate(policy: str, fleet: FleetSpec, job: JobSpec, interval: int = 50,
              seed: int = 0, horizon_factor: float = 50.0) -> RunStats:
     """Run the job under a fault-tolerance policy against a failure trace."""

@@ -1,0 +1,326 @@
+"""The three run-time decisions inside the replay scan (fleetsim PR 2).
+
+1. TAILS tile selection from the carried capacitor (parameterized plans).
+2. Commit granularity from the carried buffer level (policy axis).
+3. Per-reboot dead time from a recharge-trace matrix indexed by the
+   running reboot counter.
+
+Plus the charge-order attribution of torn partial burns and the
+``shard_map`` wiring of the device axis.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (POWER_SYSTEMS, STRATEGIES, Conv2D, DenseFC, Device,
+                        MaxPool2D, PowerFailure, SimNet, SparseFC,
+                        build_plan, capacitor_sweep, custom_power_system,
+                        evaluate, fleet_evaluate, fleet_sweep,
+                        make_power_system, replay_plans)
+from repro.core.energy import CLOCK_HZ, LEA_COSTS, SOFTWARE_COSTS
+from repro.core.inference import (run_naive, tails_tile_candidates,
+                                  tails_tile_cost_from, tails_tile_index,
+                                  tails_tile_schedule)
+
+
+@pytest.fixture(scope="module")
+def small_net():
+    rng = np.random.default_rng(0)
+    w1 = rng.normal(size=(3, 1, 3, 3)).astype(np.float32)
+    wfc = (rng.normal(size=(8, 75)) * 0.1).astype(np.float32)
+    wsp = (rng.normal(size=(5, 8)) * (rng.random((5, 8)) < 0.35)
+           ).astype(np.float32)
+    net = SimNet([
+        Conv2D(w1, rng.normal(size=3).astype(np.float32)),
+        MaxPool2D(2),
+        DenseFC(wfc, rng.normal(size=8).astype(np.float32)),
+        SparseFC(wsp, rng.normal(size=5).astype(np.float32), relu=False),
+    ], input_shape=(1, 12, 12), name="decisions")
+    x = rng.normal(size=(1, 12, 12)).astype(np.float32)
+    return net, x
+
+
+def _restamp(plan, power):
+    ps = make_power_system(power)
+    return dataclasses.replace(
+        plan, power=ps.name, recharge_s=ps.recharge_s,
+        capacity=math.inf if ps.continuous else ps.cycles_per_charge)
+
+
+# ==========================================================================
+# Decision 3: trace-driven dead time
+# ==========================================================================
+
+def test_constant_trace_matrix_bit_exact(small_net):
+    """Trace-driven replay with every trace entry equal to ``recharge_s``
+    reduces to the closed-form model: completed/reboots/energy/outputs
+    bit-exact vs the scalar simulator across the 6-strategy x 4-power
+    matrix, dead time to float tolerance."""
+    net, x = small_net
+    n_reboots = 3000
+    means = [make_power_system(p).recharge_s
+             for _s in STRATEGIES for p in POWER_SYSTEMS]
+    traces = np.tile(np.asarray(means)[:, None], (1, n_reboots))
+    rows = fleet_evaluate(net, x, recharge_traces=traces)
+    for r in rows:
+        s = evaluate(net, x, r.strategy, r.power)
+        assert r.completed == s.completed, (r.strategy, r.power)
+        if not s.completed:
+            continue
+        assert r.reboots == s.reboots == pytest.approx(s.reboots)
+        assert r.reboots < n_reboots          # trace actually covered them
+        assert r.energy_j == s.energy_j, (r.strategy, r.power)
+        np.testing.assert_array_equal(r.output, s.output)
+        assert np.isclose(r.dead_time_s, s.dead_time_s, rtol=1e-9,
+                          atol=1e-12), (r.strategy, r.power)
+
+
+def test_trace_tail_fallback(small_net):
+    """Reboots beyond the trace matrix pay the lane's mean recharge."""
+    net, x = small_net
+    plan = build_plan(net, x, "tile-8", "100uF")
+    ref = replay_plans([plan])[0]
+    assert ref.reboots > 4
+    short = np.full((1, 2), 7.0)          # 2 traced reboots at 7 s each
+    out = replay_plans([plan], recharge_traces=short)[0]
+    assert out.reboots == ref.reboots
+    expect = 2 * 7.0 + (ref.reboots - 2) * plan.recharge_s
+    assert out.dead_s == pytest.approx(expect, rel=1e-12)
+
+
+def test_fleet_sweep_trace_replay(small_net):
+    """Per-device trace replay: same work, per-device dead time drawn from
+    the exponential trace matrix rather than the closed form."""
+    net, x = small_net
+    base = fleet_sweep(net, x, "sonic", "1mF", n_devices=64, seed=3)
+    traced = fleet_sweep(net, x, "sonic", "1mF", n_devices=64, seed=3,
+                         trace_reboots=200)
+    assert traced.completed.all()
+    np.testing.assert_array_equal(base.live_s, traced.live_s)
+    np.testing.assert_array_equal(base.reboots, traced.reboots)
+    assert not np.allclose(base.dead_s, traced.dead_s)
+    assert traced.dead_s.std() > 0
+    # exponential per-reboot draws around the same mean: the fleet-wide
+    # average dead time stays in the same ballpark
+    assert 0.3 < traced.dead_s.mean() / base.dead_s.mean() < 3.0
+
+
+# ==========================================================================
+# Decision 1: per-lane TAILS tile selection
+# ==========================================================================
+
+def test_tile_index_matches_schedule():
+    """The ladder index (= in-scan selection = burn count) agrees with the
+    scalar calibration walk for capacities spanning the whole ladder."""
+    cands = tails_tile_candidates()
+    assert cands[0] > cands[-1] == 1
+    for taps in (1, 3, 5):
+        for cap in (math.inf, 1e7, 1e5, 2e4, 9e3, 3e3, 1e3, 500, 250, 100):
+            tile, burns = tails_tile_schedule(LEA_COSTS, cap, taps)
+            idx = tails_tile_index(LEA_COSTS, cap, taps)
+            assert cands[idx] == tile, (taps, cap)
+            assert idx == burns, (taps, cap)
+            if cap >= tails_tile_cost_from(LEA_COSTS, taps, 1):
+                assert tails_tile_cost_from(LEA_COSTS, taps, tile) <= cap
+
+
+@pytest.mark.parametrize("power", POWER_SYSTEMS)
+def test_parametric_matches_fixed_and_scalar(small_net, power):
+    """One parameterized plan restamped per power is bit-identical to the
+    plan extracted for that power -- and both match the scalar simulator."""
+    net, x = small_net
+    pplan = build_plan(net, x, "tails", "1mF", parametric=True)
+    fixed = build_plan(net, x, "tails", power)
+    param = _restamp(pplan, power)
+    a = replay_plans([fixed])[0]
+    b = replay_plans([param])[0]
+    assert a.completed == b.completed
+    assert a.live_cycles == b.live_cycles
+    assert a.reboots == b.reboots
+    assert a.by_class == b.by_class
+    s = evaluate(net, x, "tails", power)
+    assert b.completed == s.completed
+    assert b.reboots == s.reboots
+    assert abs(b.live_cycles / CLOCK_HZ - s.live_time_s) * CLOCK_HZ < 1e-6
+
+
+def test_parametric_matches_fixed_custom_capacitors(small_net):
+    """Tile selection inside the scan equals per-capacity extraction for
+    arbitrary (unnamed) capacitor sizes."""
+    net, x = small_net
+    pplan = build_plan(net, x, "tails", "1mF", parametric=True)
+    for cap in (3e3, 8e3, 2e4, 7e4, 3e5, 2e6):
+        ps = custom_power_system(cap)
+        fixed = build_plan(net, x, "tails", ps)
+        param = _restamp(pplan, ps)
+        a = replay_plans([fixed])[0]
+        b = replay_plans([param])[0]
+        assert a.completed == b.completed, cap
+        assert a.live_cycles == b.live_cycles, cap
+        assert a.reboots == b.reboots, cap
+        assert a.by_class == b.by_class, cap
+
+
+def test_capacitor_sweep_one_call(small_net):
+    """(devices x capacitor sizes) in one vmapped replay of one plan: the
+    smaller the capacitor, the more reboots and calibration burns."""
+    net, x = small_net
+    caps = np.asarray([6e3, 5e4, 1e6, 5e7])
+    r = capacitor_sweep(net, x, caps, n_devices=16, seed=1)
+    assert r.completed.all()
+    assert r.reboots.shape == (4, 16)
+    mean_rb = r.reboots.mean(axis=1)
+    assert mean_rb[0] > mean_rb[-1]
+    assert (np.diff(mean_rb) <= 0).all()
+    # the two extremes calibrate different tiles for the conv taps
+    kw = net.layers[0].w.shape[3]
+    assert tails_tile_index(LEA_COSTS, caps[0], kw) > \
+        tails_tile_index(LEA_COSTS, caps[-1], kw)
+    # energy: smaller buffers tear more work, so live energy is monotone too
+    assert r.energy_j.mean(axis=1)[0] >= r.energy_j.mean(axis=1)[-1]
+
+
+# ==========================================================================
+# Decision 2: energy-adaptive commit granularity
+# ==========================================================================
+
+@pytest.mark.parametrize("strategy", ("sonic", "tails", "tile-8", "naive"))
+def test_adaptive_above_threshold_never_reached_is_fixed(small_net, strategy):
+    """theta > 1 means no finite lane ever batches: the adaptive compile
+    must be bit-identical to the fixed policy."""
+    net, x = small_net
+    plan = build_plan(net, x, strategy, "100uF")
+    f = replay_plans([plan])[0]
+    a = replay_plans([plan], policy="adaptive", theta=1.5)[0]
+    assert (f.live_cycles, f.reboots, f.completed) == \
+        (a.live_cycles, a.reboots, a.completed)
+    assert f.by_class == a.by_class
+
+
+def test_adaptive_continuous_saving_is_closed_form(small_net):
+    """On continuous power every loop row batches its cursor commits to one
+    write: the saving is exactly sum((n - 1) * commit_cycles)."""
+    net, x = small_net
+    plan = build_plan(net, x, "sonic", "continuous")
+    f = replay_plans([plan])[0]
+    a = replay_plans([plan], policy="adaptive", theta=0.5)[0]
+    loops = plan.n > 0
+    saving = float(np.sum((plan.n[loops] - 1.0) * plan.commit_cycles[loops]))
+    assert saving > 0
+    assert a.live_cycles == pytest.approx(f.live_cycles - saving, rel=1e-12)
+
+
+def test_adaptive_dominates_fixed_on_harvested_power(small_net):
+    """Deterministic chunk math makes batching a strict win when eligible:
+    fewer commit cycles, no added reboots.  (The policy's *risk* -- losing
+    un-committed work to surprise failures -- needs stochastic failure
+    injection, a noted follow-on.)"""
+    net, x = small_net
+    for strategy in ("sonic", "tails"):
+        for power in ("100uF", "1mF"):
+            plan = build_plan(net, x, strategy, power)
+            f = replay_plans([plan])[0]
+            a = replay_plans([plan], policy="adaptive", theta=0.25)[0]
+            assert a.completed
+            assert a.live_cycles <= f.live_cycles, (strategy, power)
+            assert a.reboots <= f.reboots, (strategy, power)
+    with pytest.raises(ValueError):
+        replay_plans([plan], policy="belief")
+
+
+def test_adaptive_fleet_sweep(small_net):
+    """The policy axis composes with fleet sweeps: per-device wake levels
+    straddle the threshold, so some lanes batch and some do not."""
+    net, x = small_net
+    fixed = fleet_sweep(net, x, "sonic", "1mF", n_devices=128, seed=5)
+    adap = fleet_sweep(net, x, "sonic", "1mF", n_devices=128, seed=5,
+                       policy="adaptive", theta=0.5)
+    assert adap.completed.all()
+    assert (adap.energy_j <= fixed.energy_j + 1e-12).all()
+    assert adap.energy_j.sum() < fixed.energy_j.sum()
+
+
+# ==========================================================================
+# Torn partial-burn attribution by charge order
+# ==========================================================================
+
+def test_torn_burn_attributed_by_charge_order():
+    """A lane that dies before affording a row's entry books the burned
+    prefix to the entry ops' own classes, in charge order -- matching the
+    scalar device's per-op accounting exactly (single-layer naive, so the
+    scalar charge sequence is one cost dict)."""
+    rng = np.random.default_rng(2)
+    net = SimNet([DenseFC((rng.normal(size=(12, 40)) * 0.1
+                           ).astype(np.float32),
+                          rng.normal(size=12).astype(np.float32),
+                          relu=False)], input_shape=(40,), name="torn")
+    x = rng.normal(size=(40,)).astype(np.float32)
+    plan = build_plan(net, x, "naive", "1mF")
+    e = float(plan.entry_cycles[0])
+    frac = 0.6 * e / plan.capacity        # wake below the entry cost
+    out = replay_plans([plan], init_frac=[frac])[0]
+
+    # scalar: same wake level, retry loop, per-op accounting
+    dev = Device(make_power_system("1mF"), SOFTWARE_COSTS)
+    dev._remaining = plan.capacity * frac
+    while True:
+        try:
+            run_naive(net, x, dev)
+            break
+        except PowerFailure:
+            dev.reboot()
+    assert out.reboots == dev.stats.reboots == 1
+    assert out.live_cycles == pytest.approx(dev.stats.live_cycles, rel=1e-12)
+    for op, cyc in dev.stats.by_class.items():
+        assert out.by_class.get(op, 0.0) == pytest.approx(cyc, rel=1e-12), op
+    # nothing spurious ended up in control (no drains in this scenario)
+    assert set(out.by_class) <= set(dev.stats.by_class) | {"control"}
+    assert out.by_class.get("control", 0.0) == \
+        pytest.approx(dev.stats.by_class.get("control", 0.0), abs=1e-6)
+
+
+def test_torn_totals_remain_exact(small_net):
+    """Across all strategies at a sub-entry wake level, the per-class
+    vector still sums exactly to the lane's live cycles."""
+    net, x = small_net
+    for strategy in STRATEGIES:
+        plan = build_plan(net, x, strategy, "1mF")
+        out = replay_plans([plan], init_frac=[1e-4])[0]
+        assert sum(out.by_class.values()) == \
+            pytest.approx(out.live_cycles, rel=1e-12), strategy
+
+
+# ==========================================================================
+# shard_map over the device axis
+# ==========================================================================
+
+def test_shard_map_matches_vmap(small_net):
+    """The sharded replay (1-chip mesh on CPU, with lane padding exercised
+    by a non-multiple fleet size) is bit-identical to the plain vmap."""
+    from repro.launch.mesh import make_fleet_mesh
+
+    net, x = small_net
+    mesh = make_fleet_mesh()
+    plain = fleet_sweep(net, x, "sonic", "1mF", n_devices=37, seed=3)
+    shard = fleet_sweep(net, x, "sonic", "1mF", n_devices=37, seed=3,
+                        mesh=mesh)
+    np.testing.assert_array_equal(plain.live_s, shard.live_s)
+    np.testing.assert_array_equal(plain.reboots, shard.reboots)
+    np.testing.assert_array_equal(plain.completed, shard.completed)
+    np.testing.assert_allclose(plain.dead_s, shard.dead_s, rtol=1e-12)
+
+
+def test_shard_map_capacitor_sweep(small_net):
+    """Sharding composes with the parameterized capacitor sweep."""
+    from repro.launch.mesh import make_fleet_mesh
+
+    net, x = small_net
+    caps = np.asarray([5e4, 1e6])
+    plain = capacitor_sweep(net, x, caps, n_devices=9, seed=1)
+    shard = capacitor_sweep(net, x, caps, n_devices=9, seed=1,
+                            mesh=make_fleet_mesh())
+    np.testing.assert_array_equal(plain.reboots, shard.reboots)
+    np.testing.assert_array_equal(plain.live_s, shard.live_s)

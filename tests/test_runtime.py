@@ -7,7 +7,9 @@ import pytest
 from repro.optim.compress_grads import (compress_int8, compressed_allreduce_ref,
                                         decompress_int8)
 from repro.runtime import (ElasticEvent, FleetSpec, JobSpec, StragglerSpec,
-                           choose_mesh, efficiency, simulate,
+                           choose_mesh, efficiency, harvest_jitter,
+                           initial_charge_fraction, reboot_recharge_times,
+                           recharge_trace_cumulative, simulate,
                            simulate_elastic)
 
 
@@ -73,6 +75,66 @@ def test_elastic_simulation_counts_rescales():
     out = simulate_elastic(events, tp=16, step_s=2.0, horizon_s=4000)
     assert out["rescales"] == 2       # dp 16 -> 15 -> 16 (last is a no-op)
     assert out["batches"] > 0
+
+
+# --------------------------------------------------------------------------
+# Harvest-trace distributions (inputs of the vectorized device simulator)
+# --------------------------------------------------------------------------
+
+def test_harvest_jitter_distribution():
+    """Lognormal recharge multipliers: mean 1, coefficient of variation as
+    requested, strictly positive, deterministic per seed."""
+    for cv in (0.1, 0.25, 0.6):
+        j = harvest_jitter(200_000, seed=11, cv=cv)
+        assert j.shape == (200_000,) and j.dtype == np.float64
+        assert (j > 0).all()
+        assert j.mean() == pytest.approx(1.0, abs=0.01)
+        assert j.std() / j.mean() == pytest.approx(cv, rel=0.05)
+    np.testing.assert_array_equal(harvest_jitter(64, seed=3),
+                                  harvest_jitter(64, seed=3))
+    assert not np.array_equal(harvest_jitter(64, seed=3),
+                              harvest_jitter(64, seed=4))
+
+
+def test_initial_charge_fraction_distribution():
+    """Wake levels are uniform over (0.05, 1.0): devices never wake fully
+    drained, and are not phase-aligned."""
+    f = initial_charge_fraction(200_000, seed=5)
+    assert f.shape == (200_000,) and f.dtype == np.float64
+    assert f.min() >= 0.05 and f.max() <= 1.0
+    assert f.mean() == pytest.approx((0.05 + 1.0) / 2, abs=0.01)
+    assert f.std() == pytest.approx((1.0 - 0.05) / np.sqrt(12), rel=0.03)
+
+
+def test_reboot_recharge_times_distribution():
+    """Exponential per-reboot recharge traces: requested (devices, reboots)
+    shape, mean equal to the capacitor's mean recharge, CV ~ 1."""
+    mean_s = 0.3125
+    t = reboot_recharge_times(2000, 150, mean_s, seed=9)
+    assert t.shape == (2000, 150) and t.dtype == np.float64
+    assert (t > 0).all()
+    assert t.mean() == pytest.approx(mean_s, rel=0.02)
+    assert t.std() / t.mean() == pytest.approx(1.0, rel=0.05)   # exponential
+    # per-device means spread around the global mean (trace, not constant)
+    assert t.mean(axis=1).std() > 0
+
+
+def test_recharge_trace_cumulative_contract():
+    """The replay-facing prefix-sum table: (D, R+1) float64, zero first
+    column, rows cumulative, exact for constant traces."""
+    t = reboot_recharge_times(8, 20, 2.0, seed=1)
+    cum = recharge_trace_cumulative(t)
+    assert cum.shape == (8, 21) and cum.dtype == np.float64
+    np.testing.assert_array_equal(cum[:, 0], np.zeros(8))
+    np.testing.assert_array_equal(cum[:, 1:], np.cumsum(t, axis=1))
+    np.testing.assert_allclose(np.diff(cum, axis=1), t, rtol=1e-9,
+                               atol=1e-12)
+    const = recharge_trace_cumulative(np.full((3, 4), 0.5))
+    np.testing.assert_array_equal(const[0], [0.0, 0.5, 1.0, 1.5, 2.0])
+    with pytest.raises(ValueError):
+        recharge_trace_cumulative(np.zeros(5))        # 1-D is a bug
+    with pytest.raises(ValueError):
+        recharge_trace_cumulative(np.zeros((2, 2, 2)))
 
 
 def test_int8_compression_error_bounded():
