@@ -32,6 +32,7 @@ from repro.runtime import (ElasticEvent, FleetSpec, JobSpec,  # noqa: E402
                            simulate_elastic)
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_fleet.json"
+HISTORY_PATH = Path(__file__).resolve().parents[1] / "BENCH_history.jsonl"
 
 
 def policy_sweep() -> list[tuple]:
@@ -185,35 +186,156 @@ def tails_capacitor_sweep(n_devices_per_cap: int = 128,
         f"completed={r.completed.sum(axis=1).tolist()}")]
 
 
-def write_bench(fleet: dict, capsweep: dict,
-                path: Path = BENCH_PATH) -> None:
-    path.write_text(json.dumps({
-        "schema": 1,
+def adaptive_risk_frontier(n_devices: int = 256,
+                           thetas=(0.25, 0.5, 0.75, 1.0, 1.5),
+                           cvs=(0.0, 0.2, 0.4, 0.8),
+                           charge_reboots: int = 128,
+                           bench: dict | None = None) -> list[tuple]:
+    """The theta x charge-jitter frontier of the energy-adaptive commit
+    policy (Islam et al. 2025): batched commits save cursor writes when
+    charges behave, and pay ``wasted_cycles`` of rollback re-execution when
+    a surprise-short charge tears the uncommitted chunk.
+
+    SONIC on a capacitor the inference spans ~8 times (the risk regime:
+    every run crosses several charge boundaries), per-charge capacities
+    drawn from ``charge_capacity_jitter``.  One plan, one compiled scan per
+    (policy, stochastic) shape -- theta is a traced operand, so the whole
+    theta axis reuses a single compilation (pinned by
+    ``tests/test_fleet_replay_decisions.py``).
+    """
+    from repro.core import build_plan, custom_power_system
+    from repro.core.energy import JOULES_PER_CYCLE
+
+    net, x = _device_net()
+    ps = custom_power_system(1e5)
+    plan = build_plan(net, x, "sonic", ps)
+    charges = plan.total_cycles / plan.capacity
+    t0 = time.perf_counter()
+    grid = []
+    fixed_energy = {}
+    for cv in cvs:
+        fixed = fleet_sweep(net, x, "sonic", ps, n_devices=n_devices,
+                            seed=7, plan=plan, policy="fixed",
+                            charge_cv=cv, charge_reboots=charge_reboots)
+        f_energy = fixed.energy_j.mean()
+        fixed_energy[f"{cv:g}"] = round(float(f_energy), 9)
+        for theta in thetas:
+            r = fleet_sweep(net, x, "sonic", ps, n_devices=n_devices,
+                            seed=7, plan=plan, policy="adaptive",
+                            theta=theta, charge_cv=cv,
+                            charge_reboots=charge_reboots)
+            grid.append({
+                "theta": theta,
+                "charge_cv": cv,
+                "mean_wasted_cycles": round(float(
+                    r.wasted_cycles.mean()), 1),
+                "adaptive_energy_ratio": round(float(
+                    r.energy_j.mean() / f_energy), 4),
+                "completed": int(r.completed.sum()),
+            })
+    wall = time.perf_counter() - t0
+    worst = max(grid, key=lambda g: g["adaptive_energy_ratio"])
+    best = min(grid, key=lambda g: g["adaptive_energy_ratio"])
+    max_wasted = max(g["mean_wasted_cycles"] for g in grid)
+    if bench is not None:
+        bench.update({
+            "strategy": "sonic",
+            "capacitor_cycles": plan.capacity,
+            "charges_per_inference": round(charges, 2),
+            "devices": n_devices,
+            "charge_reboots": charge_reboots,
+            "thetas": list(thetas),
+            "charge_cvs": list(cvs),
+            "grid": grid,
+            "fixed_energy_j_per_cv": fixed_energy,
+            "commit_savings_cycles": round(float(
+                np.sum((plan.n[plan.n > 0] - 1.0)
+                       * plan.commit_cycles[plan.n > 0])), 1),
+            "wall_s": round(wall, 3),
+        })
+    rows = [(
+        "fleetsim/adaptive_risk_max_wasted_cycles", max_wasted,
+        f"theta x cv grid {len(thetas)}x{len(cvs)} on {n_devices} devices, "
+        f"{charges:.1f} charges/inference; worst energy ratio "
+        f"{worst['adaptive_energy_ratio']} at theta={worst['theta']} "
+        f"cv={worst['charge_cv']}; best {best['adaptive_energy_ratio']} at "
+        f"theta={best['theta']} cv={best['charge_cv']}; wall={wall:.2f}s")]
+    for cv in cvs:
+        sub = [g for g in grid if g["charge_cv"] == cv
+               and g["theta"] <= 1.0]
+        pays = all(g["adaptive_energy_ratio"] < 1.0 for g in sub)
+        rows.append((
+            f"fleetsim/adaptive_pays_at_cv{cv:g}", int(pays),
+            "adaptive (theta<=1) mean energy below fixed at this jitter; "
+            f"wasted={max(g['mean_wasted_cycles'] for g in sub)} cycles "
+            f"(1 cycle = {JOULES_PER_CYCLE:.1e} J)"))
+    return rows
+
+
+def write_bench(fleet: dict, capsweep: dict, frontier: dict,
+                path: Path = BENCH_PATH,
+                history: Path = HISTORY_PATH) -> None:
+    payload = {
+        "schema": 2,
         "generated_unix": round(time.time(), 1),
         "fleet": fleet,
         "tails_capacitor_sweep": capsweep,
-    }, indent=1) + "\n")
+        "adaptive_risk_frontier": frontier,
+    }
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    # One compact line per run appended to the cross-PR trajectory (the
+    # ROADMAP asks for a collected history now that data points exist).
+    any_fleet = next(iter(fleet.values()), {})
+    line = {
+        "t": payload["generated_unix"],
+        "schema": payload["schema"],
+        # run config, so smoke lines (tiny warm fleets) are never compared
+        # against full-run lines in the trajectory
+        "devices": any_fleet.get("devices"),
+        "warm": any_fleet.get("warm"),
+        "speedup_vs_scalar": {s: b.get("speedup_vs_scalar")
+                              for s, b in fleet.items()},
+        "capsweep_lanes_per_sec": capsweep.get("lanes_per_sec"),
+        "risk_max_wasted_cycles": max(
+            (g["mean_wasted_cycles"] for g in frontier.get("grid", [])),
+            default=None),
+        # theta > 1 never batches (ratio identically 1.0), so track only
+        # thetas that can move as the policy improves or degrades
+        "risk_worst_energy_ratio": max(
+            (g["adaptive_energy_ratio"] for g in frontier.get("grid", [])
+             if g["theta"] <= 1.0),
+            default=None),
+    }
+    with history.open("a") as fh:
+        fh.write(json.dumps(line) + "\n")
 
 
 def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
                    n_devices_per_cap: int = 128,
-                   warm: bool = False) -> tuple[list, dict, dict]:
-    """The fleetsim benchmark pair + its BENCH_fleet.json payloads -- the
+                   frontier_devices: int = 256,
+                   thetas=(0.25, 0.5, 0.75, 1.0, 1.5),
+                   cvs=(0.0, 0.2, 0.4, 0.8),
+                   warm: bool = False) -> tuple[list, dict, dict, dict]:
+    """The fleetsim benchmark trio + its BENCH_fleet.json payloads -- the
     single composition shared by :func:`run` and the CLI so the recorded
     schema cannot drift between them."""
     fleet_bench: dict = {}
     cap_bench: dict = {}
+    risk_bench: dict = {}
     rows = (device_fleet_sweep(n_devices=n_devices,
                                scalar_sample=scalar_sample,
                                bench=fleet_bench, warm=warm)
             + tails_capacitor_sweep(n_devices_per_cap=n_devices_per_cap,
-                                    bench=cap_bench))
-    write_bench(fleet_bench, cap_bench)
-    return rows, fleet_bench, cap_bench
+                                    bench=cap_bench)
+            + adaptive_risk_frontier(n_devices=frontier_devices,
+                                     thetas=thetas, cvs=cvs,
+                                     bench=risk_bench))
+    write_bench(fleet_bench, cap_bench, risk_bench)
+    return rows, fleet_bench, cap_bench, risk_bench
 
 
 def run() -> list[tuple]:
-    sim_rows, _, _ = _fleetsim_rows()
+    sim_rows, _, _, _ = _fleetsim_rows()
     return (policy_sweep() + straggler_sweep() + elastic_sweep() + sim_rows)
 
 
@@ -226,18 +348,30 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.smoke:
-        rows, fleet_bench, _ = _fleetsim_rows(
-            n_devices=200, scalar_sample=2, n_devices_per_cap=16, warm=True)
+        rows, fleet_bench, _, risk_bench = _fleetsim_rows(
+            n_devices=200, scalar_sample=2, n_devices_per_cap=16,
+            frontier_devices=64, thetas=(0.5, 1.5), cvs=(0.0, 0.6),
+            warm=True)
     else:
-        rows, fleet_bench, _ = _fleetsim_rows()
+        rows, fleet_bench, _, risk_bench = _fleetsim_rows()
     for n, v, d in rows:
         print(f'{n},{v},"{d}"')
-    print(f"wrote {BENCH_PATH}")
+    print(f"wrote {BENCH_PATH} (+1 line in {HISTORY_PATH.name})")
     slow = {s: b["speedup_vs_scalar"] for s, b in fleet_bench.items()
             if b["speedup_vs_scalar"] <= 1.0}
     if slow:
         raise SystemExit(
             f"replay no faster than the scalar simulator: {slow}")
+    # risk-model gate: deterministic charges never waste; jittered charges
+    # under batched commits must (that is the whole point of the model)
+    det = [g for g in risk_bench["grid"]
+           if g["charge_cv"] == 0.0]
+    jit = [g for g in risk_bench["grid"]
+           if g["charge_cv"] > 0 and g["theta"] <= 1.0]
+    if any(g["mean_wasted_cycles"] != 0.0 for g in det):
+        raise SystemExit(f"cv=0 must not waste: {det}")
+    if jit and not any(g["mean_wasted_cycles"] > 0.0 for g in jit):
+        raise SystemExit(f"jittered batched commits wasted nothing: {jit}")
     print("replay >= scalar speedup: "
           + ", ".join(f"{s}={b['speedup_vs_scalar']}x"
                       for s, b in fleet_bench.items()))

@@ -3,12 +3,14 @@ it on the simulated energy-harvesting device under all six implementations
 and four power systems (Fig. 9's experiment) -- and then across a jittered
 1000-device fleet.
 
-Both experiments run on the vectorized replay engine
+All experiments run on the vectorized replay engine
 (``repro.core.fleetsim``): the 6 x 4 matrix is ONE vmapped call
-(``fleet_evaluate``, bit-exact vs the scalar ``evaluate``), and the fleet
+(``fleet_evaluate``, bit-exact vs the scalar ``evaluate``), the fleet
 sweep replays the same plan across 1000 simulated devices with per-device
 wake charges and per-reboot recharge traces in another -- seconds of wall
-clock, where looping the scalar simulator would take minutes.
+clock, where looping the scalar simulator would take minutes -- and a
+final risk sweep gives every charge a stochastic capacity to show where
+the energy-adaptive commit policy's batched cursor writes stop paying.
 
   PYTHONPATH=src python examples/intermittent_mnist.py
 """
@@ -24,6 +26,7 @@ import numpy as np  # noqa: E402
 from repro.compress import DEVICE_WEIGHT_BYTES  # noqa: E402
 from repro.core import (POWER_SYSTEMS, STRATEGIES,  # noqa: E402
                         fleet_evaluate, fleet_sweep)
+from repro.core.energy import JOULES_PER_CYCLE  # noqa: E402
 from repro.data import make_task  # noqa: E402
 from repro.models.dnn import mnist_net  # noqa: E402
 
@@ -78,6 +81,38 @@ def main():
               f"wall={s['wall_s']:.2f}s")
     print("\n(one compiled scan per strategy -- the scalar simulator at "
           f"~tens of ms/device would need minutes for {2 * n} runs.)")
+
+    # Risk sweep: the energy-adaptive commit policy (batch the per-
+    # iteration cursor write to one commit per charge chunk) is a strict
+    # win while every charge delivers exactly its nominal budget.  Give
+    # each charge a stochastic capacity instead and every mis-predicted
+    # chunk dies before its commit, rolls back to the last cursor, and
+    # re-executes -- the wasted_cycles channel.  Where that waste eats the
+    # commit savings, adaptive batching stops paying.
+    from benchmarks.paper_figs import sonic_risk_plan
+    plan, ps = sonic_risk_plan(net, x)
+    nd = 256
+    print(f"\nadaptive-commit risk on a {ps.cycles_per_charge:.0f}-cycle "
+          f"capacitor ({plan.total_cycles / ps.cycles_per_charge:.1f} "
+          f"charges/inference, {nd} devices, theta=0.5):")
+    print(f"  {'charge cv':>9s} {'fixed uJ':>9s} {'adapt uJ':>9s} "
+          f"{'wasted cyc':>10s} {'saving eaten':>12s}")
+    for cv in (0.0, 0.2, 0.4, 0.8):
+        fx = fleet_sweep(net, x, "sonic", ps, n_devices=nd, seed=42,
+                         plan=plan, charge_cv=cv, charge_reboots=128)
+        ad = fleet_sweep(net, x, "sonic", ps, n_devices=nd, seed=42,
+                         plan=plan, policy="adaptive", theta=0.5,
+                         charge_cv=cv, charge_reboots=128)
+        f_uj = fx.energy_j.mean() * 1e6
+        a_uj = ad.energy_j.mean() * 1e6
+        waste = ad.wasted_cycles.mean()
+        gross = (f_uj - a_uj) * 1e-6 / JOULES_PER_CYCLE + waste  # cycles
+        eaten = waste / gross if gross > 0 else float("inf")
+        print(f"  {cv:9.1f} {f_uj:9.3f} {a_uj:9.3f} {waste:10.0f} "
+              f"{eaten:11.0%}")
+    print("(SONIC's per-row chunks bound each rollback to one row's "
+          "work, so batching still pays here; benchmarks/fleet.py records "
+          "the full theta x cv frontier in BENCH_fleet.json.)")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ whole Fig. 9 strategy x power matrix -- and million-device fleet sweeps with
 per-device harvest traces -- run in one compiled ``vmap`` (optionally
 ``shard_map``) pass.
 
-The plan is a *parameterized IR*: rows describe the work, while three
+The plan is a *parameterized IR*: rows describe the work, while four
 run-time decisions are taken per device lane **inside** ``_scan_step``:
 
 1. **TAILS tile selection** -- parameterized rows carry a per-candidate
@@ -27,18 +27,38 @@ run-time decisions are taken per device lane **inside** ``_scan_step``:
 2. **Commit granularity** -- rows carry the per-iteration commit portion of
    their cost (``commit_cycles``/``commit_class``, the loop-cursor FRAM
    write).  Under ``policy="adaptive"`` (the energy-adaptive checkpoint-free
-   policy of Islam et al. 2025, arXiv:2503.06663) each row branches on the
-   carried buffer level: above ``theta * capacity`` the lane batches commits
-   to one cursor write per charge chunk instead of one per iteration;
-   below it (or under ``policy="fixed"``, the default) it keeps the paper's
-   per-iteration commit.  ``policy`` is a replay-time axis orthogonal to the
-   six strategies.
+   policy of Islam et al. 2025, arXiv:2503.06663) every *charge* branches on
+   the measured buffer level: above ``theta * capacity`` the lane batches
+   commits to one cursor write per charge chunk instead of one per
+   iteration; below it (or under ``policy="fixed"``, the default) it keeps
+   the paper's per-iteration commit.  The threshold is re-evaluated per
+   charge -- the first visit of a row sees the carried buffer, every retry
+   visit wakes at a (believed-)full buffer, so retries batch iff
+   ``theta <= 1``.  ``policy`` is a replay-time axis orthogonal to the six
+   strategies; ``theta`` is a traced operand, so sweeping it reuses one
+   compilation.
 3. **Recharge dead time** -- the scan indexes a per-lane cumulative
    recharge-trace table (``runtime.failures.recharge_trace_cumulative`` over
    ``reboot_recharge_times``) by the lane's running reboot counter, so each
    reboot pays its *own* measured dead time; reboots past the trace fall
    back to the lane's mean (``tail_s``).  With no trace the same gather
    degenerates to the closed-form ``reboots x recharge_s``.
+4. **Stochastic per-charge capacity** -- with a per-lane charge-capacity
+   trace (``runtime.failures.charge_capacity_jitter`` prefix-summed by
+   ``charge_trace_cumulative``), the closed-form ``ceil(remaining /
+   affordable)`` reboot collapse is replaced by a charge-by-charge inner
+   loop: refill ``r`` (indexed by the running reboot counter) delivers the
+   traced capacity instead of the nominal one, while the lane keeps
+   *believing* the nominal budget.  A surprise-short charge under batched
+   commits dies before the chunk's cursor write lands, rolls back to the
+   last committed cursor, and re-executes the lost iterations -- accounted
+   in the ``wasted_cycles`` channel (exactly zero under per-iteration
+   commits, which lose at most the torn partial iteration the deterministic
+   model already burns).  A surprise-long charge's excess is drained: the
+   lane cannot schedule work against energy it did not predict.  Charges
+   past the trace deliver the nominal capacity.  This is the risk side of
+   the energy-adaptive trade-off: with deterministic charges batching is a
+   strict win, with jitter it pays for every mis-predicted commit.
 
 Plan rows and the paper's Sec. 6 commit protocol
 ------------------------------------------------
@@ -85,6 +105,18 @@ Equivalence guarantees (pinned by ``tests/test_fleetsim.py`` and
 * The trace-driven dead-time path with every trace entry equal to
   ``recharge_s`` reduces to the closed-form model (completed / reboots /
   energy / outputs bit-exact; dead time to float tolerance).
+* The stochastic charge-by-charge path with an all-nominal capacity trace
+  (or ``charge_cv=0``) is bit-exact against the closed-form replay --
+  completed / reboots / energy / per-class / outputs -- across the full
+  strategy x power matrix, for both commit policies, and its
+  ``wasted_cycles`` is exactly zero.
+* Completion is decided by the in-scan ``stuck`` flag (a row whose entry
+  plus one iteration -- at the lane's *selected* tile -- exceeds a nominal
+  charge can never pass), which coincides with the scalar simulator's
+  ``max_atomic`` bound for non-parameterized plans but is per-lane exact
+  for parameterized ones, where ``max_atomic`` is sized with the
+  continuously-calibrated tile and would falsely DNF small-capacitor lanes
+  that select a smaller tile in-scan.
 * Torn partial burns are attributed by charge order: when a lane dies
   before affording a row's entry, the burned prefix is booked to the entry
   ops' own classes via ``entry_start`` (matching the scalar simulator's
@@ -422,23 +454,42 @@ def build_plan(net: SimNet, x: np.ndarray, strategy: str, power,
 # Jitted replay
 # ==========================================================================
 
-def _scan_step(cap, trace_cum, tail_s, adaptive, theta, parametric,
-               state, row):
-    """Advance device state over one plan row (closed-form reboot count).
+def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, adaptive,
+               parametric, stochastic, state, row):
+    """Advance device state over one plan row.
 
     Power failure is a state transition: the buffer's remainder is burned
     (torn work re-runs from the last commit), the reboot counter advances,
-    and the row resumes with a full buffer.  For ``n``-iteration rows the
-    number of reboots inside the row is ``ceil(remaining / per-charge
-    affordable iterations)`` -- the scalar chunk loop collapsed.  The three
-    per-lane decisions (tile, commit granularity, per-reboot dead time) are
-    taken here; ``adaptive``/``theta``/``parametric`` are static, so the
-    ``policy="fixed"`` non-parameterized compile is instruction-for-
-    instruction the legacy closed form (bit-exact vs the scalar simulator).
+    and the row resumes with a fresh charge.  Deterministic charges
+    (``stochastic=False``) collapse an ``n``-iteration row's reboots to the
+    closed form ``ceil(remaining / per-charge affordable iterations)``; with
+    a charge-capacity trace the row is replayed charge by charge instead,
+    because refill ``r`` delivers ``charge_cum[r] - charge_cum[r-1]`` cycles
+    while the lane still *believes* the nominal ``cap``.  The four per-lane
+    decisions (tile, commit granularity, per-reboot dead time, per-charge
+    capacity) are taken here; ``adaptive``/``parametric``/``stochastic`` are
+    static (``theta`` is traced), so the default configuration compiles to
+    exactly the legacy closed form (bit-exact vs the scalar simulator).
     """
     import jax.numpy as jnp  # deferred: keep `import repro.core` jax-free
+    from jax import lax
 
-    rem, live, reboots, dead, classes, stuck = state
+    # `bel` is the lane's *believed* remaining budget: the device counts
+    # spent cycles against the nominal capacity, so within one charge the
+    # belief error (nominal - actual delivery) persists across rows.  On
+    # the deterministic path bel == rem always (zero belief error).
+    rem, bel, live, reboots, dead, classes, wasted, stuck = state
+
+    def trace_window(cum, r0, r1, fallback):
+        """Windowed sum of a per-lane cumulative trace over reboots
+        (r0, r1]: gather-subtract inside the trace, `fallback` per entry
+        past its end.  Serves both the dead-time trace (fallback = mean
+        recharge) and the charge-capacity trace (fallback = nominal)."""
+        last = cum.shape[0] - 1
+        i0 = jnp.clip(r0, 0.0, last).astype(jnp.int32)
+        i1 = jnp.clip(r1, 0.0, last).astype(jnp.int32)
+        over = jnp.maximum(r1 - last, 0.0) - jnp.maximum(r0 - last, 0.0)
+        return cum[i1] - cum[i0] + over * fallback
 
     # -- decision 1: TAILS tile from the carried capacitor -----------------
     if parametric:
@@ -456,148 +507,269 @@ def _scan_step(cap, trace_cum, tail_s, adaptive, theta, parametric,
     cc, commit_class = row["commit_cycles"], row["commit_class"]
     has_iters = n > 0
 
-    # -- decision 2: commit granularity from the carried buffer level ------
+    # -- decision 2: commit granularity, re-evaluated per charge -----------
+    # Above the threshold a charge batches the per-iteration cursor commit
+    # to one write per chunk: entry effectively grows by one commit,
+    # iterations shed theirs.  The first visit of a row measures the
+    # carried (believed) buffer; every retry visit wakes at a
+    # believed-full buffer, so retries batch iff theta <= 1.  Continuous
+    # lanes always qualify (infinite buffer == maximal energy).
     if adaptive:
-        # Above the threshold the lane batches the per-iteration cursor
-        # commit to one write per charge chunk: entry effectively grows by
-        # one commit, iterations shed theirs.  Continuous lanes always
-        # qualify (infinite buffer == maximal energy).
-        lvl_ok = jnp.where(jnp.isinf(cap), True, rem >= theta * cap)
-        batched = has_iters & (cc > 0.0) & lvl_ok
-        e_eff = jnp.where(batched, e + cc, e)
-        c_eff = jnp.where(batched, c - cc, c)
+        lvl0 = jnp.where(jnp.isinf(cap), True, bel >= theta * cap)
+        lvlr = theta <= 1.0
+        batch0 = has_iters & (cc > 0.0) & lvl0
+        batchr = has_iters & (cc > 0.0) & lvlr
     else:
-        batched = jnp.asarray(False)
-        e_eff, c_eff = e, c
-    c_safe = jnp.maximum(c_eff, 1e-30)
+        batch0 = batchr = jnp.asarray(False)
+    e0 = jnp.where(batch0, e + cc, e)
+    c0 = jnp.where(batch0, c - cc, c)
+    er = jnp.where(batchr, e + cc, e)
+    cr = jnp.where(batchr, c - cc, c)
+    c0s = jnp.maximum(c0, 1e-30)
+    crs = jnp.maximum(cr, 1e-30)
+    iter_vec0 = jnp.where(batch0, iter_class - commit_class, iter_class)
+    iter_vecr = jnp.where(batchr, iter_class - commit_class, iter_class)
 
-    needed = e_eff + n * c_eff
-    ok = rem >= needed
+    # Nominal passability: the scalar simulator's atomic-region bound,
+    # evaluated per lane on the *selected* tile (a row whose entry + one
+    # iteration exceed a nominal charge can never pass).
+    afford_nom = jnp.floor((cap - er) / crs)
+    row_stuck = jnp.where(has_iters, afford_nom < 1.0, e > cap)
 
-    # -- failure path (finite capacity; never selected when rem == inf) ----
-    entered = rem >= e
-    afford0 = jnp.clip(jnp.where(entered,
-                                 jnp.floor((rem - e_eff) / c_safe), 0.0),
-                       0.0, n)
-    rem_iters = n - afford0
-    afford_full = jnp.floor((cap - e_eff) / c_safe)
-    row_stuck = jnp.where(has_iters, afford_full < 1.0, e > cap)
-    afford_full = jnp.maximum(afford_full, 1.0)
-    visits = jnp.where(has_iters,
-                       jnp.maximum(jnp.ceil(rem_iters / afford_full), 1.0),
-                       1.0)
-    n_last = jnp.where(has_iters,
-                       rem_iters - (visits - 1.0) * afford_full, 0.0)
-    fail_live = rem + (visits - 1.0) * cap + e_eff + n_last * c_eff
-    fail_rem = cap - e_eff - n_last * c_eff
-    entries = visits + entered.astype(rem.dtype)
+    if not stochastic:
+        # -- closed form: every charge delivers exactly `cap` cycles ------
+        needed = e0 + n * c0
+        ok = rem >= needed
 
-    # Batched-commit bookkeeping: one cursor write per visit that executed
-    # iterations (+1 if attempt 0 entered and progressed).
-    ok_commits = jnp.where(batched, 1.0, 0.0)
-    fail_commits = jnp.where(
-        batched, visits + (afford0 > 0).astype(rem.dtype), 0.0)
-    iter_vec = jnp.where(batched, iter_class - commit_class, iter_class)
+        # failure path (finite capacity; never selected when rem == inf)
+        entered = rem >= e
+        afford0 = jnp.clip(jnp.where(entered,
+                                     jnp.floor((rem - e0) / c0s), 0.0),
+                           0.0, n)
+        rem_iters = n - afford0
+        afford_full = jnp.maximum(afford_nom, 1.0)
+        visits = jnp.where(has_iters,
+                           jnp.maximum(jnp.ceil(rem_iters / afford_full),
+                                       1.0),
+                           1.0)
+        n_last = jnp.where(has_iters,
+                           rem_iters - (visits - 1.0) * afford_full, 0.0)
+        fail_live = rem + (visits - 1.0) * cap + er + n_last * cr
+        fail_rem = cap - er - n_last * cr
+        entries = visits + entered.astype(rem.dtype)
 
-    fail_classes = (entries * entry_class + n * iter_vec
-                    + fail_commits * commit_class)
-    # Torn first-attempt burn: a lane that dies before affording the entry
-    # books the burned prefix to the entry ops' own classes in charge order
-    # (what the scalar's per-op `charge` does); only drains go to control.
-    torn = jnp.where(entered, jnp.zeros_like(entry_class),
-                     jnp.clip(rem - row["entry_start"], 0.0, entry_class))
-    fail_classes = fail_classes + torn
-    residue = (fail_live - entries * e - n * c_eff - fail_commits * cc
-               - jnp.where(entered, 0.0, rem))   # drains at chunk boundaries
-    fail_classes = fail_classes.at[_CONTROL_IDX].add(residue)
+        # Batched-commit bookkeeping: one cursor write per visit that
+        # executed iterations (+1 if attempt 0 entered and progressed).
+        ok_commits = jnp.where(batch0, 1.0, 0.0)
+        fail_commits = (jnp.where(batchr, visits, 0.0)
+                        + jnp.where(batch0 & (afford0 > 0), 1.0, 0.0))
 
-    ok_classes = entry_class + n * iter_vec + ok_commits * commit_class
-    new_rem = jnp.where(ok, rem - needed, fail_rem)
-    new_live = live + jnp.where(ok, needed, fail_live)
-    new_reboots = reboots + jnp.where(ok, 0.0, visits)
-    new_classes = classes + jnp.where(ok, ok_classes, fail_classes)
-    new_stuck = stuck | ((~ok) & row_stuck)
+        fail_classes = (entries * entry_class + afford0 * iter_vec0
+                        + rem_iters * iter_vecr
+                        + fail_commits * commit_class)
+        # Torn first-attempt burn: a lane that dies before affording the
+        # entry books the burned prefix to the entry ops' own classes in
+        # charge order (what the scalar's per-op `charge` does); only
+        # drains go to control.
+        torn = jnp.where(entered, jnp.zeros_like(entry_class),
+                         jnp.clip(rem - row["entry_start"], 0.0,
+                                  entry_class))
+        fail_classes = fail_classes + torn
+        residue = (fail_live - entries * e - afford0 * c0 - rem_iters * cr
+                   - fail_commits * cc - jnp.where(entered, 0.0, rem))
+        fail_classes = fail_classes.at[_CONTROL_IDX].add(residue)
+
+        ok_classes = entry_class + n * iter_vec0 + ok_commits * commit_class
+        new_rem = jnp.where(ok, rem - needed, fail_rem)
+        new_bel = new_rem        # deterministic charges: belief is exact
+        new_live = live + jnp.where(ok, needed, fail_live)
+        new_reboots = reboots + jnp.where(ok, 0.0, visits)
+        new_classes = classes + jnp.where(ok, ok_classes, fail_classes)
+        new_stuck = stuck | ((~ok) & row_stuck)
+        new_wasted = wasted      # a predicted commit never loses work
+    else:
+        # -- decision 4: charge-by-charge replay over the capacity trace --
+        def refill_sum(r0, r1):
+            """Total capacity of refills (r0, r1]; past-trace refills fall
+            back to the nominal `cap`."""
+            return trace_window(charge_cum, r0, r1, cap)
+
+        def charge_body(s):
+            rem_l, bel_l, left, live_l, rb, cls, waste, stk, done = s
+            a = rem_l                      # actual deliverable this charge
+            est = bel_l                    # the lane's believed budget
+            if adaptive:
+                batch = (has_iters & (cc > 0.0)
+                         & (jnp.isinf(cap) | (est >= theta * cap)))
+            else:
+                batch = jnp.asarray(False)
+            e_b = jnp.where(batch, e + cc, e)
+            c_b = jnp.where(batch, c - cc, c)
+            c_bs = jnp.maximum(c_b, 1e-30)
+            iv = jnp.where(batch, iter_class - commit_class, iter_class)
+            entered = a >= e
+            # chunk the lane schedules from its believed budget
+            k_est = jnp.clip(jnp.where(est >= e_b,
+                                       jnp.floor((est - e_b) / c_bs), 0.0),
+                             0.0, left)
+            # iterations the actual charge affords (per-iteration commits
+            # run until real death; entry first, batched commit last)
+            k_act = jnp.clip(jnp.where(entered,
+                                       jnp.floor((a - e_b) / c_bs), 0.0),
+                             0.0, left)
+            k_exec = jnp.clip(jnp.where(entered,
+                                        jnp.floor((a - e) / c_bs), 0.0),
+                              0.0, k_est)
+            commit_ok = a >= e_b + k_est * c_b
+            fin = (a >= e_b + left * c_b) & (~batch | (k_est >= left))
+
+            # committed progress this charge: a batched chunk commits all
+            # or nothing (surprise death -> rollback to the last cursor)
+            prog = jnp.where(batch, jnp.where(commit_ok, k_est, 0.0),
+                             k_act)
+            exec_iters = jnp.where(batch,
+                                   jnp.where(commit_ok, k_est, k_exec),
+                                   k_act)
+            commit_n = jnp.where(batch & commit_ok & (k_est > 0), 1.0, 0.0)
+
+            torn_v = jnp.where(entered, jnp.zeros_like(entry_class),
+                               jnp.clip(a - row["entry_start"], 0.0,
+                                        entry_class))
+            cls_burn = (jnp.where(entered, entry_class,
+                                  jnp.zeros_like(entry_class))
+                        + torn_v + exec_iters * iv
+                        + commit_n * commit_class)
+            residue = (a - jnp.where(entered, e, a)
+                       - exec_iters * c_b - commit_n * cc)
+            cls_burn = cls_burn.at[_CONTROL_IDX].add(residue)
+            spend_fin = e_b + left * c_b
+            cls_fin = (entry_class + left * iv
+                       + jnp.where(batch, 1.0, 0.0) * commit_class)
+
+            stuck_now = (~fin) & row_stuck
+            new_done = done | fin | stuck_now
+            return (jnp.where(fin, a - spend_fin,
+                              refill_sum(rb, rb + 1.0)),
+                    # a completing row decays the belief by what was spent
+                    # (clamped: the device may outlive its own forecast);
+                    # a burned charge resets it to believed-full.
+                    jnp.where(fin, jnp.maximum(est - spend_fin, 0.0),
+                              cap),
+                    jnp.where(fin, 0.0, left - prog),
+                    live_l + jnp.where(fin, spend_fin, a),
+                    rb + jnp.where(fin, 0.0, 1.0),
+                    cls + jnp.where(fin, cls_fin, cls_burn),
+                    waste + jnp.where(batch & ~commit_ok & ~fin,
+                                      k_exec * c_b, 0.0),
+                    stk | stuck_now, new_done)
+
+        init = (rem, bel, n, live, reboots, classes, wasted, stuck,
+                row["kind"] != KIND_WORK)
+        out = lax.while_loop(lambda s: ~s[8], charge_body, init)
+        (new_rem, new_bel, _, new_live, new_reboots, new_classes,
+         new_wasted, new_stuck, _) = out
 
     # -- BURN rows: a failed calibration attempt drains the whole buffer ---
     is_burn = row["kind"] == KIND_BURN
-    new_rem = jnp.where(is_burn, cap, new_rem)
+    if stochastic:
+        new_rem = jnp.where(is_burn, refill_sum(reboots, reboots + 1.0),
+                            new_rem)
+    else:
+        new_rem = jnp.where(is_burn, cap, new_rem)
+    new_bel = jnp.where(is_burn, cap, new_bel)
     new_live = jnp.where(is_burn, live + rem, new_live)
     new_reboots = jnp.where(is_burn, reboots + 1.0, new_reboots)
     burn_vec = jnp.zeros_like(classes).at[_BURN_IDX].add(rem)
     new_classes = jnp.where(is_burn, classes + burn_vec, new_classes)
     new_stuck = jnp.where(is_burn, stuck, new_stuck)
+    new_wasted = jnp.where(is_burn, wasted, new_wasted)
 
     # -- CALIB rows: per-lane burn count from the capacitor (Sec. 7.1) -----
     if parametric:
         is_calib = row["kind"] == KIND_CALIB
         burns = k.astype(rem.dtype)     # ladder candidates that do not fit
-        calib_live = jnp.where(burns > 0, rem + (burns - 1.0) * cap, 0.0)
-        new_rem = jnp.where(is_calib,
-                            jnp.where(burns > 0, cap, rem), new_rem)
+        if stochastic:
+            calib_live = jnp.where(
+                burns > 0,
+                rem + refill_sum(reboots, reboots + burns - 1.0), 0.0)
+            calib_rem = jnp.where(
+                burns > 0,
+                refill_sum(reboots + burns - 1.0, reboots + burns), rem)
+        else:
+            calib_live = jnp.where(burns > 0, rem + (burns - 1.0) * cap,
+                                   0.0)
+            calib_rem = jnp.where(burns > 0, cap, rem)
+        new_rem = jnp.where(is_calib, calib_rem, new_rem)
+        new_bel = jnp.where(is_calib, jnp.where(burns > 0, cap, bel),
+                            new_bel)
         new_live = jnp.where(is_calib, live + calib_live, new_live)
         new_reboots = jnp.where(is_calib, reboots + burns, new_reboots)
         calib_vec = jnp.zeros_like(classes).at[_BURN_IDX].add(calib_live)
         new_classes = jnp.where(is_calib, classes + calib_vec, new_classes)
         new_stuck = jnp.where(is_calib, stuck, new_stuck)
+        new_wasted = jnp.where(is_calib, wasted, new_wasted)
 
     # -- decision 3: per-reboot dead time from the lane's recharge trace ---
-    r_cap = trace_cum.shape[0] - 1
-    i0 = jnp.clip(reboots, 0.0, r_cap).astype(jnp.int32)
-    i1 = jnp.clip(new_reboots, 0.0, r_cap).astype(jnp.int32)
-    over = (jnp.maximum(new_reboots - r_cap, 0.0)
-            - jnp.maximum(reboots - r_cap, 0.0))
-    new_dead = dead + (trace_cum[i1] - trace_cum[i0]) + over * tail_s
+    new_dead = dead + trace_window(trace_cum, reboots, new_reboots, tail_s)
 
-    return (new_rem, new_live, new_reboots, new_dead, new_classes,
-            new_stuck), None
+    return (new_rem, new_bel, new_live, new_reboots, new_dead, new_classes,
+            new_wasted, new_stuck), None
 
 
-def _scan_one(rows, cap, rem0, trace_cum, tail_s, adaptive, theta,
-              parametric):
+def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum, theta,
+              adaptive, parametric, stochastic):
     import jax.numpy as jnp
     from jax import lax
 
-    state0 = (rem0, jnp.asarray(0.0, rem0.dtype),
+    # NB: the wasted channel is zeros_like(rem0) (not a fresh constant) so
+    # its shard_map replication matches the other carries even on the
+    # deterministic path, where the scan never updates it.
+    state0 = (rem0, rem0,             # actual + believed remaining budget
+              jnp.asarray(0.0, rem0.dtype),
               jnp.asarray(0.0, rem0.dtype),
               jnp.asarray(0.0, rem0.dtype),
               jnp.zeros((_N_CLASSES,), rem0.dtype),
+              jnp.zeros_like(rem0),
               jnp.asarray(False))
     final, _ = lax.scan(
-        lambda s, r: _scan_step(cap, trace_cum, tail_s, adaptive, theta,
-                                parametric, s, r),
+        lambda s, r: _scan_step(cap, trace_cum, tail_s, charge_cum, theta,
+                                adaptive, parametric, stochastic, s, r),
         state0, rows)
-    rem, live, reboots, dead, classes, stuck = final
+    rem, bel, live, reboots, dead, classes, wasted, stuck = final
     return dict(live=live, reboots=reboots, dead=dead, classes=classes,
-                stuck=stuck, rem=rem)
+                wasted=wasted, stuck=stuck, rem=rem)
 
 
 @lru_cache(maxsize=None)
-def _vmap_replay(shared_rows: bool, adaptive: bool, theta: float,
-                 parametric: bool):
+def _vmap_replay(shared_rows: bool, adaptive: bool, parametric: bool,
+                 stochastic: bool):
     """The vmapped replay.  ``shared_rows=False``: rows, caps, rem0, traces
     all batched on axis 0 (one lane per plan -- the Fig. 9 matrix).
     ``shared_rows=True``: one plan broadcast across every device lane (fleet
     sweeps; avoids materializing D copies of the plan).  ``adaptive``/
-    ``theta``/``parametric`` are static so the default configuration
-    compiles to exactly the legacy closed form."""
+    ``parametric``/``stochastic`` are static so the default configuration
+    compiles to exactly the legacy closed form; ``theta`` is a traced
+    operand, so a threshold sweep reuses one compilation."""
     import jax
-    in_axes = ((None if shared_rows else 0), 0, 0, 0, 0)
+    in_axes = ((None if shared_rows else 0), 0, 0, 0, 0, 0, None)
     return jax.vmap(
-        lambda rows, cap, rem0, tc, ts: _scan_one(
-            rows, cap, rem0, tc, ts, adaptive, theta, parametric),
+        lambda rows, cap, rem0, tc, ts, ccum, theta: _scan_one(
+            rows, cap, rem0, tc, ts, ccum, theta, adaptive, parametric,
+            stochastic),
         in_axes=in_axes)
 
 
 @lru_cache(maxsize=None)
-def _jit_replay(shared_rows: bool, adaptive: bool, theta: float,
-                parametric: bool):
+def _jit_replay(shared_rows: bool, adaptive: bool, parametric: bool,
+                stochastic: bool):
     import jax
-    return jax.jit(_vmap_replay(shared_rows, adaptive, theta, parametric))
+    return jax.jit(_vmap_replay(shared_rows, adaptive, parametric,
+                                stochastic))
 
 
 @lru_cache(maxsize=None)
 def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
-                        theta: float, parametric: bool):
+                        parametric: bool, stochastic: bool):
     """The replay wrapped in ``shard_map`` over the fleet's device axis:
     per-lane inputs/outputs split across the mesh, plan rows replicated.
     Lanes are independent, so no collectives are needed -- the mesh purely
@@ -607,12 +779,12 @@ def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
 
     from repro.launch.mesh import compat_shard_map
 
-    fn = _vmap_replay(shared_rows, adaptive, theta, parametric)
+    fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic)
     lane = P("devices")
     rows_spec = P() if shared_rows else lane
     return jax.jit(compat_shard_map(
         fn, mesh,
-        in_specs=(rows_spec, lane, lane, lane, lane),
+        in_specs=(rows_spec, lane, lane, lane, lane, lane, P()),
         out_specs=lane))
 
 
@@ -653,14 +825,18 @@ def _plan_rows(plan: FleetPlan) -> dict:
 def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 shared_rows: bool, trace_cum: np.ndarray | None = None,
                 tail_s: np.ndarray | None = None, policy: str = "fixed",
-                theta: float = 0.5, mesh=None) -> dict:
+                theta: float = 0.5, charge_cum: np.ndarray | None = None,
+                mesh=None) -> dict:
     if policy not in REPLAY_POLICIES:
         raise ValueError(f"unknown replay policy {policy!r}; "
                          f"expected one of {REPLAY_POLICIES}")
     n_lanes = caps.shape[0]
     parametric = "tile_sel_cost" in rows
+    stochastic = charge_cum is not None
     if trace_cum is None:
         trace_cum = np.zeros((n_lanes, 1), np.float64)
+    if charge_cum is None:
+        charge_cum = np.zeros((n_lanes, 1), np.float64)
     if tail_s is None:
         tail_s = np.zeros(n_lanes, np.float64)
     adaptive = policy == "adaptive"
@@ -669,10 +845,12 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
         args = [{k: jnp.asarray(v) for k, v in rows.items()},
                 jnp.asarray(caps), jnp.asarray(rem0),
                 jnp.asarray(trace_cum), jnp.asarray(np.broadcast_to(
-                    np.asarray(tail_s, np.float64), (n_lanes,)))]
+                    np.asarray(tail_s, np.float64), (n_lanes,))),
+                jnp.asarray(charge_cum),
+                jnp.asarray(float(theta), jnp.float64)]
         if mesh is None:
-            out = _jit_replay(shared_rows, adaptive, float(theta),
-                              parametric)(*args)
+            out = _jit_replay(shared_rows, adaptive, parametric,
+                              stochastic)(*args)
             return {k: np.asarray(v) for k, v in out.items()}
         # shard_map: pad the lane axis to a mesh multiple with inert
         # continuous lanes (cap = rem0 = inf completes every row in one
@@ -680,7 +858,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
         n_shards = int(mesh.devices.size)
         pad = (-n_lanes) % n_shards
         if pad:
-            fills = (np.inf, np.inf, 0.0, 0.0)   # caps, rem0, trace, tail
+            # caps, rem0, trace, tail, charge_cum lane fills
+            fills = (np.inf, np.inf, 0.0, 0.0, 0.0)
             for i, fill in enumerate(fills, start=1):
                 args[i] = jnp.concatenate(
                     [args[i], jnp.full((pad,) + args[i].shape[1:], fill,
@@ -689,8 +868,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 args[0] = {k: jnp.concatenate(
                     [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
                     for k, v in args[0].items()}
-        out = _jit_sharded_replay(mesh, shared_rows, adaptive, float(theta),
-                                  parametric)(*args)
+        out = _jit_sharded_replay(mesh, shared_rows, adaptive, parametric,
+                                  stochastic)(*args)
         return {k: np.asarray(v)[:n_lanes] for k, v in out.items()}
 
 
@@ -702,12 +881,14 @@ class ReplayOut:
     by_class: dict
     completed: bool
     dead_s: float = 0.0
+    wasted_cycles: float = 0.0   # committed-work rollback re-execution
 
 
 def replay_plans(plans: list[FleetPlan],
                  init_frac: np.ndarray | None = None,
                  policy: str = "fixed", theta: float = 0.5,
-                 recharge_traces: np.ndarray | None = None
+                 recharge_traces: np.ndarray | None = None,
+                 charge_traces: np.ndarray | None = None
                  ) -> list[ReplayOut]:
     """Replay many plans in one jitted vmap'd call (one lane per plan).
 
@@ -715,15 +896,27 @@ def replay_plans(plans: list[FleetPlan],
     (default 1.0: every device starts a full charge, like the scalar
     ``evaluate``).  ``recharge_traces`` is an optional ``(len(plans), R)``
     matrix of per-reboot recharge times; reboots beyond ``R`` fall back to
-    each plan's mean ``recharge_s``.  ``policy``/``theta`` select the
-    commit-granularity policy (see the module docstring)."""
-    from repro.runtime.failures import recharge_trace_cumulative
+    each plan's mean ``recharge_s``.  ``charge_traces`` is an optional
+    ``(len(plans), R)`` matrix of per-charge capacities (cycles delivered
+    by each lane's successive refills; see
+    ``runtime.failures.charge_capacity_jitter``) that switches the replay
+    to the stochastic charge-by-charge path; charges beyond the trace
+    deliver the nominal capacity.  ``policy``/``theta`` select the
+    commit-granularity policy (see the module docstring).
+
+    Completion is the in-scan ``stuck`` flag: per-lane exact for
+    parameterized plans (where the static ``max_atomic`` bound is sized
+    with the continuously-calibrated tile and would falsely DNF lanes that
+    select a smaller tile), and identical to the scalar simulator's
+    ``max_atomic`` check for everything else."""
+    from repro.runtime.failures import (charge_trace_cumulative,
+                                        recharge_trace_cumulative)
 
     caps = np.asarray([p.capacity for p in plans], np.float64)
     rem0 = caps if init_frac is None else \
         np.where(np.isinf(caps), np.inf, caps * np.asarray(init_frac))
     tail = np.asarray([p.recharge_s for p in plans], np.float64)
-    cum = None
+    cum = ccum = None
     if recharge_traces is not None:
         recharge_traces = np.asarray(recharge_traces)
         if recharge_traces.ndim != 2 or \
@@ -732,18 +925,26 @@ def replay_plans(plans: list[FleetPlan],
                 f"recharge_traces must be (len(plans), R) = "
                 f"({len(plans)}, R), got {recharge_traces.shape}")
         cum = recharge_trace_cumulative(recharge_traces)
+    if charge_traces is not None:
+        charge_traces = np.asarray(charge_traces)
+        if charge_traces.ndim != 2 or \
+                charge_traces.shape[0] != len(plans):
+            raise ValueError(
+                f"charge_traces must be (len(plans), R) = "
+                f"({len(plans)}, R), got {charge_traces.shape}")
+        ccum = charge_trace_cumulative(charge_traces)
     out = _run_replay(_pad_stack(plans), caps, rem0, shared_rows=False,
-                      trace_cum=cum, tail_s=tail, policy=policy, theta=theta)
+                      trace_cum=cum, tail_s=tail, policy=policy,
+                      theta=theta, charge_cum=ccum)
     results = []
     for i, p in enumerate(plans):
-        dnf = p.max_atomic > caps[i]
-        completed = bool(not dnf and not out["stuck"][i])
         by_class = {op: float(v) for op, v in
                     zip(OP_CLASSES, out["classes"][i]) if v > 0.0}
         results.append(ReplayOut(float(out["live"][i]),
                                  int(round(float(out["reboots"][i]))),
-                                 by_class, completed,
-                                 dead_s=float(out["dead"][i])))
+                                 by_class, bool(~out["stuck"][i]),
+                                 dead_s=float(out["dead"][i]),
+                                 wasted_cycles=float(out["wasted"][i])))
     return results
 
 
@@ -755,7 +956,8 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
                    strategies=STRATEGIES,
                    powers=POWER_SYSTEMS,
                    policy: str = "fixed", theta: float = 0.5,
-                   recharge_traces: np.ndarray | None = None
+                   recharge_traces: np.ndarray | None = None,
+                   charge_traces: np.ndarray | None = None
                    ) -> list[RunResult]:
     """The full strategy x power matrix as one vectorized replay.
 
@@ -763,8 +965,9 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
     ``evaluate`` (outputs are bit-identical: both execute the same plan;
     ``tests/test_fleetsim.py`` asserts field-level equivalence).
     ``recharge_traces`` (one row per matrix cell, in strategy-major order)
-    switches dead time to trace replay; ``policy`` selects the commit
-    granularity."""
+    switches dead time to trace replay; ``charge_traces`` (same layout)
+    switches charge capacities to stochastic trace replay; ``policy``
+    selects the commit granularity."""
     import dataclasses
 
     plans = []
@@ -785,7 +988,8 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
                     capacity=math.inf if ps.continuous
                     else ps.cycles_per_charge))
     outs = replay_plans(plans, policy=policy, theta=theta,
-                        recharge_traces=recharge_traces)
+                        recharge_traces=recharge_traces,
+                        charge_traces=charge_traces)
     results = []
     for p, o in zip(plans, outs):
         if not o.completed:
@@ -815,6 +1019,7 @@ class FleetSweepResult:
     reboots: np.ndarray          # (D,)
     energy_j: np.ndarray         # (D,)
     wall_s: float                # build + replay wall-clock
+    wasted_cycles: np.ndarray | None = None   # (D,) rollback re-execution
 
     @property
     def total_s(self) -> np.ndarray:
@@ -831,6 +1036,9 @@ class FleetSweepResult:
             if done.any() else float("inf"),
             "mean_reboots": float(self.reboots[done].mean()) if done.any()
             else 0.0,
+            "mean_wasted_cycles":
+                float(self.wasted_cycles[done].mean())
+                if self.wasted_cycles is not None and done.any() else 0.0,
             "wall_s": round(self.wall_s, 3),
         }
 
@@ -840,7 +1048,8 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                 recharge_cv: float = 0.25,
                 plan: FleetPlan | None = None,
                 policy: str = "fixed", theta: float = 0.5,
-                trace_reboots: int = 0, mesh=None) -> FleetSweepResult:
+                trace_reboots: int = 0, charge_cv: float = 0.0,
+                charge_reboots: int = 0, mesh=None) -> FleetSweepResult:
     """Replay one (strategy, power) plan across ``n_devices`` simulated
     devices with per-device harvest-trace jitter, in one compiled pass.
 
@@ -850,13 +1059,20 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
     ``trace_reboots > 0`` each device additionally draws that many
     per-reboot recharge times (exponential around its mean) and the scan
     replays them reboot by reboot; beyond the trace it falls back to the
-    device's mean.  ``policy="adaptive"`` turns on energy-adaptive commit
-    batching, ``mesh`` (e.g. ``repro.launch.mesh.make_fleet_mesh()``)
-    shards the device axis across chips.  The plan is broadcast across
-    device lanes, so memory scales with plan size + fleet size, not their
-    product.
+    device's mean.  With ``charge_cv > 0`` (or ``charge_reboots > 0``)
+    each device draws a per-charge *capacity* trace
+    (``charge_capacity_jitter``, truncated lognormal around the nominal
+    budget, ``charge_reboots`` charges -- default 256) and the scan
+    replays charges one by one, so surprise-short charges can tear batched
+    commits (the ``wasted_cycles`` channel).  ``policy="adaptive"`` turns
+    on energy-adaptive commit batching, ``mesh`` (e.g.
+    ``repro.launch.mesh.make_fleet_mesh()``) shards the device axis across
+    chips.  The plan is broadcast across device lanes, so memory scales
+    with plan size + fleet size, not their product.
     """
-    from repro.runtime.failures import (harvest_jitter,
+    from repro.runtime.failures import (charge_capacity_jitter,
+                                        charge_trace_cumulative,
+                                        harvest_jitter,
                                         initial_charge_fraction,
                                         reboot_recharge_times,
                                         recharge_trace_cumulative)
@@ -869,22 +1085,28 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
     caps = np.full(n_devices, plan.capacity, np.float64)
     rem0 = np.where(np.isinf(caps), np.inf, caps * frac)
     tail = plan.recharge_s * jit_mult
-    cum = None
+    cum = ccum = None
     if trace_reboots > 0:
         traces = reboot_recharge_times(n_devices, trace_reboots,
                                        plan.recharge_s, seed=seed + 2)
         cum = recharge_trace_cumulative(traces * jit_mult[:, None])
+    if charge_cv > 0 or charge_reboots > 0:
+        ctr = charge_capacity_jitter(n_devices, charge_reboots or 256,
+                                     plan.capacity, seed=seed + 3,
+                                     cv=charge_cv)
+        ccum = charge_trace_cumulative(ctr)
     out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
                       trace_cum=cum, tail_s=tail, policy=policy,
-                      theta=theta, mesh=mesh)
+                      theta=theta, charge_cum=ccum, mesh=mesh)
     return FleetSweepResult(
         strategy, power, n_devices,
-        completed=(plan.max_atomic <= caps) & ~out["stuck"],
+        completed=~out["stuck"],
         live_s=out["live"] / CLOCK_HZ,
         dead_s=out["dead"],
         reboots=out["reboots"],
         energy_j=out["live"] * JOULES_PER_CYCLE,
-        wall_s=time.perf_counter() - t0)
+        wall_s=time.perf_counter() - t0,
+        wasted_cycles=out["wasted"])
 
 
 @dataclass
@@ -899,6 +1121,7 @@ class CapacitorSweepResult:
     reboots: np.ndarray          # (P, D)
     energy_j: np.ndarray         # (P, D)
     wall_s: float
+    wasted_cycles: np.ndarray | None = None   # (P, D)
 
     @property
     def total_s(self) -> np.ndarray:
@@ -909,16 +1132,26 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
                     capacities, n_devices: int = 64, seed: int = 0,
                     recharge_cv: float = 0.25, strategy: str = "tails",
                     plan: FleetPlan | None = None, policy: str = "fixed",
-                    theta: float = 0.5, mesh=None) -> CapacitorSweepResult:
+                    theta: float = 0.5, charge_cv: float = 0.0,
+                    charge_reboots: int = 0,
+                    mesh=None) -> CapacitorSweepResult:
     """Sweep (capacitor size x device) in ONE vmapped/sharded replay of ONE
     parameterized plan -- no per-capacitor re-extraction.
 
     ``capacities`` are buffer sizes in cycles per charge; each gets
     ``n_devices`` jittered lanes.  TAILS tile calibration happens inside the
     scan per lane, so every capacitor picks its own tile (and pays its own
-    discovery burns) from the shared plan.
+    discovery burns) from the shared plan; completion comes from the
+    in-scan ``stuck`` flag, which respects the selected tile (the static
+    ``max_atomic`` bound is sized with the continuously-calibrated tile and
+    would falsely DNF small-capacitor lanes).  ``charge_cv``/
+    ``charge_reboots`` switch on stochastic per-charge capacities (see
+    :func:`fleet_sweep`), jittered around each lane's own nominal budget.
     """
-    from repro.runtime.failures import harvest_jitter, initial_charge_fraction
+    from repro.runtime.failures import (charge_capacity_jitter,
+                                        charge_trace_cumulative,
+                                        harvest_jitter,
+                                        initial_charge_fraction)
 
     t0 = time.perf_counter()
     if plan is None:
@@ -934,14 +1167,21 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
     jit_mult = harvest_jitter(lanes, seed=seed + 1, cv=recharge_cv)
     rem0 = np.where(np.isinf(caps), np.inf, caps * frac)
     tail = np.where(np.isinf(caps), 0.0, rf_recharge_seconds(caps) * jit_mult)
+    ccum = None
+    if charge_cv > 0 or charge_reboots > 0:
+        ctr = charge_capacity_jitter(lanes, charge_reboots or 256, caps,
+                                     seed=seed + 3, cv=charge_cv)
+        ccum = charge_trace_cumulative(ctr)
     out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
-                      tail_s=tail, policy=policy, theta=theta, mesh=mesh)
+                      tail_s=tail, policy=policy, theta=theta,
+                      charge_cum=ccum, mesh=mesh)
     shape = (n_caps, n_devices)
     return CapacitorSweepResult(
         strategy, capacities, n_devices,
-        completed=((plan.max_atomic <= caps) & ~out["stuck"]).reshape(shape),
+        completed=(~out["stuck"]).reshape(shape),
         live_s=(out["live"] / CLOCK_HZ).reshape(shape),
         dead_s=out["dead"].reshape(shape),
         reboots=out["reboots"].reshape(shape),
         energy_j=(out["live"] * JOULES_PER_CYCLE).reshape(shape),
-        wall_s=time.perf_counter() - t0)
+        wall_s=time.perf_counter() - t0,
+        wasted_cycles=out["wasted"].reshape(shape))

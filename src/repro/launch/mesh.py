@@ -62,7 +62,16 @@ def compat_shard_map(f, mesh, in_specs, out_specs):
     sm = getattr(jax, "shard_map", None)
     if sm is None:
         from jax.experimental.shard_map import shard_map as sm
-    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    # check_rep=False where supported: the fleet replay is embarrassingly
+    # parallel (no collectives), and old-JAX replication inference hits a
+    # known fixpoint bug on scan carries that pass through untouched in
+    # some compiles (e.g. fleetsim's wasted channel on the deterministic
+    # path) -- the workaround the error message itself recommends.
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    except TypeError:   # newer jax dropped the kwarg (check_vma era)
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 def dp_axes(mesh) -> tuple:

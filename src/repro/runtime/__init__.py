@@ -2,13 +2,15 @@
 rescale -- the large-scale-runnability substrate."""
 
 from .elastic import ElasticEvent, MeshChoice, choose_mesh, simulate_elastic
-from .failures import (FleetSpec, JobSpec, RunStats, harvest_jitter,
+from .failures import (FleetSpec, JobSpec, RunStats, charge_capacity_jitter,
+                       charge_trace_cumulative, harvest_jitter,
                        initial_charge_fraction, reboot_recharge_times,
                        recharge_trace_cumulative, simulate)
 from .straggler import StragglerSpec, efficiency, host_times, step_times
 
 __all__ = ["ElasticEvent", "FleetSpec", "JobSpec", "MeshChoice", "RunStats",
-           "StragglerSpec", "choose_mesh", "efficiency", "harvest_jitter",
-           "host_times", "initial_charge_fraction", "reboot_recharge_times",
-           "recharge_trace_cumulative", "simulate", "simulate_elastic",
-           "step_times"]
+           "StragglerSpec", "charge_capacity_jitter",
+           "charge_trace_cumulative", "choose_mesh", "efficiency",
+           "harvest_jitter", "host_times", "initial_charge_fraction",
+           "reboot_recharge_times", "recharge_trace_cumulative", "simulate",
+           "simulate_elastic", "step_times"]

@@ -127,6 +127,61 @@ def recharge_trace_cumulative(traces: np.ndarray) -> np.ndarray:
     return out
 
 
+def charge_capacity_jitter(n_devices: int, n_charges: int, nominal_cycles,
+                           seed: int = 0, cv: float = 0.25,
+                           lo: float = 0.25, hi: float = 4.0) -> np.ndarray:
+    """Stochastic per-charge capacities: a ``(devices, charges)`` matrix of
+    whole-cycle energy budgets, each a truncated-lognormal multiple of the
+    capacitor's nominal ``cycles_per_charge``.
+
+    This is the *surprise-failure* model the energy-adaptive commit policy
+    must pay for (Islam et al. 2025): the device believes every fresh charge
+    delivers the nominal budget, but charge ``r`` actually delivers
+    ``trace[d, r]`` cycles -- load spikes, temperature, and converter
+    efficiency make the usable energy of a "full" capacitor jitter.
+    Multipliers are lognormal with mean 1 and coefficient of variation
+    ``cv``, clipped to ``[lo, hi]`` (a dead-short or a super-charge are
+    physically bounded), and capacities are rounded to whole cycles so the
+    replay's integer-exact energy accounting is preserved.  ``cv=0`` (or a
+    trace filled with the nominal capacity) reduces the stochastic replay
+    bit-exactly to the deterministic closed form.
+
+    ``nominal_cycles`` may be a scalar (one capacitor fleet-wide) or a
+    ``(devices,)`` vector (e.g. ``capacitor_sweep`` lanes).
+    """
+    if cv < 0:
+        raise ValueError(f"cv must be >= 0, got {cv}")
+    if not 0 < lo <= 1.0 <= hi:
+        raise ValueError(f"need 0 < lo <= 1 <= hi, got lo={lo} hi={hi}")
+    nominal = np.broadcast_to(
+        np.asarray(nominal_cycles, np.float64).reshape(-1, 1),
+        (n_devices, n_charges))
+    if cv == 0:
+        mult = np.ones((n_devices, n_charges))
+    else:
+        rng = np.random.default_rng(seed)
+        sigma = np.sqrt(np.log1p(cv * cv))
+        mult = rng.lognormal(mean=-sigma * sigma / 2, sigma=sigma,
+                             size=(n_devices, n_charges))
+        mult = np.clip(mult, lo, hi)
+    return np.maximum(np.rint(nominal * mult), 1.0)
+
+
+def charge_trace_cumulative(traces: np.ndarray) -> np.ndarray:
+    """Prefix-sum a ``(devices, charges)`` capacity trace into the
+    ``(devices, charges + 1)`` table the stochastic replay indexes by each
+    lane's running reboot counter (refill ``r``'s capacity is
+    ``out[d, r] - out[d, r - 1]``; reboots past the trace fall back to the
+    nominal capacity).  Same table layout as
+    :func:`recharge_trace_cumulative` (which does it for per-reboot dead
+    *time*), and deliberately the same implementation."""
+    traces = np.asarray(traces, np.float64)
+    if traces.ndim != 2:
+        raise ValueError(
+            f"charge trace must be (devices, charges), got {traces.shape}")
+    return recharge_trace_cumulative(traces)
+
+
 def simulate(policy: str, fleet: FleetSpec, job: JobSpec, interval: int = 50,
              seed: int = 0, horizon_factor: float = 50.0) -> RunStats:
     """Run the job under a fault-tolerance policy against a failure trace."""
@@ -176,14 +231,18 @@ def simulate(policy: str, fleet: FleetSpec, job: JobSpec, interval: int = 50,
                 done_steps += 1
         else:
             # whole steps are the unit; a failure loses progress since the
-            # last durable point
+            # last durable point.  Steps completed since that point were
+            # booked as useful when they ran; once lost they move to wasted
+            # (never double-counted), so on completion ``useful_s`` is
+            # exactly ``total_steps * step_s`` and at every instant
+            # ``wall_s == useful_s + wasted_s + overhead_s``.  For naive,
+            # ``step`` is always 0 (it never checkpoints), so "since the
+            # last durable point" is the whole job.
             if interrupted(now, job.step_s):
                 n_fail += 1
-                lost = done_steps * job.step_s + job.step_s / 2
-                if policy == "naive":
-                    lost = (step + done_steps) * job.step_s + job.step_s / 2
-                    step = 0
-                wasted += lost
+                lost = done_steps * job.step_s
+                useful -= lost
+                wasted += lost + job.step_s / 2
                 now += job.step_s / 2 + fleet.restart_s + job.restore_s
                 overhead += fleet.restart_s + job.restore_s
                 done_steps = 0
@@ -197,17 +256,18 @@ def simulate(policy: str, fleet: FleetSpec, job: JobSpec, interval: int = 50,
             if interrupted(now, job.ckpt_write_s):
                 n_fail += 1
                 now += job.ckpt_write_s / 2 + fleet.restart_s + job.restore_s
-                overhead += fleet.restart_s + job.restore_s
+                overhead += (job.ckpt_write_s / 2 + fleet.restart_s
+                             + job.restore_s)
                 if policy != "continuation":
+                    # interval-k loses the uncheckpointed steps too
+                    lost = done_steps * job.step_s
+                    useful -= lost
+                    wasted += lost
                     done_steps = 0
                 continue
             now += job.ckpt_write_s
             overhead += job.ckpt_write_s
             step += done_steps
             done_steps = 0
-        elif policy == "continuation" and done_mb == 0 and done_steps:
-            # the continuation policy also commits a per-step cursor (the
-            # optimizer state delta lives in the A/B slots)
-            pass
 
     return RunStats(now, useful, wasted, overhead, n_fail, True)

@@ -243,6 +243,146 @@ def test_adaptive_fleet_sweep(small_net):
     assert adap.energy_j.sum() < fixed.energy_j.sum()
 
 
+def test_adaptive_threshold_reevaluated_per_charge(small_net):
+    """A row entered *below* theta x capacity must not pin per-iteration
+    commits onto its retry visits: every retry wakes at a (believed-)full
+    buffer, which passes any theta <= 1, so batching must resume there.
+    Regression: the threshold used to be evaluated once per row."""
+    net, x = small_net
+    plan = build_plan(net, x, "sonic", "100uF")
+    # wake almost drained: the first row is entered far below theta*cap,
+    # and the whole plan spans multiple charges (plan total >> capacity
+    # fraction), so retry visits exist for theta = 1.0
+    f = replay_plans([plan], init_frac=[0.01])[0]
+    a = replay_plans([plan], init_frac=[0.01], policy="adaptive",
+                     theta=1.0)[0]
+    assert f.reboots > 0
+    assert a.completed and f.completed
+    # retries batched -> strictly fewer commit (fram_write) cycles
+    assert a.live_cycles < f.live_cycles
+    assert a.by_class["fram_write"] < f.by_class["fram_write"]
+    # theta > 1 still means nothing ever batches (retries included)
+    n = replay_plans([plan], init_frac=[0.01], policy="adaptive",
+                     theta=1.0 + 1e-9)[0]
+    assert (n.live_cycles, n.reboots) == (f.live_cycles, f.reboots)
+    assert n.by_class == f.by_class
+
+
+def test_parametric_small_cap_completes_via_selected_tile(small_net):
+    """Satellite regression: a capacitor *between* two tile sizes -- too
+    small for the continuously-calibrated tile (the plan's static
+    ``max_atomic``), big enough for the tile the scan selects -- must not
+    be marked DNF.  Completion comes from the in-scan stuck flag."""
+    net, x = small_net
+    pplan = build_plan(net, x, "tails", "1mF", parametric=True)
+    cap = 0.7 * pplan.max_atomic          # old gate: plan.max_atomic > cap
+    assert pplan.max_atomic > cap
+    r = capacitor_sweep(net, x, np.asarray([cap]), n_devices=8, seed=1,
+                        plan=pplan)
+    assert r.completed.all()
+    assert (r.reboots > 0).all()
+    # the replay agrees with per-capacity extraction replayed at that cap
+    ps = custom_power_system(cap)
+    fixed = build_plan(net, x, "tails", ps)
+    out = replay_plans([fixed])[0]
+    assert out.completed
+    # a genuinely impossible capacitor still DNFs via the stuck flag
+    tiny = capacitor_sweep(net, x, np.asarray([50.0]), n_devices=4, seed=1,
+                           plan=pplan)
+    assert not tiny.completed.any()
+
+
+def test_theta_sweep_reuses_one_compilation(small_net):
+    """theta is a traced operand: a frontier sweep over thresholds must hit
+    the jit cache after the first compile (it used to be a static key that
+    recompiled per value)."""
+    from repro.core.fleetsim import _jit_replay
+
+    net, x = small_net
+    plan = build_plan(net, x, "sonic", "100uF")
+    fn = _jit_replay(False, True, False, False)   # matrix-shape adaptive
+    replay_plans([plan], policy="adaptive", theta=0.33)     # warm the shape
+    n0 = fn._cache_size()
+    outs = [replay_plans([plan], policy="adaptive", theta=t)[0]
+            for t in (0.1, 0.25, 0.5, 0.75, 0.9, 1.2)]
+    assert fn._cache_size() == n0          # zero new compiles
+    assert outs[0].completed and outs[-1].completed
+    # sanity: theta still changes behavior (1.2 never batches, 0.1 does)
+    assert outs[0].live_cycles < outs[-1].live_cycles
+
+
+# ==========================================================================
+# Decision 4: stochastic per-charge capacity (the adaptive policy's risk)
+# ==========================================================================
+
+def test_wasted_monotone_in_charge_cv(small_net):
+    """The acceptance criterion of the risk model: with jittered charges
+    and batched commits, rollback waste is zero at cv=0, grows
+    monotonically with cv, and is *always* exactly zero under
+    per-iteration commits (which lose at most the torn partial iteration
+    the deterministic model already burns)."""
+    net, x = small_net
+    ps = custom_power_system(2e4)       # ~5 charges per inference
+    plan = build_plan(net, x, "sonic", ps)
+    assert plan.total_cycles > 4 * plan.capacity
+    cvs = (0.0, 0.1, 0.2, 0.4, 0.8)
+    wasted = {}
+    for policy in ("fixed", "adaptive"):
+        w = [fleet_sweep(net, x, "sonic", ps, n_devices=256, seed=3,
+                         plan=plan, policy=policy, theta=0.5, charge_cv=cv,
+                         charge_reboots=128).wasted_cycles.mean()
+             for cv in cvs]
+        wasted[policy] = w
+    assert all(w == 0.0 for w in wasted["fixed"])
+    assert wasted["adaptive"][0] == 0.0            # cv=0: no surprises
+    assert wasted["adaptive"][-1] > 0.0
+    diffs = np.diff(wasted["adaptive"])
+    assert (diffs >= 0.0).all(), wasted["adaptive"]
+    assert wasted["adaptive"][-1] > wasted["adaptive"][1]
+
+
+def test_stochastic_charge_capacity_fleet_sweep(small_net):
+    """Composition with the fleet sweep: jittered charges complete, spread
+    reboots across devices, and only ever *add* live energy relative to
+    the deterministic replay under the fixed policy (shorter charges tear
+    more work; per-iteration commits never lose committed work)."""
+    net, x = small_net
+    ps = custom_power_system(2e4)
+    plan = build_plan(net, x, "sonic", ps)
+    base = fleet_sweep(net, x, "sonic", ps, n_devices=128, seed=5,
+                       plan=plan)
+    jit = fleet_sweep(net, x, "sonic", ps, n_devices=128, seed=5,
+                      plan=plan, charge_cv=0.4, charge_reboots=128)
+    assert jit.completed.all()
+    assert (jit.wasted_cycles == 0.0).all()        # fixed policy
+    assert not np.array_equal(base.reboots, jit.reboots)
+    assert jit.summary()["mean_wasted_cycles"] == 0.0
+    # capacitor_sweep accepts the same axis (per-lane nominal budgets)
+    pplan = build_plan(net, x, "tails", "1mF", parametric=True)
+    caps = np.asarray([6e3, 5e4])
+    det = capacitor_sweep(net, x, caps, n_devices=8, seed=1, plan=pplan)
+    sto = capacitor_sweep(net, x, caps, n_devices=8, seed=1, plan=pplan,
+                          charge_cv=0.3, charge_reboots=64)
+    assert sto.completed.all() and det.completed.all()
+    assert sto.wasted_cycles.shape == (2, 8)
+    assert not np.array_equal(det.reboots, sto.reboots)
+
+
+def test_stochastic_charge_trace_beyond_trace_nominal(small_net):
+    """Charges past the pregenerated trace deliver the nominal capacity: a
+    2-entry nominal trace equals the closed form even when the lane
+    reboots far more than twice."""
+    net, x = small_net
+    plan = build_plan(net, x, "tile-8", "100uF")
+    ref = replay_plans([plan])[0]
+    assert ref.reboots > 4
+    short = np.full((1, 2), plan.capacity)
+    out = replay_plans([plan], charge_traces=short)[0]
+    assert out.reboots == ref.reboots
+    assert out.live_cycles == ref.live_cycles
+    assert out.by_class == ref.by_class
+
+
 # ==========================================================================
 # Torn partial-burn attribution by charge order
 # ==========================================================================

@@ -110,6 +110,58 @@ def test_fleet_naive_restarts_whole_inference(small_net):
     assert out.live_cycles == pytest.approx(1.5 * total, rel=1e-12)
 
 
+@pytest.mark.parametrize("policy,theta", [("fixed", 0.5),
+                                          ("adaptive", 0.5),
+                                          ("adaptive", 1.5)])
+def test_stochastic_nominal_trace_matrix_bit_exact(small_net, policy, theta):
+    """The charge-by-charge stochastic replay with an all-nominal capacity
+    trace is bit-exact against the closed-form replay -- completed /
+    reboots / energy / outputs / per-class -- across the full 6-strategy x
+    4-power matrix, for both commit policies, and wastes nothing."""
+    from repro.core import make_power_system
+
+    net, x = small_net
+    caps = [make_power_system(p).cycles_per_charge or np.inf
+            for _s in STRATEGIES for p in POWER_SYSTEMS]
+    traces = np.tile(np.asarray(caps, np.float64)[:, None], (1, 40))
+    base = fleet_evaluate(net, x, policy=policy, theta=theta)
+    stoch = fleet_evaluate(net, x, policy=policy, theta=theta,
+                           charge_traces=traces)
+    assert len(base) == len(stoch) == len(caps)
+    for b, s in zip(base, stoch):
+        assert (b.strategy, b.power) == (s.strategy, s.power)
+        assert b.completed == s.completed, (b.strategy, b.power)
+        if not b.completed:
+            continue
+        assert b.reboots == s.reboots, (b.strategy, b.power)
+        assert b.energy_j == s.energy_j, (b.strategy, b.power)
+        assert b.by_class == s.by_class, (b.strategy, b.power)
+        np.testing.assert_array_equal(b.output, s.output)
+        assert b.live_time_s == s.live_time_s
+        assert b.dead_time_s == s.dead_time_s
+
+
+@pytest.mark.parametrize("policy", ("fixed", "adaptive"))
+def test_stochastic_replay_plans_wasted_and_totals(small_net, policy):
+    """Under real jitter the stochastic replay still completes, books its
+    per-class cycles to exactly the lane's live cycles, and only the
+    adaptive policy can report rollback waste (never the fixed one)."""
+    from repro.runtime.failures import charge_capacity_jitter
+
+    net, x = small_net
+    plan = build_plan(net, x, "sonic", "100uF")
+    traces = charge_capacity_jitter(1, 128, plan.capacity, seed=5, cv=0.5)
+    out = replay_plans([plan], init_frac=[0.3], policy=policy, theta=0.5,
+                       charge_traces=traces)[0]
+    assert out.completed
+    assert sum(out.by_class.values()) == pytest.approx(out.live_cycles,
+                                                       rel=1e-12)
+    if policy == "fixed":
+        assert out.wasted_cycles == 0.0
+    else:
+        assert out.wasted_cycles >= 0.0
+
+
 def test_fleet_dnf_matches_scalar():
     """Naive on a too-large net DNFs in both simulators (Fig. 9b)."""
     rng = np.random.default_rng(1)

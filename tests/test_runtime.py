@@ -7,6 +7,7 @@ import pytest
 from repro.optim.compress_grads import (compress_int8, compressed_allreduce_ref,
                                         decompress_int8)
 from repro.runtime import (ElasticEvent, FleetSpec, JobSpec, StragglerSpec,
+                           charge_capacity_jitter, charge_trace_cumulative,
                            choose_mesh, efficiency, harvest_jitter,
                            initial_charge_fraction, reboot_recharge_times,
                            recharge_trace_cumulative, simulate,
@@ -153,3 +154,102 @@ def test_compressed_allreduce_unbiased_mean():
     approx = compressed_allreduce_ref(grads)
     exact = np.mean(grads, axis=0)
     assert np.abs(approx - exact).max() < 0.02 * np.abs(exact).max() + 1e-3
+
+
+def test_charge_capacity_jitter_distribution():
+    """Truncated-lognormal per-charge capacities: whole cycles, mean near
+    nominal, spread tracking cv, multipliers clipped to [lo, hi],
+    deterministic per seed."""
+    nominal = 1.0e5
+    for cv in (0.1, 0.3, 0.6):
+        t = charge_capacity_jitter(2000, 64, nominal, seed=7, cv=cv)
+        assert t.shape == (2000, 64) and t.dtype == np.float64
+        np.testing.assert_array_equal(t, np.rint(t))     # whole cycles
+        assert t.min() >= 0.25 * nominal - 1 and t.max() <= 4.0 * nominal + 1
+        assert t.mean() == pytest.approx(nominal, rel=0.02)
+        assert t.std() / t.mean() == pytest.approx(cv, rel=0.10)
+    np.testing.assert_array_equal(
+        charge_capacity_jitter(32, 8, nominal, seed=3),
+        charge_capacity_jitter(32, 8, nominal, seed=3))
+    assert not np.array_equal(
+        charge_capacity_jitter(32, 8, nominal, seed=3, cv=0.3),
+        charge_capacity_jitter(32, 8, nominal, seed=4, cv=0.3))
+
+
+def test_charge_capacity_jitter_zero_cv_and_per_lane_nominal():
+    """cv=0 yields exactly the (rounded) nominal everywhere; a (devices,)
+    nominal vector gives each lane its own center."""
+    t = charge_capacity_jitter(16, 4, 12345.0, cv=0.0)
+    np.testing.assert_array_equal(t, np.full((16, 4), 12345.0))
+    noms = np.asarray([1e4, 2e4, 1e6])
+    t = charge_capacity_jitter(3, 50, noms, seed=1, cv=0.2)
+    assert t.shape == (3, 50)
+    for d in range(3):
+        assert t[d].mean() == pytest.approx(noms[d], rel=0.15)
+    with pytest.raises(ValueError):
+        charge_capacity_jitter(4, 4, 1e5, cv=-0.1)
+    with pytest.raises(ValueError):
+        charge_capacity_jitter(4, 4, 1e5, lo=1.5)
+
+
+def test_charge_trace_cumulative_mirrors_recharge():
+    """Prefix-sum table: out[:, 0] == 0, diffs reproduce the trace, 1-D or
+    3-D input is a bug."""
+    rng = np.random.default_rng(2)
+    t = np.rint(rng.uniform(5e4, 2e5, size=(6, 9)))
+    cum = charge_trace_cumulative(t)
+    assert cum.shape == (6, 10)
+    np.testing.assert_array_equal(cum[:, 0], np.zeros(6))
+    np.testing.assert_array_equal(np.diff(cum, axis=1), t)
+    with pytest.raises(ValueError):
+        charge_trace_cumulative(np.zeros(5))
+    with pytest.raises(ValueError):
+        charge_trace_cumulative(np.zeros((2, 2, 2)))
+
+
+# --------------------------------------------------------------------------
+# simulate() accounting invariants (naive-path / checkpoint-failure audit)
+# --------------------------------------------------------------------------
+
+def test_simulate_accounting_invariants():
+    """Every policy, with real failures: wall time decomposes exactly into
+    useful + wasted + overhead, and a completed run's useful time is
+    exactly the job's compute (lost steps move from useful to wasted, they
+    are not double-counted)."""
+    job = JobSpec(total_steps=40, step_s=60.0, microbatches=8,
+                  mb_commit_s=0.5)
+    fleet = FleetSpec(n_hosts=2000, mtbf_host_s=30 * 86400)
+    saw_failures = False
+    for policy, interval in (("naive", 1), ("interval", 2), ("interval", 10),
+                             ("continuation", 5)):
+        for seed in range(4):
+            r = simulate(policy, fleet, job, interval=interval, seed=seed,
+                         horizon_factor=50)
+            saw_failures |= r.failures > 0
+            assert r.wall_s == pytest.approx(
+                r.useful_s + r.wasted_s + r.overhead_s, rel=1e-9), \
+                (policy, seed)
+            if r.completed:
+                assert r.useful_s == pytest.approx(
+                    job.total_steps * job.step_s, rel=1e-9), (policy, seed)
+                assert 0.0 < r.goodput <= 1.0
+    assert saw_failures     # the invariants were exercised under failures
+
+
+def test_simulate_naive_failure_resets_all_progress():
+    """The naive policy commits nothing: after a mid-run failure its wasted
+    time covers every completed step, and completed runs still account
+    useful time exactly (the old path double-reset progress via a dead
+    ``step = 0`` plus ``done_steps = 0``)."""
+    job = JobSpec(total_steps=30, step_s=60.0)
+    fleet = FleetSpec(n_hosts=4000, mtbf_host_s=30 * 86400)
+    runs = [simulate("naive", fleet, job, seed=s, horizon_factor=200)
+            for s in range(6)]
+    failed = [r for r in runs if r.failures > 0 and r.completed]
+    assert failed, "need a completed naive run that saw failures"
+    for r in failed:
+        # each failure at k completed steps wastes k * step_s + step_s/2,
+        # so wasted is at least failures * step_s / 2 and useful is exact
+        assert r.wasted_s >= r.failures * job.step_s / 2
+        assert r.useful_s == pytest.approx(job.total_steps * job.step_s,
+                                           rel=1e-9)
