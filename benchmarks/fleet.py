@@ -188,20 +188,32 @@ def tails_capacitor_sweep(n_devices_per_cap: int = 128,
 
 def adaptive_risk_frontier(n_devices: int = 256,
                            thetas=(0.25, 0.5, 0.75, 1.0, 1.5),
-                           cvs=(0.0, 0.2, 0.4, 0.8),
-                           charge_reboots: int = 128,
+                           cvs=(0.0, 0.3, 0.5, 0.8),
+                           alphas=(0.0, 0.25, 0.5),
+                           batch_rows: int = 10**6,
+                           charge_reboots: int = 160,
                            bench: dict | None = None) -> list[tuple]:
-    """The theta x charge-jitter frontier of the energy-adaptive commit
-    policy (Islam et al. 2025): batched commits save cursor writes when
-    charges behave, and pay ``wasted_cycles`` of rollback re-execution when
-    a surprise-short charge tears the uncommitted chunk.
+    """The theta x charge-jitter x belief-alpha frontier of the
+    energy-adaptive commit policy (Islam et al. 2025) with *cross-charge*
+    batching: one cursor commit per charge spanning many rows
+    (``batch_rows`` effectively unbounded), so batched commits save a
+    window's worth of cursor writes when charges behave -- and lose the
+    whole window to multi-row rollback when a surprise-short charge tears
+    it (``wasted_cycles``).
 
-    SONIC on a capacitor the inference spans ~8 times (the risk regime:
-    every run crosses several charge boundaries), per-charge capacities
-    drawn from ``charge_capacity_jitter``.  One plan, one compiled scan per
-    (policy, stochastic) shape -- theta is a traced operand, so the whole
-    theta axis reuses a single compilation (pinned by
-    ``tests/test_fleet_replay_decisions.py``).
+    Each jitter point splits its variability between per-charge noise
+    (``charge_cv = cv``) and a *persistent* per-device bias
+    (``charge_bias_cv = cv``): iid noise averages out to the nominal
+    budget, a biased lane keeps drawing short charges forever.  That is
+    the regime the EWMA belief axis (``alpha``) exists for -- the lane
+    learns its own budget, shrinks its batch window, and claws back the
+    batching win that jitter eroded (``ewma_recovery`` records the
+    recovered fraction per cv at theta=0.5).
+
+    SONIC on a capacitor the inference spans ~8 times (every run crosses
+    several charge boundaries).  One plan, ONE compiled scan for the whole
+    grid -- theta, the batch window and alpha are all traced operands
+    (pinned by ``tests/test_fleet_replay_decisions.py``).
     """
     from repro.core import build_plan, custom_power_system
     from repro.core.energy import JOULES_PER_CYCLE
@@ -213,26 +225,50 @@ def adaptive_risk_frontier(n_devices: int = 256,
     t0 = time.perf_counter()
     grid = []
     fixed_energy = {}
+    win = {}                 # (cv, alpha) -> fixed - adaptive at theta=0.5
+    ref_theta = min(thetas, key=lambda t: abs(t - 0.5))
     for cv in cvs:
         fixed = fleet_sweep(net, x, "sonic", ps, n_devices=n_devices,
                             seed=7, plan=plan, policy="fixed",
-                            charge_cv=cv, charge_reboots=charge_reboots)
+                            charge_cv=cv, charge_bias_cv=cv,
+                            charge_reboots=charge_reboots)
         f_energy = fixed.energy_j.mean()
         fixed_energy[f"{cv:g}"] = round(float(f_energy), 9)
         for theta in thetas:
-            r = fleet_sweep(net, x, "sonic", ps, n_devices=n_devices,
-                            seed=7, plan=plan, policy="adaptive",
-                            theta=theta, charge_cv=cv,
-                            charge_reboots=charge_reboots)
-            grid.append({
-                "theta": theta,
-                "charge_cv": cv,
-                "mean_wasted_cycles": round(float(
-                    r.wasted_cycles.mean()), 1),
-                "adaptive_energy_ratio": round(float(
-                    r.energy_j.mean() / f_energy), 4),
-                "completed": int(r.completed.sum()),
-            })
+            for alpha in alphas:
+                r = fleet_sweep(net, x, "sonic", ps, n_devices=n_devices,
+                                seed=7, plan=plan, policy="adaptive",
+                                theta=theta, batch_rows=batch_rows,
+                                belief_alpha=alpha, charge_cv=cv,
+                                charge_bias_cv=cv,
+                                charge_reboots=charge_reboots)
+                if theta == ref_theta:
+                    win[(cv, alpha)] = float(f_energy
+                                             - r.energy_j.mean())
+                grid.append({
+                    "theta": theta,
+                    "charge_cv": cv,
+                    "alpha": alpha,
+                    "mean_wasted_cycles": round(float(
+                        r.wasted_cycles.mean()), 1),
+                    "adaptive_energy_ratio": round(float(
+                        r.energy_j.mean() / f_energy), 4),
+                    "mean_belief_frac": round(float(
+                        r.belief_cycles.mean() / plan.capacity), 4),
+                    "completed": int(r.completed.sum()),
+                })
+    # EWMA recovery: what fraction of the batching win that jitter erodes
+    # (vs the cv=0 win) does the best alpha claw back, at theta=0.5?
+    recovery = {}
+    if cvs[0] == 0.0 and 0.0 in alphas:
+        win0 = win[(cvs[0], 0.0)]
+        for cv in cvs:
+            if cv <= 0:
+                continue
+            eroded = win0 - win[(cv, 0.0)]
+            best = max(win[(cv, a)] for a in alphas)
+            recovery[f"{cv:g}"] = round((best - win[(cv, 0.0)]) / eroded,
+                                        4) if eroded > 0 else None
     wall = time.perf_counter() - t0
     worst = max(grid, key=lambda g: g["adaptive_energy_ratio"])
     best = min(grid, key=lambda g: g["adaptive_energy_ratio"])
@@ -244,10 +280,13 @@ def adaptive_risk_frontier(n_devices: int = 256,
             "charges_per_inference": round(charges, 2),
             "devices": n_devices,
             "charge_reboots": charge_reboots,
+            "batch_rows": batch_rows,
             "thetas": list(thetas),
             "charge_cvs": list(cvs),
+            "alphas": list(alphas),
             "grid": grid,
             "fixed_energy_j_per_cv": fixed_energy,
+            "ewma_recovery": recovery,
             "commit_savings_cycles": round(float(
                 np.sum((plan.n[plan.n > 0] - 1.0)
                        * plan.commit_cycles[plan.n > 0])), 1),
@@ -255,20 +294,29 @@ def adaptive_risk_frontier(n_devices: int = 256,
         })
     rows = [(
         "fleetsim/adaptive_risk_max_wasted_cycles", max_wasted,
-        f"theta x cv grid {len(thetas)}x{len(cvs)} on {n_devices} devices, "
-        f"{charges:.1f} charges/inference; worst energy ratio "
+        f"theta x cv x alpha grid {len(thetas)}x{len(cvs)}x{len(alphas)} "
+        f"on {n_devices} devices, {charges:.1f} charges/inference, "
+        f"cross-charge window={batch_rows}; worst energy ratio "
         f"{worst['adaptive_energy_ratio']} at theta={worst['theta']} "
-        f"cv={worst['charge_cv']}; best {best['adaptive_energy_ratio']} at "
-        f"theta={best['theta']} cv={best['charge_cv']}; wall={wall:.2f}s")]
+        f"cv={worst['charge_cv']} a={worst['alpha']}; best "
+        f"{best['adaptive_energy_ratio']} at theta={best['theta']} "
+        f"cv={best['charge_cv']} a={best['alpha']}; wall={wall:.2f}s")]
     for cv in cvs:
         sub = [g for g in grid if g["charge_cv"] == cv
-               and g["theta"] <= 1.0]
+               and g["theta"] <= 1.0 and g["alpha"] == 0.0]
         pays = all(g["adaptive_energy_ratio"] < 1.0 for g in sub)
         rows.append((
             f"fleetsim/adaptive_pays_at_cv{cv:g}", int(pays),
-            "adaptive (theta<=1) mean energy below fixed at this jitter; "
-            f"wasted={max(g['mean_wasted_cycles'] for g in sub)} cycles "
-            f"(1 cycle = {JOULES_PER_CYCLE:.1e} J)"))
+            "adaptive (theta<=1, alpha=0) mean energy below fixed at this "
+            f"jitter; wasted={max(g['mean_wasted_cycles'] for g in sub)} "
+            f"cycles (1 cycle = {JOULES_PER_CYCLE:.1e} J)"))
+    for cv, rec in recovery.items():
+        rows.append((
+            f"fleetsim/ewma_recovery_cv{cv}",
+            rec if rec is not None else -1,
+            "fraction of the jitter-eroded batching win recovered by the "
+            f"best belief alpha at theta={ref_theta} (>= 0.5 is the "
+            "tentpole acceptance bar at cv >= 0.3)"))
     return rows
 
 
@@ -276,7 +324,10 @@ def write_bench(fleet: dict, capsweep: dict, frontier: dict,
                 path: Path = BENCH_PATH,
                 history: Path = HISTORY_PATH) -> None:
     payload = {
-        "schema": 2,
+        # schema 3: the risk frontier gained the belief axis (alpha /
+        # batch_rows / mean_belief_frac / ewma_recovery); grid entries of
+        # schema 2 carried no "alpha" key
+        "schema": 3,
         "generated_unix": round(time.time(), 1),
         "fleet": fleet,
         "tails_capacitor_sweep": capsweep,
@@ -284,8 +335,11 @@ def write_bench(fleet: dict, capsweep: dict, frontier: dict,
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")
     # One compact line per run appended to the cross-PR trajectory (the
-    # ROADMAP asks for a collected history now that data points exist).
+    # ROADMAP asks for a collected history now that data points exist;
+    # benchmarks/paper_figs.py:bench_history renders it).
     any_fleet = next(iter(fleet.values()), {})
+    recovery = [v for v in frontier.get("ewma_recovery", {}).values()
+                if v is not None]
     line = {
         "t": payload["generated_unix"],
         "schema": payload["schema"],
@@ -300,11 +354,13 @@ def write_bench(fleet: dict, capsweep: dict, frontier: dict,
             (g["mean_wasted_cycles"] for g in frontier.get("grid", [])),
             default=None),
         # theta > 1 never batches (ratio identically 1.0), so track only
-        # thetas that can move as the policy improves or degrades
+        # thetas that can move as the policy improves or degrades; alpha=0
+        # keeps the trajectory comparable with schema-2 lines
         "risk_worst_energy_ratio": max(
             (g["adaptive_energy_ratio"] for g in frontier.get("grid", [])
-             if g["theta"] <= 1.0),
+             if g["theta"] <= 1.0 and g.get("alpha", 0.0) == 0.0),
             default=None),
+        "risk_ewma_recovery_max": max(recovery, default=None),
     }
     with history.open("a") as fh:
         fh.write(json.dumps(line) + "\n")
@@ -314,7 +370,8 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
                    n_devices_per_cap: int = 128,
                    frontier_devices: int = 256,
                    thetas=(0.25, 0.5, 0.75, 1.0, 1.5),
-                   cvs=(0.0, 0.2, 0.4, 0.8),
+                   cvs=(0.0, 0.3, 0.5, 0.8),
+                   alphas=(0.0, 0.25, 0.5),
                    warm: bool = False) -> tuple[list, dict, dict, dict]:
     """The fleetsim benchmark trio + its BENCH_fleet.json payloads -- the
     single composition shared by :func:`run` and the CLI so the recorded
@@ -328,7 +385,7 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
             + tails_capacitor_sweep(n_devices_per_cap=n_devices_per_cap,
                                     bench=cap_bench)
             + adaptive_risk_frontier(n_devices=frontier_devices,
-                                     thetas=thetas, cvs=cvs,
+                                     thetas=thetas, cvs=cvs, alphas=alphas,
                                      bench=risk_bench))
     write_bench(fleet_bench, cap_bench, risk_bench)
     return rows, fleet_bench, cap_bench, risk_bench
@@ -351,7 +408,7 @@ def main() -> None:
         rows, fleet_bench, _, risk_bench = _fleetsim_rows(
             n_devices=200, scalar_sample=2, n_devices_per_cap=16,
             frontier_devices=64, thetas=(0.5, 1.5), cvs=(0.0, 0.6),
-            warm=True)
+            alphas=(0.0, 0.25), warm=True)
     else:
         rows, fleet_bench, _, risk_bench = _fleetsim_rows()
     for n, v, d in rows:

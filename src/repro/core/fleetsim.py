@@ -28,8 +28,8 @@ run-time decisions are taken per device lane **inside** ``_scan_step``:
    their cost (``commit_cycles``/``commit_class``, the loop-cursor FRAM
    write).  Under ``policy="adaptive"`` (the energy-adaptive checkpoint-free
    policy of Islam et al. 2025, arXiv:2503.06663) every *charge* branches on
-   the measured buffer level: above ``theta * capacity`` the lane batches
-   commits to one cursor write per charge chunk instead of one per
+   the measured buffer level: above ``theta * believed-budget`` the lane
+   batches commits to one cursor write per charge chunk instead of one per
    iteration; below it (or under ``policy="fixed"``, the default) it keeps
    the paper's per-iteration commit.  The threshold is re-evaluated per
    charge -- the first visit of a row sees the carried buffer, every retry
@@ -37,6 +37,30 @@ run-time decisions are taken per device lane **inside** ``_scan_step``:
    ``theta <= 1``.  ``policy`` is a replay-time axis orthogonal to the six
    strategies; ``theta`` is a traced operand, so sweeping it reuses one
    compilation.
+
+   **Cross-charge batching** (``batch_rows > 1``) additionally defers the
+   *row-boundary* cursor write: a looped row that completes within a charge
+   while the lane is batching joins a *pending window* instead of
+   committing, and one cursor write per charge -- at the believed end of
+   the charge, or at the next per-iteration commit / atomic row -- makes
+   the whole window durable at once (up to ``batch_rows`` rows per write).
+   The price is **multi-row rollback**: a surprise-short charge that dies
+   before that write loses every pending row; the lane re-enters the
+   earliest uncommitted row and replays the lost cycles (the ``debt``
+   mechanism below) through the ``wasted_cycles`` channel, re-committing
+   replayed work once per charge so the rollback always converges.  With
+   ``batch_rows=1`` (the default) every row commits at its boundary and the
+   replay is bit-exact vs the single-row adaptive path.
+
+   **EWMA belief recalibration** (``belief_alpha > 0``) replaces the static
+   nominal per-charge budget with a carried believed budget ``bhat``,
+   updated from *observed* charge lengths at every death of a
+   refill-started charge: ``bhat += alpha * (observed - bhat)``.  The
+   batching threshold becomes ``theta * bhat`` (a confidence margin) and
+   every refill wakes believing ``bhat``, so a lane that keeps drawing
+   short charges shrinks its batch window -- and its tear losses -- instead
+   of planning against the nominal belief forever.  ``belief_alpha=0``
+   keeps ``bhat`` pinned to the nominal capacity bit-exactly.
 3. **Recharge dead time** -- the scan indexes a per-lane cumulative
    recharge-trace table (``runtime.failures.recharge_trace_cumulative`` over
    ``reboot_recharge_times``) by the lane's running reboot counter, so each
@@ -64,8 +88,14 @@ Plan rows and the paper's Sec. 6 commit protocol
 ------------------------------------------------
 Each row models one committed unit of work as ``(kind, n, iter_cycles,
 entry_cycles, commit_cycles)`` plus per-class cycle vectors
-(:data:`repro.core.energy.OP_CLASSES` order) and the charge-order offsets
-``entry_start`` (where each class begins inside one entry attempt):
+(:data:`repro.core.energy.OP_CLASSES` order) and a *charge-segment list*
+``entry_seg_class``/``entry_seg_cycles`` -- the entry's cost blocks in the
+exact order the scalar simulator charges them (one segment per
+``device.charge(op, n)`` call).  A torn first attempt books its burned
+prefix by walking this list, which stays exact even for rows merged from
+multi-dict charge sequences (naive whole-net rows, Tile-k tasks spanning
+segments) where one class appears in several constituent dicts and a
+single per-class offset table would misattribute the burn:
 
 ``kind=WORK, n > 0``  -- a SONIC/TAILS *segment* under loop continuation
     (Sec. 6.1): ``n`` iterations of ``iter_cycles`` each, committed by the
@@ -119,9 +149,16 @@ Equivalence guarantees (pinned by ``tests/test_fleetsim.py`` and
   that select a smaller tile in-scan.
 * Torn partial burns are attributed by charge order: when a lane dies
   before affording a row's entry, the burned prefix is booked to the entry
-  ops' own classes via ``entry_start`` (matching the scalar simulator's
-  per-op accounting); only chunk-boundary drains are booked to ``control``.
-  Totals are exact in both schemes.
+  ops' own classes by walking the row's charge-segment list (matching the
+  scalar simulator's per-op accounting exactly, including rows merged from
+  multi-dict charge sequences); only chunk-boundary drains are booked to
+  ``control``.  Totals are exact in both schemes.
+* ``batch_rows=1`` with ``belief_alpha=0`` reduces the cross-charge
+  machinery to the single-row adaptive path bit-exactly (the pending
+  window never opens, the believed budget stays nominal), and the whole
+  decision surface is differentially tested against a slow pure-Python
+  reference interpreter (``tests/reference_replay.py``) that replays the
+  same plans charge by charge.
 """
 
 from __future__ import annotations
@@ -160,8 +197,8 @@ _K_TILES = len(tails_tile_candidates())
 
 #: Scanned row fields shared by every plan.
 _ROW_FIELDS = ("kind", "n", "iter_cycles", "entry_cycles", "iter_class",
-               "entry_class", "commit_cycles", "commit_class", "entry_start",
-               "tile_flag")
+               "entry_class", "commit_cycles", "commit_class",
+               "entry_seg_class", "entry_seg_cycles", "tile_flag")
 #: Additional scanned fields of parameterized (TAILS) plans.
 _TILE_FIELDS = ("tile_n", "tile_iter_cycles", "tile_iter_class",
                 "tile_sel_cost")
@@ -188,7 +225,8 @@ class FleetPlan:
     entry_class: np.ndarray      # (S, C) float64 per-entry class cycles
     commit_cycles: np.ndarray    # (S,) per-iteration commit share of iter
     commit_class: np.ndarray     # (S, C) class vector of that share
-    entry_start: np.ndarray      # (S, C) charge-order start offsets of entry
+    entry_seg_class: np.ndarray  # (S, G) int32 class index per charge block
+    entry_seg_cycles: np.ndarray  # (S, G) cycles per charge block (0 = pad)
     tile_flag: np.ndarray        # (S,) int32: 1 = row uses the tile tables
     max_atomic: float            # scalar simulator's non-termination bound
     ref_output: np.ndarray       # continuous-execution output (bit-exact)
@@ -217,34 +255,44 @@ class _RowBuffer:
     def _vec(self, counts: dict) -> np.ndarray:
         return np.asarray(class_cycle_vector(self.costs, counts))
 
-    def _charge_order(self, counts: dict) -> np.ndarray:
-        """Start offset of each class inside one charge_bulk pass over
-        ``counts`` in dict (= charge) order; classes absent stay at 0 with a
-        zero length in ``entry_class``, so they book nothing."""
-        start = np.zeros(_N_CLASSES)
-        off = 0.0
-        for op, k in counts.items():
-            start[OP_CLASSES.index(op)] = off
-            off += getattr(self.costs, op) * k
-        return start
+    def _segments(self, entry_seq) -> tuple[list, list]:
+        """Flatten a charge-ordered sequence of ``(counts, times)`` cost
+        dicts into the row's charge-segment list: one ``(class, cycles)``
+        block per ``device.charge(op, n * times)`` call the scalar executor
+        performs, in execution order.  A torn first attempt walks this list,
+        so the burned prefix lands on exactly the classes the scalar's
+        per-op accounting charges -- even when one class recurs across the
+        sequence's dicts (merged naive / Tile-k rows)."""
+        cls, cyc = [], []
+        for counts, times in entry_seq:
+            for op, k in counts.items():
+                c = getattr(self.costs, op) * k * times
+                if c > 0:
+                    cls.append(OP_CLASSES.index(op))
+                    cyc.append(float(c))
+        return (cls or [0]), (cyc or [0.0])
 
-    def _append(self, kind, n, iv, ev, cv, start, tile_flag=0, tile=None):
+    def _append(self, kind, n, iv, ev, cv, segs, tile_flag=0, tile=None):
         if tile is None:
             tile = (np.zeros(_K_TILES), np.zeros(_K_TILES),
                     np.zeros((_K_TILES, _N_CLASSES)), np.zeros(_K_TILES))
         self.rows.append((kind, float(n), float(iv.sum()), float(ev.sum()),
-                          iv, ev, float(cv.sum()), cv, start,
+                          iv, ev, float(cv.sum()), cv, segs,
                           int(tile_flag), *tile))
 
     def work(self, n: int, iter_counts: dict, entry_counts: dict,
-             commit_counts: dict | None = None) -> None:
+             commit_counts: dict | None = None,
+             entry_seq: list | None = None) -> None:
+        """``entry_seq`` is the charge-ordered ``(counts, times)`` sequence
+        the entry cost was merged from; defaults to the single merged dict
+        (exact for single-dict rows)."""
         self._append(KIND_WORK, n, self._vec(iter_counts),
                      self._vec(entry_counts), self._vec(commit_counts or {}),
-                     self._charge_order(entry_counts))
+                     self._segments(entry_seq or [(entry_counts, 1.0)]))
 
     def burn(self) -> None:
         z = np.zeros(_N_CLASSES)
-        self._append(KIND_BURN, 0.0, z, z, z, z.copy())
+        self._append(KIND_BURN, 0.0, z, z, z, ([0], [0.0]))
 
     def calib(self, taps: int) -> None:
         """One parameterized calibration for ``taps``: the scan derives the
@@ -252,7 +300,7 @@ class _RowBuffer:
         z = np.zeros(_N_CLASSES)
         sel = np.asarray([tails_tile_cost_from(self.costs, taps, c)
                           for c in tails_tile_candidates()])
-        self._append(KIND_CALIB, 0.0, z, z, z, z.copy(),
+        self._append(KIND_CALIB, 0.0, z, z, z, ([0], [0.0]),
                      tile=(np.zeros(_K_TILES), np.zeros(_K_TILES),
                            np.zeros((_K_TILES, _N_CLASSES)), sel))
 
@@ -278,11 +326,17 @@ class _RowBuffer:
         self.rows.append((KIND_WORK, tile_n[nominal_k], tile_ic[nominal_k],
                           float(ev.sum()), tile_iv[nominal_k], ev,
                           float(cv.sum()), cv,
-                          self._charge_order(entry_counts), 1,
+                          self._segments([(entry_counts, 1.0)]), 1,
                           tile_n, tile_ic, tile_iv, sel))
 
     def arrays(self) -> dict:
         cols = list(zip(*self.rows))
+        g = max(len(c) for c, _cyc in cols[8])
+        seg_cls = np.zeros((len(self.rows), g), np.int32)
+        seg_cyc = np.zeros((len(self.rows), g), np.float64)
+        for i, (c, cyc) in enumerate(cols[8]):
+            seg_cls[i, :len(c)] = c
+            seg_cyc[i, :len(cyc)] = cyc
         out = dict(kind=np.asarray(cols[0], np.int32),
                    n=np.asarray(cols[1], np.float64),
                    iter_cycles=np.asarray(cols[2], np.float64),
@@ -291,7 +345,8 @@ class _RowBuffer:
                    entry_class=np.stack(cols[5]).astype(np.float64),
                    commit_cycles=np.asarray(cols[6], np.float64),
                    commit_class=np.stack(cols[7]).astype(np.float64),
-                   entry_start=np.stack(cols[8]).astype(np.float64),
+                   entry_seg_class=seg_cls,
+                   entry_seg_cycles=seg_cyc,
                    tile_flag=np.asarray(cols[9], np.int32))
         if self.parametric:
             out.update(tile_n=np.stack(cols[10]).astype(np.float64),
@@ -380,11 +435,17 @@ def build_plan(net: SimNet, x: np.ndarray, strategy: str, power,
         # The whole inference is one atomic unit: naive accumulates in
         # registers and has no commits, so any power failure restarts it
         # from scratch (a single row re-paying everything on each retry).
+        # The per-layer dicts are kept as the row's charge-segment list so
+        # a torn attempt books its burned prefix to exactly the (layer, op)
+        # blocks the scalar executor charges, in order.
         probe = Device(make_power_system("continuous"), costs)
         counts: dict = {}
+        seq: list = []
         for layer, in_shape in zip(net.layers, net.shapes()):
-            _merge(counts, naive_layer_cycles(probe, layer, in_shape))
-        buf.work(0, {}, counts)
+            lc = naive_layer_cycles(probe, layer, in_shape)
+            _merge(counts, lc)
+            seq.append((lc, 1.0))
+        buf.work(0, {}, counts, entry_seq=seq)
         return FleetPlan(net.name, strategy, power_sys.name, capacity,
                          power_sys.recharge_s, max_atomic=max_atomic,
                          ref_output=ref_out, **buf.arrays())
@@ -433,14 +494,21 @@ def build_plan(net: SimNet, x: np.ndarray, strategy: str, power,
             else:
                 # Tile-k: enumerate the actual tasks (a task may span segment
                 # boundaries), each an atomic redo-log + commit + transition.
+                # The span-ordered dicts are the row's charge-segment list
+                # (the scalar runner charges seg entry, then iters, per
+                # span, then the commit walk).
                 for u, hi, spans in iter_task_spans(segs, tile_k):
                     counts = {}
+                    seq = []
                     for seg, lo_l, hi_l in spans:
                         _merge(counts, seg.seg_costs)
+                        seq.append((seg.seg_costs, 1.0))
                         _merge(counts, seg.iter_costs, hi_l - lo_l)
-                    _merge(counts, {"commit_word": hi - u,
-                                    "task_transition": 1})
-                    buf.work(0, {}, counts)
+                        seq.append((seg.iter_costs, float(hi_l - lo_l)))
+                    tail = {"commit_word": hi - u, "task_transition": 1}
+                    _merge(counts, tail)
+                    seq.append((tail, 1.0))
+                    buf.work(0, {}, counts, entry_seq=seq)
         # Layer-boundary commit: one atomic NV word (the layer cursor).
         buf.work(0, {}, {"fram_write": 1})
 
@@ -454,8 +522,8 @@ def build_plan(net: SimNet, x: np.ndarray, strategy: str, power,
 # Jitted replay
 # ==========================================================================
 
-def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, adaptive,
-               parametric, stochastic, state, row):
+def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, window, alpha,
+               adaptive, parametric, stochastic, state, row):
     """Advance device state over one plan row.
 
     Power failure is a state transition: the buffer's remainder is burned
@@ -463,22 +531,46 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, adaptive,
     and the row resumes with a fresh charge.  Deterministic charges
     (``stochastic=False``) collapse an ``n``-iteration row's reboots to the
     closed form ``ceil(remaining / per-charge affordable iterations)``; with
-    a charge-capacity trace the row is replayed charge by charge instead,
+    a charge-capacity trace -- or cross-charge batching, which needs the
+    charge boundaries -- the row is replayed charge by charge instead,
     because refill ``r`` delivers ``charge_cum[r] - charge_cum[r-1]`` cycles
-    while the lane still *believes* the nominal ``cap``.  The four per-lane
-    decisions (tile, commit granularity, per-reboot dead time, per-charge
-    capacity) are taken here; ``adaptive``/``parametric``/``stochastic`` are
-    static (``theta`` is traced), so the default configuration compiles to
-    exactly the legacy closed form (bit-exact vs the scalar simulator).
+    while the lane still *believes* its budget ``bhat``.  The per-lane
+    decisions (tile, commit granularity + cross-charge window, per-reboot
+    dead time, per-charge capacity, belief recalibration) are taken here;
+    ``adaptive``/``parametric``/``stochastic`` are static (``theta``,
+    ``window`` and ``alpha`` are traced), so the default configuration
+    compiles to exactly the legacy closed form (bit-exact vs the scalar
+    simulator) and the theta x window x alpha frontier reuses ONE compile.
+
+    Cross-charge state (all zero/nominal unless ``window > 1`` or
+    ``alpha > 0``):
+
+    ``pend``/``pend_class``/``pend_rows``
+        the *pending window*: cycles, class vector and row count of
+        completed-but-uncommitted rows deferred within the current charge.
+        Every charge either commits the window (one cursor write, at the
+        believed end of the charge or at any other durable commit) or
+        tears it -- pending work never survives a reboot uncommitted.
+    ``bhat``
+        the EWMA believed per-charge budget (init: nominal capacity),
+        updated at every death of a refill-started charge from the
+        observed charge length; refills wake believing ``bhat``.
+    ``chg``
+        cycles spent so far in the current charge (the observation).
+    ``debt``/``debt_class`` (charge-loop local)
+        torn pending work being replayed: the lane re-entered the earliest
+        uncommitted row and re-executes the lost cycles, committing once
+        per replay charge so the rollback converges monotonically.
     """
     import jax.numpy as jnp  # deferred: keep `import repro.core` jax-free
     from jax import lax
 
     # `bel` is the lane's *believed* remaining budget: the device counts
-    # spent cycles against the nominal capacity, so within one charge the
-    # belief error (nominal - actual delivery) persists across rows.  On
+    # spent cycles against its believed capacity, so within one charge the
+    # belief error (believed - actual delivery) persists across rows.  On
     # the deterministic path bel == rem always (zero belief error).
-    rem, bel, live, reboots, dead, classes, wasted, stuck = state
+    (rem, bel, live, reboots, dead, classes, wasted, stuck,
+     pend, pend_class, pend_rows, bhat, chg) = state
 
     def trace_window(cum, r0, r1, fallback):
         """Windowed sum of a per-lane cumulative trace over reboots
@@ -507,15 +599,27 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, adaptive,
     cc, commit_class = row["commit_cycles"], row["commit_class"]
     has_iters = n > 0
 
+    def torn_prefix(p):
+        """Charge-order attribution of a torn entry prefix: walk the row's
+        charge-segment list and book ``clip(p - start, 0, len)`` of each
+        block to its own class (what the scalar's per-op ``charge`` does).
+        Exact for multi-dict rows where one class recurs across blocks."""
+        seg_cyc = row["entry_seg_cycles"]
+        starts = jnp.cumsum(seg_cyc) - seg_cyc
+        amt = jnp.clip(p - starts, 0.0, seg_cyc)
+        return jnp.zeros_like(entry_class).at[row["entry_seg_class"]].add(amt)
+
     # -- decision 2: commit granularity, re-evaluated per charge -----------
     # Above the threshold a charge batches the per-iteration cursor commit
     # to one write per chunk: entry effectively grows by one commit,
     # iterations shed theirs.  The first visit of a row measures the
     # carried (believed) buffer; every retry visit wakes at a
     # believed-full buffer, so retries batch iff theta <= 1.  Continuous
-    # lanes always qualify (infinite buffer == maximal energy).
+    # lanes always qualify (infinite buffer == maximal energy).  The
+    # threshold is a *confidence margin* against the believed budget
+    # ``bhat`` (== the nominal capacity while belief_alpha == 0).
     if adaptive:
-        lvl0 = jnp.where(jnp.isinf(cap), True, bel >= theta * cap)
+        lvl0 = jnp.where(jnp.isinf(cap), True, bel >= theta * bhat)
         lvlr = theta <= 1.0
         batch0 = has_iters & (cc > 0.0) & lvl0
         batchr = has_iters & (cc > 0.0) & lvlr
@@ -572,8 +676,7 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, adaptive,
         # charge order (what the scalar's per-op `charge` does); only
         # drains go to control.
         torn = jnp.where(entered, jnp.zeros_like(entry_class),
-                         jnp.clip(rem - row["entry_start"], 0.0,
-                                  entry_class))
+                         torn_prefix(rem))
         fail_classes = fail_classes + torn
         residue = (fail_live - entries * e - afford0 * c0 - rem_iters * cr
                    - fail_commits * cc - jnp.where(entered, 0.0, rem))
@@ -587,102 +690,231 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, adaptive,
         new_classes = classes + jnp.where(ok, ok_classes, fail_classes)
         new_stuck = stuck | ((~ok) & row_stuck)
         new_wasted = wasted      # a predicted commit never loses work
+        # cross-charge state is inert on the closed-form path: it is only
+        # selected when window == 1 and there is no capacity trace, where
+        # the pending window never opens and the belief stays nominal.
+        new_pend, new_pend_class = pend, pend_class
+        new_pend_rows, new_bhat, new_chg = pend_rows, bhat, chg
     else:
-        # -- decision 4: charge-by-charge replay over the capacity trace --
+        # -- decisions 4/5: charge-by-charge replay over the capacity
+        # trace, with the cross-charge pending window and EWMA belief -----
         def refill_sum(r0, r1):
             """Total capacity of refills (r0, r1]; past-trace refills fall
             back to the nominal `cap`."""
             return trace_window(charge_cum, r0, r1, cap)
 
         def charge_body(s):
-            rem_l, bel_l, left, live_l, rb, cls, waste, stk, done = s
-            a = rem_l                      # actual deliverable this charge
-            est = bel_l                    # the lane's believed budget
+            (rem_l, bel_l, left, live_l, rb, cls, waste, pnd, pcls, prw,
+             bh, chg_l, debt, dcls, stk, done) = s
+            a0 = rem_l                     # actual deliverable this charge
+            est0 = bel_l                   # the lane's believed budget
+
+            # ---- phase 0: multi-row rollback replay.  Torn pending work
+            # (debt) is re-executed first, one believed-affordable slice
+            # per charge, each slice sealed by its own cursor commit so a
+            # replay never grows the rollback (it converges even when the
+            # charges that tore it stay short).
+            have_debt = debt > 0.0
+            debt_s = jnp.maximum(debt, 1e-30)
+            want = jnp.where(have_debt,
+                             jnp.minimum(debt,
+                                         jnp.maximum(est0 - cc, 0.0)), 0.0)
+            dok = have_debt & (want > 0.0) & (a0 >= want + cc)
+            dfail = have_debt & ~dok
+            # a *partial* repay leaves the cursor still inside the rolled-
+            # back rows: the lane cannot run the current row ahead of its
+            # own replay, so the rest of the charge drains and the next
+            # charge continues repaying.  `dend`: this charge ends inside
+            # the replay phase and the row phase never runs.
+            dpart = dok & ((debt - want) > 0.0)
+            dend = dfail | dpart
+            d_exec = jnp.where(dfail, jnp.minimum(want, a0), 0.0)
+            d_spend = jnp.where(dok, want + cc, 0.0)
+            a1 = a0 - d_spend
+            est1 = jnp.maximum(est0 - d_spend, 0.0)
+            debt1 = jnp.where(dok, debt - want, debt)
+            dcls1 = jnp.where(dok, dcls * ((debt - want) / debt_s), dcls)
+            d_cls = jnp.where(dok, dcls * (want / debt_s) + commit_class,
+                              jnp.zeros_like(commit_class))
+            # a replay commit is a cursor write: it would also cover any
+            # pending rows (pend is zero whenever debt is nonzero by
+            # construction -- a tear converts the whole window to debt)
+            pnd1 = jnp.where(dok, 0.0, pnd)
+            pcls1 = jnp.where(dok, jnp.zeros_like(pcls), pcls)
+            prw1 = jnp.where(dok, 0.0, prw)
+
+            # ---- batch decision for this charge: the believed remaining
+            # budget (post-replay) against the confidence margin
+            # theta * bhat; window > 1 additionally defers the
+            # row-boundary commit while the pending window has room.
             if adaptive:
                 batch = (has_iters & (cc > 0.0)
-                         & (jnp.isinf(cap) | (est >= theta * cap)))
+                         & (jnp.isinf(cap) | (est1 >= theta * bh)))
+                defer = batch & ((prw1 + 1.0) < window)
             else:
                 batch = jnp.asarray(False)
+                defer = jnp.asarray(False)
             e_b = jnp.where(batch, e + cc, e)
             c_b = jnp.where(batch, c - cc, c)
             c_bs = jnp.maximum(c_b, 1e-30)
             iv = jnp.where(batch, iter_class - commit_class, iter_class)
-            entered = a >= e
+
+            # ---- row phase: schedule from belief, execute against actual
+            entered = a1 >= e
             # chunk the lane schedules from its believed budget
-            k_est = jnp.clip(jnp.where(est >= e_b,
-                                       jnp.floor((est - e_b) / c_bs), 0.0),
+            k_est = jnp.clip(jnp.where(est1 >= e_b,
+                                       jnp.floor((est1 - e_b) / c_bs), 0.0),
                              0.0, left)
+            # a deferred row completion schedules all remaining iterations
+            # with no commit; otherwise the commit is reserved at the end
+            fin_cost = e + left * c_b + jnp.where(batch & ~defer, cc, 0.0)
+            plan_fin = est1 >= fin_cost
+            sched_i = jnp.where(batch & plan_fin, left, k_est)
             # iterations the actual charge affords (per-iteration commits
             # run until real death; entry first, batched commit last)
             k_act = jnp.clip(jnp.where(entered,
-                                       jnp.floor((a - e_b) / c_bs), 0.0),
+                                       jnp.floor((a1 - e_b) / c_bs), 0.0),
                              0.0, left)
             k_exec = jnp.clip(jnp.where(entered,
-                                        jnp.floor((a - e) / c_bs), 0.0),
-                              0.0, k_est)
-            commit_ok = a >= e_b + k_est * c_b
-            fin = (a >= e_b + left * c_b) & (~batch | (k_est >= left))
+                                        jnp.floor((a1 - e) / c_bs), 0.0),
+                              0.0, jnp.where(batch, sched_i, left))
+            fin = jnp.where(batch, plan_fin & (a1 >= fin_cost),
+                            a1 >= e + left * c_b)
+            # boundary commit: believed end-of-charge at a row boundary
+            # with a pending window and no schedulable chunk -- the lane
+            # writes the deferred cursor commit *before* draining forward
+            # into the next row's entry.
+            boundary = batch & ~plan_fin & (k_est == 0.0) & (prw1 > 0.0)
+            sched_commit = jnp.where(plan_fin, ~defer,
+                                     (k_est > 0.0) | (prw1 > 0.0))
+            commit_ok = jnp.where(boundary, a1 >= cc,
+                                  a1 >= e_b + sched_i * c_b)
+            # did a batched cursor write land before this charge died?
+            land = batch & ~plan_fin & sched_commit & commit_ok
 
             # committed progress this charge: a batched chunk commits all
             # or nothing (surprise death -> rollback to the last cursor)
-            prog = jnp.where(batch, jnp.where(commit_ok, k_est, 0.0),
-                             k_act)
             exec_iters = jnp.where(batch,
-                                   jnp.where(commit_ok, k_est, k_exec),
+                                   jnp.where(land & ~boundary, sched_i,
+                                             k_exec),
                                    k_act)
-            commit_n = jnp.where(batch & commit_ok & (k_est > 0), 1.0, 0.0)
+            prog = jnp.where(batch,
+                             jnp.where(land & ~boundary, sched_i, 0.0),
+                             k_act)
+            commit_n = jnp.where(land, 1.0, 0.0)
 
-            torn_v = jnp.where(entered, jnp.zeros_like(entry_class),
-                               jnp.clip(a - row["entry_start"], 0.0,
-                                        entry_class))
-            cls_burn = (jnp.where(entered, entry_class,
+            # death-path entry burn (the boundary commit spends cc first;
+            # a failed boundary commit never reaches the entry at all)
+            p_entry = jnp.where(boundary,
+                                jnp.where(land, a1 - cc, -1.0), a1)
+            entered_d = p_entry >= e
+            torn_v = jnp.where(entered_d, jnp.zeros_like(entry_class),
+                               torn_prefix(p_entry))
+            entry_burn = jnp.where(entered_d, e,
+                                   jnp.clip(p_entry, 0.0, e))
+            cls_burn = (jnp.where(entered_d, entry_class,
                                   jnp.zeros_like(entry_class))
                         + torn_v + exec_iters * iv
                         + commit_n * commit_class)
-            residue = (a - jnp.where(entered, e, a)
-                       - exec_iters * c_b - commit_n * cc)
-            cls_burn = cls_burn.at[_CONTROL_IDX].add(residue)
-            spend_fin = e_b + left * c_b
+            residue = (a1 - entry_burn - exec_iters * c_b - commit_n * cc)
+            cls_death = cls_burn.at[_CONTROL_IDX].add(residue)
+            spend_fin = fin_cost
             cls_fin = (entry_class + left * iv
-                       + jnp.where(batch, 1.0, 0.0) * commit_class)
+                       + jnp.where(batch & ~defer, 1.0, 0.0) * commit_class)
 
-            stuck_now = (~fin) & row_stuck
-            new_done = done | fin | stuck_now
-            return (jnp.where(fin, a - spend_fin,
+            fin_ok = fin & ~dend
+            # a death without any durable cursor write tears the pending
+            # window: those rows roll back and become replay debt
+            committed = jnp.where(batch, land, k_act > 0.0)
+            tear = (~fin_ok) & ~dend & ~committed & (pnd1 > 0.0)
+            waste_add = (jnp.where((~fin_ok) & ~dend & batch & ~land,
+                                   k_exec * c_b, 0.0)
+                         + jnp.where(tear, pnd1, 0.0)
+                         + jnp.where(dfail, d_exec, 0.0))
+
+            # pending-window updates at a deferred row completion
+            pnd_fin = jnp.where(defer, pnd1 + spend_fin, 0.0)
+            pcls_fin = jnp.where(defer, pcls1 + entry_class + left * iv,
+                                 jnp.zeros_like(pcls))
+            prw_fin = jnp.where(defer, prw1 + 1.0, 0.0)
+
+            # decision 5: EWMA belief from the observed charge length
+            # (deaths of refill-started charges only: the wake charge is
+            # partial and calibration burns precede any work).  The belief
+            # is quantized to whole cycles -- budgets are discrete
+            # everywhere else in the model, and the rounding keeps the
+            # update reproducible bit-for-bit across compilers (XLA may
+            # contract the multiply-add into an FMA).
+            died = dend | ~fin
+            obs = chg_l + a0
+            bh_new = jnp.where((alpha > 0.0) & (rb > 0.0) & died,
+                               jnp.maximum(jnp.rint(bh + alpha * (obs - bh)),
+                                           1.0),
+                               bh)
+
+            stuck_now = (~fin_ok) & row_stuck
+            new_done = done | fin_ok | stuck_now
+            dfail_cls = (dcls * (d_exec / debt_s)
+                         ).at[_CONTROL_IDX].add(a0 - d_exec)
+            # a partial repay's drained remainder is a chunk-boundary drain
+            dpart_cls = d_cls.at[_CONTROL_IDX].add(a1)
+            dend_cls = jnp.where(dfail, dfail_cls, dpart_cls)
+            return (jnp.where(fin_ok, a1 - spend_fin,
                               refill_sum(rb, rb + 1.0)),
                     # a completing row decays the belief by what was spent
                     # (clamped: the device may outlive its own forecast);
-                    # a burned charge resets it to believed-full.
-                    jnp.where(fin, jnp.maximum(est - spend_fin, 0.0),
-                              cap),
-                    jnp.where(fin, 0.0, left - prog),
-                    live_l + jnp.where(fin, spend_fin, a),
-                    rb + jnp.where(fin, 0.0, 1.0),
-                    cls + jnp.where(fin, cls_fin, cls_burn),
-                    waste + jnp.where(batch & ~commit_ok & ~fin,
-                                      k_exec * c_b, 0.0),
+                    # a burned charge resets it to the believed budget.
+                    jnp.where(fin_ok, jnp.maximum(est1 - spend_fin, 0.0),
+                              bh_new),
+                    jnp.where(fin_ok, 0.0,
+                              left - jnp.where(dend, 0.0, prog)),
+                    live_l + jnp.where(dend, a0,
+                                       d_spend + jnp.where(fin, spend_fin,
+                                                           a1)),
+                    rb + jnp.where(fin_ok, 0.0, 1.0),
+                    cls + jnp.where(dend, dend_cls,
+                                    d_cls + jnp.where(fin, cls_fin,
+                                                      cls_death)),
+                    waste + waste_add,
+                    jnp.where(dend, pnd1,
+                              jnp.where(fin, pnd_fin, 0.0)),
+                    jnp.where(dend, pcls1,
+                              jnp.where(fin, pcls_fin,
+                                        jnp.zeros_like(pcls))),
+                    jnp.where(dend, prw1,
+                              jnp.where(fin, prw_fin, 0.0)),
+                    bh_new,
+                    jnp.where(fin_ok, chg_l + d_spend + spend_fin, 0.0),
+                    debt1 + jnp.where(tear, pnd1, 0.0),
+                    dcls1 + jnp.where(tear, pcls1, jnp.zeros_like(pcls)),
                     stk | stuck_now, new_done)
 
-        init = (rem, bel, n, live, reboots, classes, wasted, stuck,
-                row["kind"] != KIND_WORK)
-        out = lax.while_loop(lambda s: ~s[8], charge_body, init)
+        init = (rem, bel, n, live, reboots, classes, wasted,
+                pend, pend_class, pend_rows, bhat, chg,
+                jnp.zeros_like(rem), jnp.zeros_like(pend_class),
+                stuck, row["kind"] != KIND_WORK)
+        out = lax.while_loop(lambda s: ~s[15], charge_body, init)
         (new_rem, new_bel, _, new_live, new_reboots, new_classes,
-         new_wasted, new_stuck, _) = out
+         new_wasted, new_pend, new_pend_class, new_pend_rows, new_bhat,
+         new_chg, _debt, _dcls, new_stuck, _) = out
 
     # -- BURN rows: a failed calibration attempt drains the whole buffer ---
+    # (calibration precedes any deferrable work, so the pending window is
+    # empty here; the deliberate drain is not a budget observation)
     is_burn = row["kind"] == KIND_BURN
     if stochastic:
         new_rem = jnp.where(is_burn, refill_sum(reboots, reboots + 1.0),
                             new_rem)
     else:
         new_rem = jnp.where(is_burn, cap, new_rem)
-    new_bel = jnp.where(is_burn, cap, new_bel)
+    new_bel = jnp.where(is_burn, bhat, new_bel)
     new_live = jnp.where(is_burn, live + rem, new_live)
     new_reboots = jnp.where(is_burn, reboots + 1.0, new_reboots)
     burn_vec = jnp.zeros_like(classes).at[_BURN_IDX].add(rem)
     new_classes = jnp.where(is_burn, classes + burn_vec, new_classes)
     new_stuck = jnp.where(is_burn, stuck, new_stuck)
     new_wasted = jnp.where(is_burn, wasted, new_wasted)
+    new_chg = jnp.where(is_burn, jnp.zeros_like(new_chg), new_chg)
 
     # -- CALIB rows: per-lane burn count from the capacitor (Sec. 7.1) -----
     if parametric:
@@ -700,7 +932,7 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, adaptive,
                                    0.0)
             calib_rem = jnp.where(burns > 0, cap, rem)
         new_rem = jnp.where(is_calib, calib_rem, new_rem)
-        new_bel = jnp.where(is_calib, jnp.where(burns > 0, cap, bel),
+        new_bel = jnp.where(is_calib, jnp.where(burns > 0, bhat, bel),
                             new_bel)
         new_live = jnp.where(is_calib, live + calib_live, new_live)
         new_reboots = jnp.where(is_calib, reboots + burns, new_reboots)
@@ -708,36 +940,47 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, adaptive,
         new_classes = jnp.where(is_calib, classes + calib_vec, new_classes)
         new_stuck = jnp.where(is_calib, stuck, new_stuck)
         new_wasted = jnp.where(is_calib, wasted, new_wasted)
+        new_chg = jnp.where(is_calib & (burns > 0),
+                            jnp.zeros_like(new_chg), new_chg)
 
     # -- decision 3: per-reboot dead time from the lane's recharge trace ---
     new_dead = dead + trace_window(trace_cum, reboots, new_reboots, tail_s)
 
     return (new_rem, new_bel, new_live, new_reboots, new_dead, new_classes,
-            new_wasted, new_stuck), None
+            new_wasted, new_stuck, new_pend, new_pend_class, new_pend_rows,
+            new_bhat, new_chg), None
 
 
 def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum, theta,
-              adaptive, parametric, stochastic):
+              window, alpha, adaptive, parametric, stochastic):
     import jax.numpy as jnp
     from jax import lax
 
     # NB: the wasted channel is zeros_like(rem0) (not a fresh constant) so
     # its shard_map replication matches the other carries even on the
-    # deterministic path, where the scan never updates it.
+    # deterministic path, where the scan never updates it.  The same holds
+    # for every cross-charge carry (pend, pend_rows, bhat, chg).
     state0 = (rem0, rem0,             # actual + believed remaining budget
               jnp.asarray(0.0, rem0.dtype),
               jnp.asarray(0.0, rem0.dtype),
               jnp.asarray(0.0, rem0.dtype),
               jnp.zeros((_N_CLASSES,), rem0.dtype),
               jnp.zeros_like(rem0),
-              jnp.asarray(False))
+              jnp.asarray(False),
+              jnp.zeros_like(rem0),                    # pending cycles
+              jnp.zeros((_N_CLASSES,), rem0.dtype),    # pending classes
+              jnp.zeros_like(rem0),                    # pending rows
+              cap + jnp.zeros_like(rem0),              # believed budget
+              jnp.zeros_like(rem0))                    # spent this charge
     final, _ = lax.scan(
         lambda s, r: _scan_step(cap, trace_cum, tail_s, charge_cum, theta,
-                                adaptive, parametric, stochastic, s, r),
+                                window, alpha, adaptive, parametric,
+                                stochastic, s, r),
         state0, rows)
-    rem, bel, live, reboots, dead, classes, wasted, stuck = final
+    (rem, bel, live, reboots, dead, classes, wasted, stuck,
+     pend, pend_class, pend_rows, bhat, chg) = final
     return dict(live=live, reboots=reboots, dead=dead, classes=classes,
-                wasted=wasted, stuck=stuck, rem=rem)
+                wasted=wasted, stuck=stuck, rem=rem, belief=bhat)
 
 
 @lru_cache(maxsize=None)
@@ -748,14 +991,16 @@ def _vmap_replay(shared_rows: bool, adaptive: bool, parametric: bool,
     ``shared_rows=True``: one plan broadcast across every device lane (fleet
     sweeps; avoids materializing D copies of the plan).  ``adaptive``/
     ``parametric``/``stochastic`` are static so the default configuration
-    compiles to exactly the legacy closed form; ``theta`` is a traced
-    operand, so a threshold sweep reuses one compilation."""
+    compiles to exactly the legacy closed form; ``theta``, ``window`` (the
+    cross-charge commit window) and ``alpha`` (the EWMA belief rate) are
+    traced operands, so sweeping any of them reuses one compilation."""
     import jax
-    in_axes = ((None if shared_rows else 0), 0, 0, 0, 0, 0, None)
+    in_axes = ((None if shared_rows else 0), 0, 0, 0, 0, 0, None, None,
+               None)
     return jax.vmap(
-        lambda rows, cap, rem0, tc, ts, ccum, theta: _scan_one(
-            rows, cap, rem0, tc, ts, ccum, theta, adaptive, parametric,
-            stochastic),
+        lambda rows, cap, rem0, tc, ts, ccum, theta, window, alpha:
+        _scan_one(rows, cap, rem0, tc, ts, ccum, theta, window, alpha,
+                  adaptive, parametric, stochastic),
         in_axes=in_axes)
 
 
@@ -784,7 +1029,7 @@ def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
     rows_spec = P() if shared_rows else lane
     return jax.jit(compat_shard_map(
         fn, mesh,
-        in_specs=(rows_spec, lane, lane, lane, lane, lane, P()),
+        in_specs=(rows_spec, lane, lane, lane, lane, lane, P(), P(), P()),
         out_specs=lane))
 
 
@@ -799,8 +1044,10 @@ def _pad_axis0(a: np.ndarray, pad: int) -> np.ndarray:
 
 def _pad_stack(plans: list[FleetPlan]) -> dict:
     """Stack plans of different lengths; padding rows are no-op WORK rows.
-    Tile tables are included iff any plan is parameterized (zero-filled for
-    the rest: ``tile_flag=0`` rows never read them)."""
+    Trailing axes that vary per plan (the charge-segment axis) are padded
+    to the batch maximum too (zero-length segments book nothing).  Tile
+    tables are included iff any plan is parameterized (zero-filled for the
+    rest: ``tile_flag=0`` rows never read them)."""
     smax = max(len(p) for p in plans)
     fields = _ROW_FIELDS + (_TILE_FIELDS if any(p.parametric for p in plans)
                             else ())
@@ -814,7 +1061,16 @@ def _pad_stack(plans: list[FleetPlan]) -> dict:
                          if k == "tile_iter_class" else (len(p), _K_TILES))
                 v = np.zeros(shape)
             out[k].append(_pad_axis0(v, pad))
-    return {k: np.stack(v) for k, v in out.items()}
+    stacked = {}
+    for k, vs in out.items():
+        if vs[0].ndim > 1:
+            gmax = tuple(max(v.shape[i] for v in vs)
+                         for i in range(1, vs[0].ndim))
+            vs = [np.pad(v, [(0, 0)] + [(0, g - s) for g, s in
+                                        zip(gmax, v.shape[1:])])
+                  for v in vs]
+        stacked[k] = np.stack(vs)
+    return stacked
 
 
 def _plan_rows(plan: FleetPlan) -> dict:
@@ -825,21 +1081,31 @@ def _plan_rows(plan: FleetPlan) -> dict:
 def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 shared_rows: bool, trace_cum: np.ndarray | None = None,
                 tail_s: np.ndarray | None = None, policy: str = "fixed",
-                theta: float = 0.5, charge_cum: np.ndarray | None = None,
+                theta: float = 0.5, batch_rows: int = 1,
+                belief_alpha: float = 0.0,
+                charge_cum: np.ndarray | None = None,
                 mesh=None) -> dict:
     if policy not in REPLAY_POLICIES:
         raise ValueError(f"unknown replay policy {policy!r}; "
                          f"expected one of {REPLAY_POLICIES}")
+    if batch_rows < 1:
+        raise ValueError(f"batch_rows must be >= 1, got {batch_rows}")
+    if not 0.0 <= belief_alpha < 1.0:
+        raise ValueError(f"belief_alpha must be in [0, 1), "
+                         f"got {belief_alpha}")
     n_lanes = caps.shape[0]
     parametric = "tile_sel_cost" in rows
-    stochastic = charge_cum is not None
+    adaptive = policy == "adaptive"
+    # Cross-charge batching needs the charge boundaries even without a
+    # capacity trace: route it through the charge-by-charge path, where a
+    # missing trace degenerates to all-nominal refills.
+    stochastic = charge_cum is not None or (adaptive and batch_rows > 1)
     if trace_cum is None:
         trace_cum = np.zeros((n_lanes, 1), np.float64)
     if charge_cum is None:
         charge_cum = np.zeros((n_lanes, 1), np.float64)
     if tail_s is None:
         tail_s = np.zeros(n_lanes, np.float64)
-    adaptive = policy == "adaptive"
     with _x64():
         import jax.numpy as jnp
         args = [{k: jnp.asarray(v) for k, v in rows.items()},
@@ -847,7 +1113,9 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 jnp.asarray(trace_cum), jnp.asarray(np.broadcast_to(
                     np.asarray(tail_s, np.float64), (n_lanes,))),
                 jnp.asarray(charge_cum),
-                jnp.asarray(float(theta), jnp.float64)]
+                jnp.asarray(float(theta), jnp.float64),
+                jnp.asarray(float(batch_rows), jnp.float64),
+                jnp.asarray(float(belief_alpha), jnp.float64)]
         if mesh is None:
             out = _jit_replay(shared_rows, adaptive, parametric,
                               stochastic)(*args)
@@ -882,11 +1150,13 @@ class ReplayOut:
     completed: bool
     dead_s: float = 0.0
     wasted_cycles: float = 0.0   # committed-work rollback re-execution
+    belief_cycles: float = 0.0   # final EWMA believed per-charge budget
 
 
 def replay_plans(plans: list[FleetPlan],
                  init_frac: np.ndarray | None = None,
                  policy: str = "fixed", theta: float = 0.5,
+                 batch_rows: int = 1, belief_alpha: float = 0.0,
                  recharge_traces: np.ndarray | None = None,
                  charge_traces: np.ndarray | None = None
                  ) -> list[ReplayOut]:
@@ -902,7 +1172,10 @@ def replay_plans(plans: list[FleetPlan],
     ``runtime.failures.charge_capacity_jitter``) that switches the replay
     to the stochastic charge-by-charge path; charges beyond the trace
     deliver the nominal capacity.  ``policy``/``theta`` select the
-    commit-granularity policy (see the module docstring).
+    commit-granularity policy, ``batch_rows`` the cross-charge commit
+    window (rows per cursor write under ``policy="adaptive"``), and
+    ``belief_alpha`` the EWMA belief-recalibration rate (see the module
+    docstring).
 
     Completion is the in-scan ``stuck`` flag: per-lane exact for
     parameterized plans (where the static ``max_atomic`` bound is sized
@@ -935,7 +1208,8 @@ def replay_plans(plans: list[FleetPlan],
         ccum = charge_trace_cumulative(charge_traces)
     out = _run_replay(_pad_stack(plans), caps, rem0, shared_rows=False,
                       trace_cum=cum, tail_s=tail, policy=policy,
-                      theta=theta, charge_cum=ccum)
+                      theta=theta, batch_rows=batch_rows,
+                      belief_alpha=belief_alpha, charge_cum=ccum)
     results = []
     for i, p in enumerate(plans):
         by_class = {op: float(v) for op, v in
@@ -944,7 +1218,8 @@ def replay_plans(plans: list[FleetPlan],
                                  int(round(float(out["reboots"][i]))),
                                  by_class, bool(~out["stuck"][i]),
                                  dead_s=float(out["dead"][i]),
-                                 wasted_cycles=float(out["wasted"][i])))
+                                 wasted_cycles=float(out["wasted"][i]),
+                                 belief_cycles=float(out["belief"][i])))
     return results
 
 
@@ -956,6 +1231,7 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
                    strategies=STRATEGIES,
                    powers=POWER_SYSTEMS,
                    policy: str = "fixed", theta: float = 0.5,
+                   batch_rows: int = 1, belief_alpha: float = 0.0,
                    recharge_traces: np.ndarray | None = None,
                    charge_traces: np.ndarray | None = None
                    ) -> list[RunResult]:
@@ -966,8 +1242,9 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
     ``tests/test_fleetsim.py`` asserts field-level equivalence).
     ``recharge_traces`` (one row per matrix cell, in strategy-major order)
     switches dead time to trace replay; ``charge_traces`` (same layout)
-    switches charge capacities to stochastic trace replay; ``policy``
-    selects the commit granularity."""
+    switches charge capacities to stochastic trace replay; ``policy``/
+    ``theta``/``batch_rows``/``belief_alpha`` select the commit-granularity
+    policy and its cross-charge window / belief recalibration."""
     import dataclasses
 
     plans = []
@@ -988,6 +1265,7 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
                     capacity=math.inf if ps.continuous
                     else ps.cycles_per_charge))
     outs = replay_plans(plans, policy=policy, theta=theta,
+                        batch_rows=batch_rows, belief_alpha=belief_alpha,
                         recharge_traces=recharge_traces,
                         charge_traces=charge_traces)
     results = []
@@ -1020,6 +1298,11 @@ class FleetSweepResult:
     energy_j: np.ndarray         # (D,)
     wall_s: float                # build + replay wall-clock
     wasted_cycles: np.ndarray | None = None   # (D,) rollback re-execution
+    belief_cycles: np.ndarray | None = None   # (D,) final EWMA budget
+    policy: str = "fixed"        # commit policy the sweep ran under
+    theta: float = 0.5
+    batch_rows: int = 1
+    belief_alpha: float = 0.0
 
     @property
     def total_s(self) -> np.ndarray:
@@ -1029,6 +1312,7 @@ class FleetSweepResult:
         done = self.completed
         return {
             "devices": self.n_devices,
+            "policy": self.policy,
             "completed": int(done.sum()),
             "mean_total_s": float(self.total_s[done].mean()) if done.any()
             else float("inf"),
@@ -1039,6 +1323,9 @@ class FleetSweepResult:
             "mean_wasted_cycles":
                 float(self.wasted_cycles[done].mean())
                 if self.wasted_cycles is not None and done.any() else 0.0,
+            "mean_belief_cycles":
+                float(self.belief_cycles[done].mean())
+                if self.belief_cycles is not None and done.any() else 0.0,
             "wall_s": round(self.wall_s, 3),
         }
 
@@ -1048,7 +1335,9 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                 recharge_cv: float = 0.25,
                 plan: FleetPlan | None = None,
                 policy: str = "fixed", theta: float = 0.5,
+                batch_rows: int = 1, belief_alpha: float = 0.0,
                 trace_reboots: int = 0, charge_cv: float = 0.0,
+                charge_bias_cv: float = 0.0,
                 charge_reboots: int = 0, mesh=None) -> FleetSweepResult:
     """Replay one (strategy, power) plan across ``n_devices`` simulated
     devices with per-device harvest-trace jitter, in one compiled pass.
@@ -1064,11 +1353,18 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
     (``charge_capacity_jitter``, truncated lognormal around the nominal
     budget, ``charge_reboots`` charges -- default 256) and the scan
     replays charges one by one, so surprise-short charges can tear batched
-    commits (the ``wasted_cycles`` channel).  ``policy="adaptive"`` turns
-    on energy-adaptive commit batching, ``mesh`` (e.g.
-    ``repro.launch.mesh.make_fleet_mesh()``) shards the device axis across
-    chips.  The plan is broadcast across device lanes, so memory scales
-    with plan size + fleet size, not their product.
+    commits (the ``wasted_cycles`` channel).  ``charge_bias_cv > 0``
+    additionally gives each device a *persistent* capacity bias (a fixed
+    lognormal multiplier on all of its charges -- a lane parked in a poor
+    RF spot), the regime where EWMA belief recalibration
+    (``belief_alpha > 0``) pays: the lane learns its own budget instead of
+    planning against the fleet-nominal one.  ``policy="adaptive"`` turns
+    on energy-adaptive commit batching, ``batch_rows`` stretches one
+    cursor commit across up to that many rows per charge (multi-row
+    rollback), ``mesh`` (e.g. ``repro.launch.mesh.make_fleet_mesh()``)
+    shards the device axis across chips.  The plan is broadcast across
+    device lanes, so memory scales with plan size + fleet size, not their
+    product.
     """
     from repro.runtime.failures import (charge_capacity_jitter,
                                         charge_trace_cumulative,
@@ -1090,14 +1386,16 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
         traces = reboot_recharge_times(n_devices, trace_reboots,
                                        plan.recharge_s, seed=seed + 2)
         cum = recharge_trace_cumulative(traces * jit_mult[:, None])
-    if charge_cv > 0 or charge_reboots > 0:
+    if charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0:
         ctr = charge_capacity_jitter(n_devices, charge_reboots or 256,
                                      plan.capacity, seed=seed + 3,
-                                     cv=charge_cv)
+                                     cv=charge_cv, bias_cv=charge_bias_cv)
         ccum = charge_trace_cumulative(ctr)
     out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
                       trace_cum=cum, tail_s=tail, policy=policy,
-                      theta=theta, charge_cum=ccum, mesh=mesh)
+                      theta=theta, batch_rows=batch_rows,
+                      belief_alpha=belief_alpha, charge_cum=ccum,
+                      mesh=mesh)
     return FleetSweepResult(
         strategy, power, n_devices,
         completed=~out["stuck"],
@@ -1106,7 +1404,10 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
         reboots=out["reboots"],
         energy_j=out["live"] * JOULES_PER_CYCLE,
         wall_s=time.perf_counter() - t0,
-        wasted_cycles=out["wasted"])
+        wasted_cycles=out["wasted"],
+        belief_cycles=out["belief"],
+        policy=policy, theta=theta, batch_rows=batch_rows,
+        belief_alpha=belief_alpha)
 
 
 @dataclass
@@ -1122,6 +1423,11 @@ class CapacitorSweepResult:
     energy_j: np.ndarray         # (P, D)
     wall_s: float
     wasted_cycles: np.ndarray | None = None   # (P, D)
+    belief_cycles: np.ndarray | None = None   # (P, D) final EWMA budget
+    policy: str = "fixed"
+    theta: float = 0.5
+    batch_rows: int = 1
+    belief_alpha: float = 0.0
 
     @property
     def total_s(self) -> np.ndarray:
@@ -1132,8 +1438,9 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
                     capacities, n_devices: int = 64, seed: int = 0,
                     recharge_cv: float = 0.25, strategy: str = "tails",
                     plan: FleetPlan | None = None, policy: str = "fixed",
-                    theta: float = 0.5, charge_cv: float = 0.0,
-                    charge_reboots: int = 0,
+                    theta: float = 0.5, batch_rows: int = 1,
+                    belief_alpha: float = 0.0, charge_cv: float = 0.0,
+                    charge_bias_cv: float = 0.0, charge_reboots: int = 0,
                     mesh=None) -> CapacitorSweepResult:
     """Sweep (capacitor size x device) in ONE vmapped/sharded replay of ONE
     parameterized plan -- no per-capacitor re-extraction.
@@ -1168,12 +1475,14 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
     rem0 = np.where(np.isinf(caps), np.inf, caps * frac)
     tail = np.where(np.isinf(caps), 0.0, rf_recharge_seconds(caps) * jit_mult)
     ccum = None
-    if charge_cv > 0 or charge_reboots > 0:
+    if charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0:
         ctr = charge_capacity_jitter(lanes, charge_reboots or 256, caps,
-                                     seed=seed + 3, cv=charge_cv)
+                                     seed=seed + 3, cv=charge_cv,
+                                     bias_cv=charge_bias_cv)
         ccum = charge_trace_cumulative(ctr)
     out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
                       tail_s=tail, policy=policy, theta=theta,
+                      batch_rows=batch_rows, belief_alpha=belief_alpha,
                       charge_cum=ccum, mesh=mesh)
     shape = (n_caps, n_devices)
     return CapacitorSweepResult(
@@ -1184,4 +1493,7 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
         reboots=out["reboots"].reshape(shape),
         energy_j=(out["live"] * JOULES_PER_CYCLE).reshape(shape),
         wall_s=time.perf_counter() - t0,
-        wasted_cycles=out["wasted"].reshape(shape))
+        wasted_cycles=out["wasted"].reshape(shape),
+        belief_cycles=out["belief"].reshape(shape),
+        policy=policy, theta=theta, batch_rows=batch_rows,
+        belief_alpha=belief_alpha)

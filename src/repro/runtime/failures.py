@@ -129,6 +129,7 @@ def recharge_trace_cumulative(traces: np.ndarray) -> np.ndarray:
 
 def charge_capacity_jitter(n_devices: int, n_charges: int, nominal_cycles,
                            seed: int = 0, cv: float = 0.25,
+                           bias_cv: float = 0.0,
                            lo: float = 0.25, hi: float = 4.0) -> np.ndarray:
     """Stochastic per-charge capacities: a ``(devices, charges)`` matrix of
     whole-cycle energy budgets, each a truncated-lognormal multiple of the
@@ -146,23 +147,42 @@ def charge_capacity_jitter(n_devices: int, n_charges: int, nominal_cycles,
     trace filled with the nominal capacity) reduces the stochastic replay
     bit-exactly to the deterministic closed form.
 
+    ``bias_cv > 0`` adds a *persistent* per-device multiplier (lognormal,
+    mean 1, coefficient of variation ``bias_cv``, one draw per device
+    applied to all of its charges): a lane parked in a poor RF spot keeps
+    drawing short charges while the fleet-nominal belief says otherwise.
+    This is the regime EWMA belief recalibration
+    (``fleetsim ... belief_alpha``) exists for -- per-charge iid jitter
+    averages out to the nominal, a persistent bias does not.  The combined
+    multiplier is clipped to ``[lo, hi]``.
+
     ``nominal_cycles`` may be a scalar (one capacitor fleet-wide) or a
     ``(devices,)`` vector (e.g. ``capacitor_sweep`` lanes).
     """
     if cv < 0:
         raise ValueError(f"cv must be >= 0, got {cv}")
+    if bias_cv < 0:
+        raise ValueError(f"bias_cv must be >= 0, got {bias_cv}")
     if not 0 < lo <= 1.0 <= hi:
         raise ValueError(f"need 0 < lo <= 1 <= hi, got lo={lo} hi={hi}")
     nominal = np.broadcast_to(
         np.asarray(nominal_cycles, np.float64).reshape(-1, 1),
         (n_devices, n_charges))
-    if cv == 0:
+    if cv == 0 and bias_cv == 0:
         mult = np.ones((n_devices, n_charges))
     else:
         rng = np.random.default_rng(seed)
-        sigma = np.sqrt(np.log1p(cv * cv))
-        mult = rng.lognormal(mean=-sigma * sigma / 2, sigma=sigma,
-                             size=(n_devices, n_charges))
+        if cv > 0:
+            sigma = np.sqrt(np.log1p(cv * cv))
+            mult = rng.lognormal(mean=-sigma * sigma / 2, sigma=sigma,
+                                 size=(n_devices, n_charges))
+        else:
+            mult = np.ones((n_devices, n_charges))
+        if bias_cv > 0:
+            bsig = np.sqrt(np.log1p(bias_cv * bias_cv))
+            bias = rng.lognormal(mean=-bsig * bsig / 2, sigma=bsig,
+                                 size=n_devices)
+            mult = mult * bias[:, None]
         mult = np.clip(mult, lo, hi)
     return np.maximum(np.rint(nominal * mult), 1.0)
 

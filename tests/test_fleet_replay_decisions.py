@@ -20,7 +20,7 @@ from repro.core import (POWER_SYSTEMS, STRATEGIES, Conv2D, DenseFC, Device,
                         build_plan, capacitor_sweep, custom_power_system,
                         evaluate, fleet_evaluate, fleet_sweep,
                         make_power_system, replay_plans)
-from repro.core.energy import CLOCK_HZ, LEA_COSTS, SOFTWARE_COSTS
+from repro.core.energy import CLOCK_HZ, LEA_COSTS, OP_CLASSES, SOFTWARE_COSTS
 from repro.core.inference import (run_naive, tails_tile_candidates,
                                   tails_tile_cost_from, tails_tile_index,
                                   tails_tile_schedule)
@@ -311,6 +311,196 @@ def test_theta_sweep_reuses_one_compilation(small_net):
     assert outs[0].live_cycles < outs[-1].live_cycles
 
 
+def test_theta_alpha_window_sweep_reuses_one_compilation(small_net):
+    """The belief axis too: theta, batch window and EWMA alpha are all
+    traced operands of the charge-by-charge compile, so the whole
+    theta x window x alpha frontier reuses ONE compilation."""
+    from repro.core.fleetsim import _jit_replay
+
+    net, x = small_net
+    plan = build_plan(net, x, "sonic", "100uF")
+    traces = np.full((1, 32), plan.capacity)
+    fn = _jit_replay(False, True, False, True)   # stochastic adaptive
+    replay_plans([plan], policy="adaptive", theta=0.33, batch_rows=2,
+                 belief_alpha=0.1, charge_traces=traces)    # warm the shape
+    n0 = fn._cache_size()
+    outs = []
+    for theta in (0.25, 0.75):
+        for w in (1, 3, 10_000):
+            for alpha in (0.0, 0.2, 0.6):
+                outs.append(replay_plans(
+                    [plan], policy="adaptive", theta=theta, batch_rows=w,
+                    belief_alpha=alpha, charge_traces=traces)[0])
+    assert fn._cache_size() == n0          # zero new compiles
+    assert all(o.completed for o in outs)
+    # sanity: the window still changes behavior (wider batches fewer
+    # cursor writes on well-behaved charges)
+    lo = replay_plans([plan], policy="adaptive", theta=0.25, batch_rows=1,
+                      charge_traces=traces)[0]
+    hi = replay_plans([plan], policy="adaptive", theta=0.25,
+                      batch_rows=10_000, charge_traces=traces)[0]
+    assert hi.live_cycles < lo.live_cycles
+
+
+# ==========================================================================
+# Decision 2b: cross-charge commit batching + multi-row rollback
+# ==========================================================================
+
+def test_cross_charge_window1_bit_exact_vs_single_row(small_net):
+    """The acceptance gate: the cross-charge machinery at batch window 1
+    and belief_alpha 0 is bit-exact vs the PR 3 single-row adaptive path
+    across the full strategy x power matrix -- through both the closed
+    form (defaults) and the charge-by-charge path (nominal traces)."""
+    from repro.core import make_power_system
+
+    net, x = small_net
+    caps = [make_power_system(p).cycles_per_charge or np.inf
+            for _s in STRATEGIES for p in POWER_SYSTEMS]
+    traces = np.tile(np.asarray(caps, np.float64)[:, None], (1, 40))
+    base = fleet_evaluate(net, x, policy="adaptive", theta=0.5)
+    w1 = fleet_evaluate(net, x, policy="adaptive", theta=0.5,
+                        batch_rows=1, belief_alpha=0.0,
+                        charge_traces=traces)
+    for b, s in zip(base, w1):
+        assert (b.strategy, b.power) == (s.strategy, s.power)
+        assert b.completed == s.completed, (b.strategy, b.power)
+        if not b.completed:
+            continue
+        assert b.reboots == s.reboots, (b.strategy, b.power)
+        assert b.energy_j == s.energy_j, (b.strategy, b.power)
+        assert b.by_class == s.by_class, (b.strategy, b.power)
+
+
+def test_cross_charge_batching_saves_commits_without_risk_on_nominal(
+        small_net):
+    """With deterministic (all-nominal) charges the believed schedule is
+    exact, so stretching one commit across the whole charge saves cursor
+    writes and never tears: strictly fewer fram_write cycles, zero
+    wasted, same completion."""
+    net, x = small_net
+    ps = custom_power_system(2e4)
+    plan = build_plan(net, x, "sonic", ps)
+    assert plan.total_cycles > 4 * plan.capacity
+    w1 = replay_plans([plan], policy="adaptive", theta=0.5)[0]
+    wide = replay_plans([plan], policy="adaptive", theta=0.5,
+                        batch_rows=10**6)[0]
+    assert wide.completed
+    assert wide.wasted_cycles == 0.0
+    assert wide.by_class["fram_write"] < w1.by_class["fram_write"]
+    assert wide.live_cycles < w1.live_cycles
+    # the window is monotone: more rows per commit, fewer commit cycles
+    prev = w1.by_class["fram_write"]
+    for w in (2, 8, 64):
+        out = replay_plans([plan], policy="adaptive", theta=0.5,
+                           batch_rows=w)[0]
+        assert out.completed and out.wasted_cycles == 0.0
+        assert out.by_class["fram_write"] <= prev + 1e-12
+        prev = out.by_class["fram_write"]
+
+
+def test_multi_row_rollback_pays_for_surprise_failures(small_net):
+    """Under jittered charges the wide window loses whole pending windows
+    to surprise-short charges: wasted grows vs the single-row window, and
+    the rollback re-execution keeps the lane's accounting exact."""
+    from repro.runtime.failures import charge_capacity_jitter
+
+    net, x = small_net
+    ps = custom_power_system(2e4)
+    plan = build_plan(net, x, "sonic", ps)
+    # seed 5 draws charges whose shortfall crosses the (1 - theta) margin,
+    # so batched chunks actually die before their cursor write
+    traces = charge_capacity_jitter(1, 128, plan.capacity, seed=5, cv=0.5)
+    w1 = replay_plans([plan], policy="adaptive", theta=0.5,
+                      charge_traces=traces)[0]
+    wide = replay_plans([plan], policy="adaptive", theta=0.5,
+                        batch_rows=10**6, charge_traces=traces)[0]
+    assert w1.completed and wide.completed
+    assert wide.wasted_cycles > w1.wasted_cycles
+    assert sum(wide.by_class.values()) == pytest.approx(
+        wide.live_cycles, rel=1e-12)
+
+
+# ==========================================================================
+# Decision 5: EWMA belief recalibration
+# ==========================================================================
+
+def test_ewma_belief_tracks_persistent_short_charges(small_net):
+    """A lane that keeps drawing half-nominal charges dies at the nominal
+    belief forever under alpha=0; with alpha > 0 the believed budget
+    converges to the true one, the batch window shrinks to what the lane
+    can actually afford, and both rollback waste and live energy drop."""
+    net, x = small_net
+    ps = custom_power_system(2e4)
+    plan = build_plan(net, x, "sonic", ps)
+    short = np.maximum(np.rint(np.full((1, 256), 0.5 * plan.capacity)), 1.0)
+    dumb = replay_plans([plan], policy="adaptive", theta=0.5,
+                        batch_rows=10**6, belief_alpha=0.0,
+                        charge_traces=short)[0]
+    smart = replay_plans([plan], policy="adaptive", theta=0.5,
+                         batch_rows=10**6, belief_alpha=0.3,
+                         charge_traces=short)[0]
+    assert dumb.completed and smart.completed
+    assert dumb.belief_cycles == plan.capacity          # never recalibrated
+    assert abs(smart.belief_cycles - 0.5 * plan.capacity) \
+        < 0.1 * plan.capacity                           # converged
+    assert smart.wasted_cycles < dumb.wasted_cycles
+    assert smart.live_cycles < dumb.live_cycles
+
+
+def test_ewma_alpha0_is_bit_exact_noop(small_net):
+    """belief_alpha=0 must not perturb a single bit of the stochastic
+    replay (the EWMA update is structurally gated, not just small)."""
+    from repro.runtime.failures import charge_capacity_jitter
+
+    net, x = small_net
+    ps = custom_power_system(2e4)
+    plan = build_plan(net, x, "sonic", ps)
+    traces = charge_capacity_jitter(1, 128, plan.capacity, seed=3, cv=0.4)
+    a = replay_plans([plan], policy="adaptive", theta=0.5,
+                     charge_traces=traces)[0]
+    b = replay_plans([plan], policy="adaptive", theta=0.5,
+                     belief_alpha=0.0, charge_traces=traces)[0]
+    assert a.live_cycles == b.live_cycles
+    assert a.wasted_cycles == b.wasted_cycles
+    assert a.by_class == b.by_class
+    assert b.belief_cycles == plan.capacity
+
+
+def test_ewma_fleet_sweep_with_biased_lanes(small_net):
+    """Composition with the fleet sweep: persistent per-lane bias
+    (charge_bias_cv) plus EWMA recalibration -- beliefs spread across
+    lanes (each learns its own budget) and fleet-mean energy improves
+    over the nominal-belief fleet."""
+    net, x = small_net
+    ps = custom_power_system(2e4)
+    plan = build_plan(net, x, "sonic", ps)
+    kw = dict(n_devices=96, seed=5, plan=plan, policy="adaptive",
+              theta=0.5, batch_rows=10**6, charge_cv=0.2,
+              charge_bias_cv=0.5, charge_reboots=192)
+    dumb = fleet_sweep(net, x, "sonic", ps, belief_alpha=0.0, **kw)
+    smart = fleet_sweep(net, x, "sonic", ps, belief_alpha=0.25, **kw)
+    assert dumb.completed.all() and smart.completed.all()
+    assert (dumb.belief_cycles == plan.capacity).all()
+    assert smart.belief_cycles.std() > 0      # per-lane learned budgets
+    assert smart.energy_j.mean() < dumb.energy_j.mean()
+    assert smart.summary()["mean_wasted_cycles"] < \
+        dumb.summary()["mean_wasted_cycles"]
+    assert smart.summary()["policy"] == "adaptive"
+    # the knobs are recorded on the sweep surface
+    assert smart.belief_alpha == 0.25 and smart.batch_rows == 10**6
+
+
+def test_replay_param_validation(small_net):
+    net, x = small_net
+    plan = build_plan(net, x, "sonic", "1mF")
+    with pytest.raises(ValueError):
+        replay_plans([plan], policy="adaptive", batch_rows=0)
+    with pytest.raises(ValueError):
+        replay_plans([plan], policy="adaptive", belief_alpha=1.0)
+    with pytest.raises(ValueError):
+        replay_plans([plan], policy="adaptive", belief_alpha=-0.1)
+
+
 # ==========================================================================
 # Decision 4: stochastic per-charge capacity (the adaptive policy's risk)
 # ==========================================================================
@@ -420,6 +610,82 @@ def test_torn_burn_attributed_by_charge_order():
     assert set(out.by_class) <= set(dev.stats.by_class) | {"control"}
     assert out.by_class.get("control", 0.0) == \
         pytest.approx(dev.stats.by_class.get("control", 0.0), abs=1e-6)
+
+
+def test_torn_burn_multidict_row_attribution_exact():
+    """Regression for the ROADMAP open item: rows merged from multi-dict
+    charge sequences (here a 2-layer naive row, whose classes recur per
+    layer) misattribute a torn burn under a single per-class offset table,
+    because the merged dict pretends each class is one contiguous block.
+    The charge-segment list must reproduce the scalar device's per-op
+    accounting exactly -- pinned at a wake level that tears inside the
+    SECOND layer's op sequence."""
+    rng = np.random.default_rng(4)
+    net = SimNet([
+        Conv2D((rng.normal(size=(2, 1, 3, 3)) * 0.4).astype(np.float32),
+               rng.normal(size=2).astype(np.float32)),
+        DenseFC((rng.normal(size=(6, 128)) * 0.1).astype(np.float32),
+                rng.normal(size=6).astype(np.float32), relu=False),
+    ], input_shape=(1, 10, 10), name="multidict")
+    x = rng.normal(size=(1, 10, 10)).astype(np.float32)
+    plan = build_plan(net, x, "naive", "1mF")
+    assert len(plan) == 1                  # the whole net is one row
+    segs = plan.entry_seg_class[0]
+    # the defect's precondition: some class appears in several segments
+    live_segs = segs[plan.entry_seg_cycles[0] > 0]
+    assert len(set(live_segs.tolist())) < len(live_segs)
+
+    e = float(plan.entry_cycles[0])
+    layer1 = float(sum(plan.entry_seg_cycles[0][:5]))   # conv's 5 op blocks
+    frac = (layer1 + 0.4 * (e - layer1)) / plan.capacity   # dies in layer 2
+    out = replay_plans([plan], init_frac=[frac])[0]
+
+    dev = Device(make_power_system("1mF"), SOFTWARE_COSTS)
+    dev._remaining = plan.capacity * frac
+    while True:
+        try:
+            run_naive(net, x, dev)
+            break
+        except PowerFailure:
+            dev.reboot()
+    assert out.reboots == dev.stats.reboots == 1
+    assert out.live_cycles == pytest.approx(dev.stats.live_cycles,
+                                            rel=1e-12)
+    for op, cyc in dev.stats.by_class.items():
+        assert out.by_class.get(op, 0.0) == pytest.approx(cyc,
+                                                          rel=1e-12), op
+    # ... and the retired merged-offset approximation really is wrong
+    # here: booking the torn prefix against per-class offsets of the
+    # merged dict disagrees with the scalar on at least one class.
+    burned = plan.capacity * frac
+    start, approx = {}, {}
+    off = 0.0
+    for cls_i, cyc in zip(plan.entry_seg_class[0],
+                          plan.entry_seg_cycles[0]):
+        op = OP_CLASSES[int(cls_i)]
+        if cyc > 0 and op not in start:
+            start[op] = off
+        off += float(cyc)
+    totals = {op: float(v) for op, v in
+              zip(OP_CLASSES, plan.entry_class[0]) if v > 0}
+    for op, tot in totals.items():
+        approx[op] = min(max(burned - start[op], 0.0), tot)
+    assert any(abs(approx[op] - dev.stats.by_class.get(op, 0.0)) > 1.0
+               for op in approx), "pinned case no longer exercises defect"
+
+
+def test_torn_burn_multidict_tilek_totals_exact(small_net):
+    """Tile-k task rows span segment boundaries (multi-dict too): at a
+    sub-entry wake level the per-class vector still sums exactly to live
+    cycles, and the torn prefix lands on real op classes, not control."""
+    net, x = small_net
+    plan = build_plan(net, x, "tile-8", "1mF")
+    e0 = float(plan.entry_cycles[0])
+    out = replay_plans([plan], init_frac=[0.5 * e0 / plan.capacity])[0]
+    assert sum(out.by_class.values()) == pytest.approx(out.live_cycles,
+                                                       rel=1e-12)
+    torn_classes = {op for op, v in out.by_class.items() if v > 0}
+    assert torn_classes - {"control"}
 
 
 def test_torn_totals_remain_exact(small_net):

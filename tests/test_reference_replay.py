@@ -1,0 +1,292 @@
+"""Differential test harness: the vectorized replay scan vs the pure-Python
+reference interpreter (``tests/reference_replay.py``).
+
+Hundreds of randomized (plan, trace, policy) configurations -- spanning
+strategy x policy x theta x batch window x belief alpha x charge jitter x
+persistent bias x wake level -- must agree with the oracle on every
+channel: bit-identically on the charge-by-charge scan path, and to
+visit-collapse rounding (sub-1e-6 cycles; reboots and completion exact) on
+the deterministic closed form, which describes the same trajectory with a
+different float summation grouping.  This subsumes the hand-pinned cv=0
+equivalence cases and gates the cross-charge batching tentpole.
+
+The oracle's accounting decomposition is property-tested alongside:
+``wall == useful + wasted + overhead`` exactly for every sampled config,
+``wasted == 0`` under per-iteration commits, and a completed lane's useful
+work equals the plan's net work under *any* commit policy.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from conftest import given, make_random_net, settings, st
+from reference_replay import plan_net_work, reference_replay
+
+from repro.core import build_plan, replay_plans
+from repro.core.energy import rf_recharge_seconds
+from repro.core.fleetsim import _plan_rows
+from repro.runtime.failures import (charge_capacity_jitter,
+                                    charge_trace_cumulative,
+                                    reboot_recharge_times,
+                                    recharge_trace_cumulative)
+
+LANES_PER_GROUP = 3
+N_CHARGES = 48          # fixed trace length keeps the jit cache warm
+N_RECHARGES = 16
+
+#: (policy, theta, batch_rows, belief_alpha) -- the commit-decision surface.
+POLICIES = (
+    ("fixed", 0.5, 1, 0.0),
+    ("adaptive", 0.5, 1, 0.0),          # the PR 3 single-row path
+    ("adaptive", 0.25, 4, 0.0),         # bounded cross-charge window
+    ("adaptive", 0.5, 1_000_000, 0.3),  # one commit per charge + EWMA
+    ("adaptive", 1.0, 2, 0.2),
+)
+
+#: (charge_cv, bias_cv, with_recharge_trace)
+JITTERS = ((0.0, 0.0, False), (0.4, 0.0, True), (0.25, 0.5, False))
+
+#: (net seed, strategy, capacity as a fraction of the plan's total cycles)
+PLANS = (
+    (0, "sonic", 0.20),
+    (1, "sonic", 0.08),
+    (2, "tile-8", 0.30),
+    (3, "naive", 1.50),
+    (4, "naive", 0.50),     # atomic unit exceeds the buffer: stuck lanes
+    (1, "tails", 0.15),
+)
+
+
+def _restamped(seed, strategy, cap_frac, parametric=False):
+    net, x = make_random_net(seed)
+    plan = build_plan(net, x, strategy, "1mF", parametric=parametric)
+    cap = max(2000.0, float(np.rint(cap_frac * plan.total_cycles)))
+    return dataclasses.replace(plan, capacity=cap,
+                               recharge_s=float(rf_recharge_seconds(cap)))
+
+
+@pytest.fixture(scope="module")
+def sweep_results():
+    """Replay every (plan x policy x jitter) group through the vectorized
+    scan AND the reference interpreter; one entry per lane."""
+    results = []
+    case_seed = 0
+    plans = [_restamped(*p) for p in PLANS]
+    plans.append(_restamped(1, "tails", 0.12, parametric=True))
+    for plan in plans:
+        rows = _plan_rows(plan)
+        for policy, theta, w, alpha in POLICIES:
+            for cv, bias, with_recharge in JITTERS:
+                case_seed += 1
+                rng = np.random.default_rng(case_seed)
+                frac = rng.uniform(0.02, 1.0, LANES_PER_GROUP)
+                ctr = cum = ccum = rtr = None
+                if cv > 0 or bias > 0:
+                    ctr = charge_capacity_jitter(
+                        LANES_PER_GROUP, N_CHARGES, plan.capacity,
+                        seed=case_seed, cv=cv, bias_cv=bias)
+                    ccum = charge_trace_cumulative(ctr)
+                if with_recharge:
+                    rtr = reboot_recharge_times(
+                        LANES_PER_GROUP, N_RECHARGES, plan.recharge_s,
+                        seed=case_seed + 1)
+                    cum = recharge_trace_cumulative(rtr)
+                outs = replay_plans(
+                    [plan] * LANES_PER_GROUP, init_frac=frac,
+                    policy=policy, theta=theta, batch_rows=w,
+                    belief_alpha=alpha, recharge_traces=rtr,
+                    charge_traces=ctr)
+                for i, out in enumerate(outs):
+                    ref = reference_replay(
+                        rows, plan.capacity, plan.capacity * frac[i],
+                        tail_s=plan.recharge_s,
+                        recharge_cum=None if cum is None else cum[i],
+                        charge_cum=None if ccum is None else ccum[i],
+                        policy=policy, theta=theta, batch_rows=w,
+                        belief_alpha=alpha)
+                    results.append(dict(
+                        cfg=(plan.strategy, plan.capacity, policy, theta,
+                             w, alpha, cv, bias, i),
+                        scan=out, ref=ref,
+                        # deterministic runs take the scan's closed-form
+                        # path; stuck lanes there book a bogus pass-through
+                        # (flagged DNF and discarded by fleet_evaluate), so
+                        # only the stuck flag is comparable
+                        closed_form=(ccum is None
+                                     and not (policy == "adaptive"
+                                              and w > 1)),
+                        net_work=plan_net_work(rows, plan.capacity)))
+    return results
+
+
+def test_enough_cases(sweep_results):
+    """The harness must cover at least 200 randomized configurations."""
+    assert len(sweep_results) >= 200
+    # ... exercising both completion outcomes and both commit policies
+    assert any(r["scan"].completed for r in sweep_results)
+    assert any(not r["scan"].completed for r in sweep_results)
+    assert any(r["cfg"][2] == "fixed" for r in sweep_results)
+    assert any(r["cfg"][4] > 1 for r in sweep_results)
+
+
+def test_scan_matches_reference_exactly(sweep_results):
+    """Every lane replayed through the charge-by-charge scan path is
+    *bit-identical* to the Python oracle on every channel.  Lanes on the
+    closed-form path (deterministic, window 1) describe the same trajectory
+    with the visit collapse's summation grouping, so their float channels
+    match to collapse rounding (sub-1e-6 cycles) instead of bitwise; their
+    integer-valued channels (reboots, completion) stay exact."""
+    from repro.core.energy import OP_CLASSES
+
+    for r in sweep_results:
+        scan, ref, cfg = r["scan"], r["ref"], r["cfg"]
+        assert scan.completed == (not ref["stuck"]), cfg
+        if ref["stuck"] and r["closed_form"]:
+            continue        # DNF channels of the closed form (see fixture)
+        assert scan.reboots == int(round(ref["reboots"])), cfg
+        ref_by_class = {op: v for op, v in zip(OP_CLASSES, ref["classes"])
+                        if v > 0.0}
+        if r["closed_form"]:
+            assert scan.live_cycles == pytest.approx(ref["live"],
+                                                     rel=1e-12), cfg
+            assert scan.wasted_cycles == pytest.approx(ref["wasted"],
+                                                       abs=1e-6), cfg
+            assert set(scan.by_class) == set(ref_by_class), cfg
+            for op, v in ref_by_class.items():
+                assert scan.by_class[op] == pytest.approx(
+                    v, rel=1e-9, abs=1e-6), (cfg, op)
+            assert scan.dead_s == pytest.approx(ref["dead"],
+                                                rel=1e-12), cfg
+        else:
+            assert scan.live_cycles == ref["live"], cfg
+            assert scan.wasted_cycles == ref["wasted"], cfg
+            assert scan.belief_cycles == ref["belief"], cfg
+            assert scan.by_class == ref_by_class, cfg
+            assert scan.dead_s == ref["dead"], cfg
+
+
+def test_accounting_invariant_all_configs(sweep_results):
+    """wall == useful + wasted + overhead holds *exactly* for every sampled
+    config (not just the fixed matrix in test_fleetsim.py), and the wasted
+    channel is zero under per-iteration commits."""
+    for r in sweep_results:
+        ref, cfg = r["ref"], r["cfg"]
+        assert ref["wall_cycles"] == pytest.approx(
+            ref["useful"] + ref["wasted_total"] + ref["overhead"],
+            rel=1e-12), cfg
+        if cfg[2] == "fixed":
+            assert r["scan"].wasted_cycles == 0.0, cfg
+            assert ref["wasted"] == 0.0, cfg
+
+
+def test_completed_useful_is_policy_invariant(sweep_results):
+    """A completed lane's useful work equals the plan's net work
+    sum(entry + n * (iter - commit)) at the lane's selected tile --
+    whatever the commit policy, window, belief or jitter did along the
+    way (rollback replays re-earn exactly what the tears un-earned)."""
+    seen = 0
+    for r in sweep_results:
+        if not r["scan"].completed:
+            continue
+        seen += 1
+        assert r["ref"]["useful"] == pytest.approx(
+            r["net_work"], rel=1e-9), r["cfg"]
+    assert seen >= 100      # the property was actually exercised
+
+
+def test_classes_total_is_live_all_configs(sweep_results):
+    """Per-class energy books every live cycle exactly, for every sampled
+    config (torn prefixes, drains, rollback replays included)."""
+    for r in sweep_results:
+        total = sum(r["scan"].by_class.values())
+        assert total == pytest.approx(r["scan"].live_cycles,
+                                      rel=1e-12), r["cfg"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(theta=st.floats(0.1, 1.2), w=st.integers(1, 6),
+       alpha=st.floats(0.0, 0.6), cv=st.floats(0.0, 0.6),
+       seed=st.integers(0, 2**20), frac=st.floats(0.02, 1.0))
+def test_hypothesis_differential(theta, w, alpha, cv, seed, frac):
+    """Hypothesis-driven corner probe of the same differential (skips
+    cleanly when hypothesis is not installed; the deterministic sweep
+    above provides the >= 200-case floor regardless)."""
+    plan = _hypothesis_plan()
+    rows = _plan_rows(plan)
+    ctr = None if cv == 0 else charge_capacity_jitter(
+        1, N_CHARGES, plan.capacity, seed=seed, cv=cv)
+    out = replay_plans([plan], init_frac=[frac], policy="adaptive",
+                       theta=theta, batch_rows=w, belief_alpha=alpha,
+                       charge_traces=ctr)[0]
+    ref = reference_replay(
+        rows, plan.capacity, plan.capacity * frac,
+        tail_s=plan.recharge_s,
+        charge_cum=None if ctr is None else
+        charge_trace_cumulative(ctr)[0],
+        policy="adaptive", theta=theta, batch_rows=w, belief_alpha=alpha)
+    assert out.live_cycles == ref["live"]
+    assert out.wasted_cycles == ref["wasted"]
+    assert out.reboots == int(round(ref["reboots"]))
+    assert ref["wall_cycles"] == pytest.approx(
+        ref["useful"] + ref["wasted_total"] + ref["overhead"], rel=1e-12)
+
+
+_HYP_PLAN = []
+
+
+def _hypothesis_plan():
+    if not _HYP_PLAN:
+        _HYP_PLAN.append(_restamped(0, "sonic", 0.15))
+    return _HYP_PLAN[0]
+
+
+def test_partial_debt_repay_never_drops_rollback_work():
+    """Regression: when EWMA shrinks the believed budget below an
+    outstanding multi-row rollback, a charge can only repay part of the
+    debt -- and must then drain, NOT let the current row finish on the
+    actual-bounded path with the residual debt silently dropped.  Pinned
+    trace: decent charges (tear a wide window), a run of very short ones
+    (belief collapses below the debt), then a long charge that would
+    previously complete the row around the unpaid debt."""
+    from repro.runtime.failures import charge_trace_cumulative
+
+    plan = _restamped(0, "sonic", 1.0)
+    plan = dataclasses.replace(plan, capacity=2e4)
+    rows = _plan_rows(plan)
+    cap = plan.capacity
+    tr = np.maximum(np.rint(np.array(
+        [[0.8 * cap, 0.9 * cap, 0.15 * cap, 0.2 * cap, 0.1 * cap,
+          0.25 * cap, 3.0 * cap] + [cap] * 40])), 1.0)
+    kw = dict(policy="adaptive", theta=0.5, batch_rows=10**6,
+              belief_alpha=0.4)
+    out = replay_plans([plan], init_frac=[0.9], charge_traces=tr, **kw)[0]
+    ref = reference_replay(rows, cap, cap * 0.9,
+                           charge_cum=charge_trace_cumulative(tr)[0], **kw)
+    assert out.completed and not ref["stuck"]
+    assert ref["belief"] < 0.5 * cap          # EWMA actually collapsed
+    assert out.wasted_cycles == ref["wasted"] > 0.0   # windows tore
+    assert out.live_cycles == ref["live"]
+    assert out.belief_cycles == ref["belief"]
+    # the invariant the dropped debt used to violate
+    assert ref["useful"] == pytest.approx(plan_net_work(rows, cap),
+                                          rel=1e-12)
+    assert ref["wall_cycles"] == pytest.approx(
+        ref["useful"] + ref["wasted_total"] + ref["overhead"], rel=1e-12)
+
+
+def test_reference_rejects_nothing_silently():
+    """Sanity: the oracle's decomposition reacts to policy (a batched lane
+    books commit overhead differently from a fixed one)."""
+    plan = _hypothesis_plan()
+    rows = _plan_rows(plan)
+    f = reference_replay(rows, plan.capacity, plan.capacity,
+                         policy="fixed")
+    a = reference_replay(rows, plan.capacity, plan.capacity,
+                         policy="adaptive", theta=0.25)
+    assert not f["stuck"] and not a["stuck"]
+    assert a["overhead"] < f["overhead"]          # batched cursor writes
+    assert f["useful"] == pytest.approx(a["useful"], rel=1e-12)
+    assert math.isfinite(f["dead"])

@@ -192,6 +192,34 @@ def test_charge_capacity_jitter_zero_cv_and_per_lane_nominal():
         charge_capacity_jitter(4, 4, 1e5, lo=1.5)
 
 
+def test_charge_capacity_bias_persistent_per_device():
+    """bias_cv gives each device a persistent multiplier: per-device means
+    spread with the requested bias while per-charge jitter stays around
+    each device's own mean -- and the fleet-wide mean stays nominal."""
+    nominal = 1.0e5
+    t = charge_capacity_jitter(4000, 64, nominal, seed=11, cv=0.1,
+                               bias_cv=0.5)
+    per_dev = t.mean(axis=1)
+    # device means spread like the bias (cv ~ 0.5), far beyond the
+    # per-charge jitter alone
+    assert per_dev.std() / per_dev.mean() == pytest.approx(0.5, rel=0.15)
+    assert t.mean() == pytest.approx(nominal, rel=0.05)
+    # within one device the spread is the per-charge cv
+    within = (t / per_dev[:, None]).std(axis=1).mean()
+    assert within == pytest.approx(0.1, rel=0.15)
+    # bias only (cv=0): each device's charges are constant
+    tb = charge_capacity_jitter(32, 16, nominal, seed=2, cv=0.0,
+                                bias_cv=0.4)
+    assert (tb.std(axis=1) == 0.0).all()
+    assert tb[:, 0].std() > 0
+    # deterministic per seed, validated input
+    np.testing.assert_array_equal(
+        charge_capacity_jitter(8, 4, nominal, seed=3, bias_cv=0.3),
+        charge_capacity_jitter(8, 4, nominal, seed=3, bias_cv=0.3))
+    with pytest.raises(ValueError):
+        charge_capacity_jitter(4, 4, nominal, bias_cv=-0.5)
+
+
 def test_charge_trace_cumulative_mirrors_recharge():
     """Prefix-sum table: out[:, 0] == 0, diffs reproduce the trace, 1-D or
     3-D input is a bug."""
@@ -234,6 +262,41 @@ def test_simulate_accounting_invariants():
                     job.total_steps * job.step_s, rel=1e-9), (policy, seed)
                 assert 0.0 < r.goodput <= 1.0
     assert saw_failures     # the invariants were exercised under failures
+
+
+def test_simulate_accounting_invariants_sampled_configs():
+    """Property form of the invariant audit: the wall-time decomposition
+    wall == useful + wasted + overhead must hold for *sampled* fleet/job
+    configurations (policy x interval x fleet size x step shape x seed),
+    not just the fixed matrix above -- and a run that never failed under a
+    checkpointing policy has exactly zero wasted time (the per-microbatch /
+    per-step commits lose nothing without a failure)."""
+    rng = np.random.default_rng(42)
+    policies = ("naive", "interval", "continuation")
+    checked = failures_seen = 0
+    for case in range(24):
+        policy = policies[case % 3]
+        job = JobSpec(total_steps=int(rng.integers(10, 60)),
+                      step_s=float(rng.uniform(10.0, 120.0)),
+                      microbatches=int(rng.integers(2, 12)),
+                      mb_commit_s=float(rng.uniform(0.1, 1.0)),
+                      ckpt_write_s=float(rng.uniform(5.0, 60.0)))
+        fleet = FleetSpec(n_hosts=int(rng.integers(200, 20_000)),
+                          mtbf_host_s=float(rng.uniform(10, 60)) * 86400)
+        r = simulate(policy, fleet, job,
+                     interval=int(rng.integers(1, 20)),
+                     seed=int(rng.integers(0, 2**16)), horizon_factor=30)
+        checked += 1
+        failures_seen += r.failures > 0
+        assert r.wall_s == pytest.approx(
+            r.useful_s + r.wasted_s + r.overhead_s, rel=1e-9), (policy, case)
+        assert r.wasted_s >= 0.0 and r.overhead_s >= 0.0, (policy, case)
+        if r.completed:
+            assert r.useful_s == pytest.approx(
+                job.total_steps * job.step_s, rel=1e-9), (policy, case)
+        if r.failures == 0:
+            assert r.wasted_s == 0.0, (policy, case)
+    assert checked == 24 and failures_seen >= 5
 
 
 def test_simulate_naive_failure_resets_all_progress():
