@@ -360,17 +360,28 @@ def bench_history(out_path: Path | None = None,
     share an axis), runs on a shared run-index axis, full runs as filled
     markers and warm smoke runs as open ones (shape, not color, carries
     the run-config difference)."""
-    runs = []
+    all_runs = []
     if history.exists():
         for ln in history.read_text().splitlines():
             ln = ln.strip()
             if ln:
-                runs.append(json.loads(ln))
-    rows = [("history/bench_runs", len(runs),
+                all_runs.append(json.loads(ln))
+    rows = [("history/bench_runs", len(all_runs),
              f"lines in {history.name} (schema(s) "
-             f"{sorted({r.get('schema') for r in runs})})")]
-    if not runs:
+             f"{sorted({r.get('schema') for r in all_runs})})")]
+    if not all_runs:
         return rows
+    # Runs are only trajectory-comparable within one (devices, warm)
+    # group: a warm 200-device smoke run and a cold 1000-device full run
+    # measure different things, and mixing them under one line corrupts
+    # the plot.  Track the group of the latest run and skip the rest.
+    group = lambda r: (r.get("devices"), bool(r.get("warm")))
+    ref = group(all_runs[-1])
+    runs = [r for r in all_runs if group(r) == ref]
+    skipped = len(all_runs) - len(runs)
+    rows.append(("history/comparable_runs", len(runs),
+                 f"group devices={ref[0]} warm={ref[1]}; "
+                 f"skipped {skipped} non-comparable line(s)"))
     try:
         import matplotlib
         matplotlib.use("Agg")

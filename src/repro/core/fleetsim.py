@@ -167,6 +167,7 @@ import math
 import time
 from dataclasses import dataclass
 from functools import lru_cache
+from typing import Any, NamedTuple
 
 import numpy as np
 
@@ -202,6 +203,33 @@ _ROW_FIELDS = ("kind", "n", "iter_cycles", "entry_cycles", "iter_class",
 #: Additional scanned fields of parameterized (TAILS) plans.
 _TILE_FIELDS = ("tile_n", "tile_iter_cycles", "tile_iter_class",
                 "tile_sel_cost")
+
+#: Replay backends: "auto" resolves to the fused XLA event stream for
+#: stochastic replays (the deterministic closed form ignores the knob),
+#: "pallas" opts into the Pallas lane kernel (interpret-mode on CPU), and
+#: "_while" keeps the legacy data-dependent while-loop for differential
+#: testing (private; scheduled for removal once the fused path has been
+#: the default for one release).
+REPLAY_BACKENDS = ("auto", "xla", "pallas", "_while")
+
+
+class ScanState(NamedTuple):
+    """Named carry of the row scan (previously a positional 13-tuple whose
+    indices had to stay in sync with ``lambda s: ~s[15]``-style accessors
+    by hand)."""
+    rem: Any            # actual remaining budget this charge
+    bel: Any            # believed remaining budget this charge
+    live: Any
+    reboots: Any
+    dead: Any
+    classes: Any
+    wasted: Any
+    stuck: Any
+    pend: Any           # pending-window cycles (cross-charge batching)
+    pend_class: Any
+    pend_rows: Any
+    bhat: Any           # EWMA believed per-charge budget
+    chg: Any            # cycles spent so far in the current charge
 
 
 # ==========================================================================
@@ -565,338 +593,59 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, window, alpha,
     import jax.numpy as jnp  # deferred: keep `import repro.core` jax-free
     from jax import lax
 
+    from repro.kernels.charge_replay import (ChargeState, charge_once,
+                                             fast_forward, row_ctx,
+                                             trace_window)
+
     # `bel` is the lane's *believed* remaining budget: the device counts
     # spent cycles against its believed capacity, so within one charge the
     # belief error (believed - actual delivery) persists across rows.  On
     # the deterministic path bel == rem always (zero belief error).
     (rem, bel, live, reboots, dead, classes, wasted, stuck,
-     pend, pend_class, pend_rows, bhat, chg) = state
+     pend, pend_class, pend_rows, bhat, chg) = ScanState(*state)
 
-    def trace_window(cum, r0, r1, fallback):
-        """Windowed sum of a per-lane cumulative trace over reboots
-        (r0, r1]: gather-subtract inside the trace, `fallback` per entry
-        past its end.  Serves both the dead-time trace (fallback = mean
-        recharge) and the charge-capacity trace (fallback = nominal)."""
-        last = cum.shape[0] - 1
-        i0 = jnp.clip(r0, 0.0, last).astype(jnp.int32)
-        i1 = jnp.clip(r1, 0.0, last).astype(jnp.int32)
-        over = jnp.maximum(r1 - last, 0.0) - jnp.maximum(r0 - last, 0.0)
-        return cum[i1] - cum[i0] + over * fallback
+    # Decisions 1 + 2 (TAILS tile selection from the carried capacitor,
+    # retry-side commit granularity + the nominal passability bound) are
+    # shared with the fused event kernel -- one source of truth.
+    ctx = row_ctx(row, cap, theta, adaptive, parametric)
+    k = ctx.k
 
-    # -- decision 1: TAILS tile from the carried capacitor -----------------
-    if parametric:
-        sel = row["tile_sel_cost"]                        # (K,) fit costs
-        k = jnp.clip(jnp.sum((sel > cap).astype(jnp.int32)), 0, _K_TILES - 1)
-        is_param = row["tile_flag"] > 0
-        n = jnp.where(is_param, row["tile_n"][k], row["n"])
-        c = jnp.where(is_param, row["tile_iter_cycles"][k],
-                      row["iter_cycles"])
-        iter_class = jnp.where(is_param, row["tile_iter_class"][k],
-                               row["iter_class"])
-    else:
-        n, c, iter_class = row["n"], row["iter_cycles"], row["iter_class"]
-    e, entry_class = row["entry_cycles"], row["entry_class"]
-    cc, commit_class = row["commit_cycles"], row["commit_class"]
-    has_iters = n > 0
-
-    def torn_prefix(p):
-        """Charge-order attribution of a torn entry prefix: walk the row's
-        charge-segment list and book ``clip(p - start, 0, len)`` of each
-        block to its own class (what the scalar's per-op ``charge`` does).
-        Exact for multi-dict rows where one class recurs across blocks."""
-        seg_cyc = row["entry_seg_cycles"]
-        starts = jnp.cumsum(seg_cyc) - seg_cyc
-        amt = jnp.clip(p - starts, 0.0, seg_cyc)
-        return jnp.zeros_like(entry_class).at[row["entry_seg_class"]].add(amt)
-
-    # -- decision 2: commit granularity, re-evaluated per charge -----------
-    # Above the threshold a charge batches the per-iteration cursor commit
-    # to one write per chunk: entry effectively grows by one commit,
-    # iterations shed theirs.  The first visit of a row measures the
-    # carried (believed) buffer; every retry visit wakes at a
-    # believed-full buffer, so retries batch iff theta <= 1.  Continuous
-    # lanes always qualify (infinite buffer == maximal energy).  The
-    # threshold is a *confidence margin* against the believed budget
-    # ``bhat`` (== the nominal capacity while belief_alpha == 0).
-    if adaptive:
-        lvl0 = jnp.where(jnp.isinf(cap), True, bel >= theta * bhat)
-        lvlr = theta <= 1.0
-        batch0 = has_iters & (cc > 0.0) & lvl0
-        batchr = has_iters & (cc > 0.0) & lvlr
-    else:
-        batch0 = batchr = jnp.asarray(False)
-    e0 = jnp.where(batch0, e + cc, e)
-    c0 = jnp.where(batch0, c - cc, c)
-    er = jnp.where(batchr, e + cc, e)
-    cr = jnp.where(batchr, c - cc, c)
-    c0s = jnp.maximum(c0, 1e-30)
-    crs = jnp.maximum(cr, 1e-30)
-    iter_vec0 = jnp.where(batch0, iter_class - commit_class, iter_class)
-    iter_vecr = jnp.where(batchr, iter_class - commit_class, iter_class)
-
-    # Nominal passability: the scalar simulator's atomic-region bound,
-    # evaluated per lane on the *selected* tile (a row whose entry + one
-    # iteration exceed a nominal charge can never pass).
-    afford_nom = jnp.floor((cap - er) / crs)
-    row_stuck = jnp.where(has_iters, afford_nom < 1.0, e > cap)
+    cs0 = ChargeState(
+        rem=rem, bel=bel, left=ctx.n, live=live, reboots=reboots,
+        classes=classes, wasted=wasted, pend=pend, pend_class=pend_class,
+        pend_rows=pend_rows, bhat=bhat, chg=chg,
+        debt=jnp.zeros_like(rem), debt_class=jnp.zeros_like(pend_class),
+        stuck=stuck, done=row["kind"] != KIND_WORK)
 
     if not stochastic:
-        # -- closed form: every charge delivers exactly `cap` cycles ------
-        needed = e0 + n * c0
-        ok = rem >= needed
-
-        # failure path (finite capacity; never selected when rem == inf)
-        entered = rem >= e
-        afford0 = jnp.clip(jnp.where(entered,
-                                     jnp.floor((rem - e0) / c0s), 0.0),
-                           0.0, n)
-        rem_iters = n - afford0
-        afford_full = jnp.maximum(afford_nom, 1.0)
-        visits = jnp.where(has_iters,
-                           jnp.maximum(jnp.ceil(rem_iters / afford_full),
-                                       1.0),
-                           1.0)
-        n_last = jnp.where(has_iters,
-                           rem_iters - (visits - 1.0) * afford_full, 0.0)
-        fail_live = rem + (visits - 1.0) * cap + er + n_last * cr
-        fail_rem = cap - er - n_last * cr
-        entries = visits + entered.astype(rem.dtype)
-
-        # Batched-commit bookkeeping: one cursor write per visit that
-        # executed iterations (+1 if attempt 0 entered and progressed).
-        ok_commits = jnp.where(batch0, 1.0, 0.0)
-        fail_commits = (jnp.where(batchr, visits, 0.0)
-                        + jnp.where(batch0 & (afford0 > 0), 1.0, 0.0))
-
-        fail_classes = (entries * entry_class + afford0 * iter_vec0
-                        + rem_iters * iter_vecr
-                        + fail_commits * commit_class)
-        # Torn first-attempt burn: a lane that dies before affording the
-        # entry books the burned prefix to the entry ops' own classes in
-        # charge order (what the scalar's per-op `charge` does); only
-        # drains go to control.
-        torn = jnp.where(entered, jnp.zeros_like(entry_class),
-                         torn_prefix(rem))
-        fail_classes = fail_classes + torn
-        residue = (fail_live - entries * e - afford0 * c0 - rem_iters * cr
-                   - fail_commits * cc - jnp.where(entered, 0.0, rem))
-        fail_classes = fail_classes.at[_CONTROL_IDX].add(residue)
-
-        ok_classes = entry_class + n * iter_vec0 + ok_commits * commit_class
-        new_rem = jnp.where(ok, rem - needed, fail_rem)
-        new_bel = new_rem        # deterministic charges: belief is exact
-        new_live = live + jnp.where(ok, needed, fail_live)
-        new_reboots = reboots + jnp.where(ok, 0.0, visits)
-        new_classes = classes + jnp.where(ok, ok_classes, fail_classes)
-        new_stuck = stuck | ((~ok) & row_stuck)
-        new_wasted = wasted      # a predicted commit never loses work
-        # cross-charge state is inert on the closed-form path: it is only
+        # -- closed form: every charge delivers exactly `cap` cycles.
+        # The deterministic path IS the fast path: `fast_forward` is the
+        # same chunk/retry algebra the fused kernel applies whenever a
+        # lane's remaining trace is all-nominal, here applied to a fresh
+        # row.  (Cross-charge state is inert on this path: it is only
         # selected when window == 1 and there is no capacity trace, where
-        # the pending window never opens and the belief stays nominal.
-        new_pend, new_pend_class = pend, pend_class
-        new_pend_rows, new_bhat, new_chg = pend_rows, bhat, chg
+        # the pending window never opens and the belief stays nominal.)
+        out = fast_forward(ctx, cap, theta, adaptive, cs0)
     else:
         # -- decisions 4/5: charge-by-charge replay over the capacity
-        # trace, with the cross-charge pending window and EWMA belief -----
+        # trace, with the cross-charge pending window and EWMA belief.
+        # This data-dependent loop is the legacy backend="_while" form;
+        # the default fused constant-trip event stream lives in
+        # repro.kernels.charge_replay.event_replay and routes around
+        # _scan_step entirely (see _scan_one).
         def refill_sum(r0, r1):
-            """Total capacity of refills (r0, r1]; past-trace refills fall
-            back to the nominal `cap`."""
+            """Total capacity of refills (r0, r1]; past-trace refills
+            fall back to the nominal `cap`."""
             return trace_window(charge_cum, r0, r1, cap)
 
-        def charge_body(s):
-            (rem_l, bel_l, left, live_l, rb, cls, waste, pnd, pcls, prw,
-             bh, chg_l, debt, dcls, stk, done) = s
-            a0 = rem_l                     # actual deliverable this charge
-            est0 = bel_l                   # the lane's believed budget
-
-            # ---- phase 0: multi-row rollback replay.  Torn pending work
-            # (debt) is re-executed first, one believed-affordable slice
-            # per charge, each slice sealed by its own cursor commit so a
-            # replay never grows the rollback (it converges even when the
-            # charges that tore it stay short).
-            have_debt = debt > 0.0
-            debt_s = jnp.maximum(debt, 1e-30)
-            want = jnp.where(have_debt,
-                             jnp.minimum(debt,
-                                         jnp.maximum(est0 - cc, 0.0)), 0.0)
-            dok = have_debt & (want > 0.0) & (a0 >= want + cc)
-            dfail = have_debt & ~dok
-            # a *partial* repay leaves the cursor still inside the rolled-
-            # back rows: the lane cannot run the current row ahead of its
-            # own replay, so the rest of the charge drains and the next
-            # charge continues repaying.  `dend`: this charge ends inside
-            # the replay phase and the row phase never runs.
-            dpart = dok & ((debt - want) > 0.0)
-            dend = dfail | dpart
-            d_exec = jnp.where(dfail, jnp.minimum(want, a0), 0.0)
-            d_spend = jnp.where(dok, want + cc, 0.0)
-            a1 = a0 - d_spend
-            est1 = jnp.maximum(est0 - d_spend, 0.0)
-            debt1 = jnp.where(dok, debt - want, debt)
-            dcls1 = jnp.where(dok, dcls * ((debt - want) / debt_s), dcls)
-            d_cls = jnp.where(dok, dcls * (want / debt_s) + commit_class,
-                              jnp.zeros_like(commit_class))
-            # a replay commit is a cursor write: it would also cover any
-            # pending rows (pend is zero whenever debt is nonzero by
-            # construction -- a tear converts the whole window to debt)
-            pnd1 = jnp.where(dok, 0.0, pnd)
-            pcls1 = jnp.where(dok, jnp.zeros_like(pcls), pcls)
-            prw1 = jnp.where(dok, 0.0, prw)
-
-            # ---- batch decision for this charge: the believed remaining
-            # budget (post-replay) against the confidence margin
-            # theta * bhat; window > 1 additionally defers the
-            # row-boundary commit while the pending window has room.
-            if adaptive:
-                batch = (has_iters & (cc > 0.0)
-                         & (jnp.isinf(cap) | (est1 >= theta * bh)))
-                defer = batch & ((prw1 + 1.0) < window)
-            else:
-                batch = jnp.asarray(False)
-                defer = jnp.asarray(False)
-            e_b = jnp.where(batch, e + cc, e)
-            c_b = jnp.where(batch, c - cc, c)
-            c_bs = jnp.maximum(c_b, 1e-30)
-            iv = jnp.where(batch, iter_class - commit_class, iter_class)
-
-            # ---- row phase: schedule from belief, execute against actual
-            entered = a1 >= e
-            # chunk the lane schedules from its believed budget
-            k_est = jnp.clip(jnp.where(est1 >= e_b,
-                                       jnp.floor((est1 - e_b) / c_bs), 0.0),
-                             0.0, left)
-            # a deferred row completion schedules all remaining iterations
-            # with no commit; otherwise the commit is reserved at the end
-            fin_cost = e + left * c_b + jnp.where(batch & ~defer, cc, 0.0)
-            plan_fin = est1 >= fin_cost
-            sched_i = jnp.where(batch & plan_fin, left, k_est)
-            # iterations the actual charge affords (per-iteration commits
-            # run until real death; entry first, batched commit last)
-            k_act = jnp.clip(jnp.where(entered,
-                                       jnp.floor((a1 - e_b) / c_bs), 0.0),
-                             0.0, left)
-            k_exec = jnp.clip(jnp.where(entered,
-                                        jnp.floor((a1 - e) / c_bs), 0.0),
-                              0.0, jnp.where(batch, sched_i, left))
-            fin = jnp.where(batch, plan_fin & (a1 >= fin_cost),
-                            a1 >= e + left * c_b)
-            # boundary commit: believed end-of-charge at a row boundary
-            # with a pending window and no schedulable chunk -- the lane
-            # writes the deferred cursor commit *before* draining forward
-            # into the next row's entry.
-            boundary = batch & ~plan_fin & (k_est == 0.0) & (prw1 > 0.0)
-            sched_commit = jnp.where(plan_fin, ~defer,
-                                     (k_est > 0.0) | (prw1 > 0.0))
-            commit_ok = jnp.where(boundary, a1 >= cc,
-                                  a1 >= e_b + sched_i * c_b)
-            # did a batched cursor write land before this charge died?
-            land = batch & ~plan_fin & sched_commit & commit_ok
-
-            # committed progress this charge: a batched chunk commits all
-            # or nothing (surprise death -> rollback to the last cursor)
-            exec_iters = jnp.where(batch,
-                                   jnp.where(land & ~boundary, sched_i,
-                                             k_exec),
-                                   k_act)
-            prog = jnp.where(batch,
-                             jnp.where(land & ~boundary, sched_i, 0.0),
-                             k_act)
-            commit_n = jnp.where(land, 1.0, 0.0)
-
-            # death-path entry burn (the boundary commit spends cc first;
-            # a failed boundary commit never reaches the entry at all)
-            p_entry = jnp.where(boundary,
-                                jnp.where(land, a1 - cc, -1.0), a1)
-            entered_d = p_entry >= e
-            torn_v = jnp.where(entered_d, jnp.zeros_like(entry_class),
-                               torn_prefix(p_entry))
-            entry_burn = jnp.where(entered_d, e,
-                                   jnp.clip(p_entry, 0.0, e))
-            cls_burn = (jnp.where(entered_d, entry_class,
-                                  jnp.zeros_like(entry_class))
-                        + torn_v + exec_iters * iv
-                        + commit_n * commit_class)
-            residue = (a1 - entry_burn - exec_iters * c_b - commit_n * cc)
-            cls_death = cls_burn.at[_CONTROL_IDX].add(residue)
-            spend_fin = fin_cost
-            cls_fin = (entry_class + left * iv
-                       + jnp.where(batch & ~defer, 1.0, 0.0) * commit_class)
-
-            fin_ok = fin & ~dend
-            # a death without any durable cursor write tears the pending
-            # window: those rows roll back and become replay debt
-            committed = jnp.where(batch, land, k_act > 0.0)
-            tear = (~fin_ok) & ~dend & ~committed & (pnd1 > 0.0)
-            waste_add = (jnp.where((~fin_ok) & ~dend & batch & ~land,
-                                   k_exec * c_b, 0.0)
-                         + jnp.where(tear, pnd1, 0.0)
-                         + jnp.where(dfail, d_exec, 0.0))
-
-            # pending-window updates at a deferred row completion
-            pnd_fin = jnp.where(defer, pnd1 + spend_fin, 0.0)
-            pcls_fin = jnp.where(defer, pcls1 + entry_class + left * iv,
-                                 jnp.zeros_like(pcls))
-            prw_fin = jnp.where(defer, prw1 + 1.0, 0.0)
-
-            # decision 5: EWMA belief from the observed charge length
-            # (deaths of refill-started charges only: the wake charge is
-            # partial and calibration burns precede any work).  The belief
-            # is quantized to whole cycles -- budgets are discrete
-            # everywhere else in the model, and the rounding keeps the
-            # update reproducible bit-for-bit across compilers (XLA may
-            # contract the multiply-add into an FMA).
-            died = dend | ~fin
-            obs = chg_l + a0
-            bh_new = jnp.where((alpha > 0.0) & (rb > 0.0) & died,
-                               jnp.maximum(jnp.rint(bh + alpha * (obs - bh)),
-                                           1.0),
-                               bh)
-
-            stuck_now = (~fin_ok) & row_stuck
-            new_done = done | fin_ok | stuck_now
-            dfail_cls = (dcls * (d_exec / debt_s)
-                         ).at[_CONTROL_IDX].add(a0 - d_exec)
-            # a partial repay's drained remainder is a chunk-boundary drain
-            dpart_cls = d_cls.at[_CONTROL_IDX].add(a1)
-            dend_cls = jnp.where(dfail, dfail_cls, dpart_cls)
-            return (jnp.where(fin_ok, a1 - spend_fin,
-                              refill_sum(rb, rb + 1.0)),
-                    # a completing row decays the belief by what was spent
-                    # (clamped: the device may outlive its own forecast);
-                    # a burned charge resets it to the believed budget.
-                    jnp.where(fin_ok, jnp.maximum(est1 - spend_fin, 0.0),
-                              bh_new),
-                    jnp.where(fin_ok, 0.0,
-                              left - jnp.where(dend, 0.0, prog)),
-                    live_l + jnp.where(dend, a0,
-                                       d_spend + jnp.where(fin, spend_fin,
-                                                           a1)),
-                    rb + jnp.where(fin_ok, 0.0, 1.0),
-                    cls + jnp.where(dend, dend_cls,
-                                    d_cls + jnp.where(fin, cls_fin,
-                                                      cls_death)),
-                    waste + waste_add,
-                    jnp.where(dend, pnd1,
-                              jnp.where(fin, pnd_fin, 0.0)),
-                    jnp.where(dend, pcls1,
-                              jnp.where(fin, pcls_fin,
-                                        jnp.zeros_like(pcls))),
-                    jnp.where(dend, prw1,
-                              jnp.where(fin, prw_fin, 0.0)),
-                    bh_new,
-                    jnp.where(fin_ok, chg_l + d_spend + spend_fin, 0.0),
-                    debt1 + jnp.where(tear, pnd1, 0.0),
-                    dcls1 + jnp.where(tear, pcls1, jnp.zeros_like(pcls)),
-                    stk | stuck_now, new_done)
-
-        init = (rem, bel, n, live, reboots, classes, wasted,
-                pend, pend_class, pend_rows, bhat, chg,
-                jnp.zeros_like(rem), jnp.zeros_like(pend_class),
-                stuck, row["kind"] != KIND_WORK)
-        out = lax.while_loop(lambda s: ~s[15], charge_body, init)
-        (new_rem, new_bel, _, new_live, new_reboots, new_classes,
-         new_wasted, new_pend, new_pend_class, new_pend_rows, new_bhat,
-         new_chg, _debt, _dcls, new_stuck, _) = out
+        out = lax.while_loop(
+            lambda s: ~s.done,
+            lambda s: charge_once(ctx, cap, charge_cum, theta, window,
+                                  alpha, adaptive, s),
+            cs0)
+    (new_rem, new_bel, _, new_live, new_reboots, new_classes,
+     new_wasted, new_pend, new_pend_class, new_pend_rows, new_bhat,
+     new_chg, _debt, _dcls, new_stuck, _) = out
 
     # -- BURN rows: a failed calibration attempt drains the whole buffer ---
     # (calibration precedes any deferrable work, so the pending window is
@@ -946,75 +695,102 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, window, alpha,
     # -- decision 3: per-reboot dead time from the lane's recharge trace ---
     new_dead = dead + trace_window(trace_cum, reboots, new_reboots, tail_s)
 
-    return (new_rem, new_bel, new_live, new_reboots, new_dead, new_classes,
-            new_wasted, new_stuck, new_pend, new_pend_class, new_pend_rows,
-            new_bhat, new_chg), None
+    return ScanState(new_rem, new_bel, new_live, new_reboots, new_dead,
+                     new_classes, new_wasted, new_stuck, new_pend,
+                     new_pend_class, new_pend_rows, new_bhat,
+                     new_chg), None
 
 
-def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum, theta,
-              window, alpha, adaptive, parametric, stochastic):
+def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum,
+              nominal_from, s_real, theta, window, alpha, adaptive,
+              parametric, stochastic, backend, chunk, enable_fast,
+              has_burn):
     import jax.numpy as jnp
     from jax import lax
+
+    # Stochastic replays default to the fused constant-trip event stream
+    # (repro.kernels.charge_replay); backend="_while" keeps the legacy
+    # row scan + data-dependent charge loop for differential testing.
+    if stochastic and backend != "_while":
+        from repro.kernels.charge_replay import event_replay
+        return event_replay(rows, cap, rem0, trace_cum, tail_s,
+                            charge_cum, nominal_from, s_real, theta,
+                            window, alpha, adaptive=adaptive,
+                            parametric=parametric,
+                            enable_fast=enable_fast, has_burn=has_burn,
+                            chunk=chunk)
 
     # NB: the wasted channel is zeros_like(rem0) (not a fresh constant) so
     # its shard_map replication matches the other carries even on the
     # deterministic path, where the scan never updates it.  The same holds
     # for every cross-charge carry (pend, pend_rows, bhat, chg).
-    state0 = (rem0, rem0,             # actual + believed remaining budget
-              jnp.asarray(0.0, rem0.dtype),
-              jnp.asarray(0.0, rem0.dtype),
-              jnp.asarray(0.0, rem0.dtype),
-              jnp.zeros((_N_CLASSES,), rem0.dtype),
-              jnp.zeros_like(rem0),
-              jnp.asarray(False),
-              jnp.zeros_like(rem0),                    # pending cycles
-              jnp.zeros((_N_CLASSES,), rem0.dtype),    # pending classes
-              jnp.zeros_like(rem0),                    # pending rows
-              cap + jnp.zeros_like(rem0),              # believed budget
-              jnp.zeros_like(rem0))                    # spent this charge
+    state0 = ScanState(
+        rem=rem0, bel=rem0,           # actual + believed remaining budget
+        live=jnp.asarray(0.0, rem0.dtype),
+        reboots=jnp.asarray(0.0, rem0.dtype),
+        dead=jnp.asarray(0.0, rem0.dtype),
+        classes=jnp.zeros((_N_CLASSES,), rem0.dtype),
+        wasted=jnp.zeros_like(rem0),
+        stuck=jnp.asarray(False),
+        pend=jnp.zeros_like(rem0),                    # pending cycles
+        pend_class=jnp.zeros((_N_CLASSES,), rem0.dtype),
+        pend_rows=jnp.zeros_like(rem0),               # pending rows
+        bhat=cap + jnp.zeros_like(rem0),              # believed budget
+        chg=jnp.zeros_like(rem0))                     # spent this charge
     final, _ = lax.scan(
         lambda s, r: _scan_step(cap, trace_cum, tail_s, charge_cum, theta,
                                 window, alpha, adaptive, parametric,
                                 stochastic, s, r),
         state0, rows)
-    (rem, bel, live, reboots, dead, classes, wasted, stuck,
-     pend, pend_class, pend_rows, bhat, chg) = final
-    return dict(live=live, reboots=reboots, dead=dead, classes=classes,
-                wasted=wasted, stuck=stuck, rem=rem, belief=bhat)
+    return dict(live=final.live, reboots=final.reboots, dead=final.dead,
+                classes=final.classes, wasted=final.wasted,
+                stuck=final.stuck, rem=final.rem, belief=final.bhat)
 
 
 @lru_cache(maxsize=None)
 def _vmap_replay(shared_rows: bool, adaptive: bool, parametric: bool,
-                 stochastic: bool):
+                 stochastic: bool, backend: str, chunk: int,
+                 enable_fast: bool, has_burn: bool):
     """The vmapped replay.  ``shared_rows=False``: rows, caps, rem0, traces
     all batched on axis 0 (one lane per plan -- the Fig. 9 matrix).
     ``shared_rows=True``: one plan broadcast across every device lane (fleet
     sweeps; avoids materializing D copies of the plan).  ``adaptive``/
-    ``parametric``/``stochastic`` are static so the default configuration
-    compiles to exactly the legacy closed form; ``theta``, ``window`` (the
-    cross-charge commit window) and ``alpha`` (the EWMA belief rate) are
-    traced operands, so sweeping any of them reuses one compilation."""
+    ``parametric``/``stochastic``/``backend`` are static so the default
+    configuration compiles to exactly the legacy closed form; ``theta``,
+    ``window`` (the cross-charge commit window) and ``alpha`` (the EWMA
+    belief rate) are traced operands, so sweeping any of them reuses one
+    compilation.  ``nominal_from`` (fast-path switchover index) and
+    ``s_real`` (real row count) are per-lane traced operands of the fused
+    event stream; the legacy paths ignore them."""
     import jax
-    in_axes = ((None if shared_rows else 0), 0, 0, 0, 0, 0, None, None,
-               None)
+    in_axes = ((None if shared_rows else 0), 0, 0, 0, 0, 0, 0, 0, None,
+               None, None)
     return jax.vmap(
-        lambda rows, cap, rem0, tc, ts, ccum, theta, window, alpha:
-        _scan_one(rows, cap, rem0, tc, ts, ccum, theta, window, alpha,
-                  adaptive, parametric, stochastic),
+        lambda rows, cap, rem0, tc, ts, ccum, nf, sr, theta, window,
+        alpha:
+        _scan_one(rows, cap, rem0, tc, ts, ccum, nf, sr, theta, window,
+                  alpha, adaptive, parametric, stochastic, backend,
+                  chunk, enable_fast, has_burn),
         in_axes=in_axes)
 
 
 @lru_cache(maxsize=None)
 def _jit_replay(shared_rows: bool, adaptive: bool, parametric: bool,
-                stochastic: bool):
+                stochastic: bool, backend: str = "xla",
+                chunk: int = 128, enable_fast: bool = False,
+                has_burn: bool = False):
     import jax
     return jax.jit(_vmap_replay(shared_rows, adaptive, parametric,
-                                stochastic))
+                                stochastic, backend, chunk, enable_fast,
+                                has_burn))
 
 
 @lru_cache(maxsize=None)
 def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
-                        parametric: bool, stochastic: bool):
+                        parametric: bool, stochastic: bool,
+                        backend: str = "xla", chunk: int = 128,
+                        enable_fast: bool = False,
+                        has_burn: bool = False):
     """The replay wrapped in ``shard_map`` over the fleet's device axis:
     per-lane inputs/outputs split across the mesh, plan rows replicated.
     Lanes are independent, so no collectives are needed -- the mesh purely
@@ -1024,12 +800,14 @@ def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
 
     from repro.launch.mesh import compat_shard_map
 
-    fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic)
+    fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
+                      backend, chunk, enable_fast, has_burn)
     lane = P("devices")
     rows_spec = P() if shared_rows else lane
     return jax.jit(compat_shard_map(
         fn, mesh,
-        in_specs=(rows_spec, lane, lane, lane, lane, lane, P(), P(), P()),
+        in_specs=(rows_spec, lane, lane, lane, lane, lane, lane, lane,
+                  P(), P(), P()),
         out_specs=lane))
 
 
@@ -1078,13 +856,65 @@ def _plan_rows(plan: FleetPlan) -> dict:
     return {k: getattr(plan, k) for k in fields}
 
 
+def _bucket_rows(rows: dict, lane_axis: bool) -> dict:
+    """Pad the plan's row axis to a power-of-two bucket (>= 64) and the
+    charge-segment axis to a power-of-two bucket (>= 4), so plans of
+    similar size share one compiled replay (SONIC and TAILS land in the
+    same bucket, halving the fleet bench's compile bill).  Padding rows
+    are all-zero WORK rows -- both replay paths complete them for free
+    without touching any output channel -- and the fused path's ``s_real``
+    cursor bound never walks them anyway."""
+    ax = 1 if lane_axis else 0
+    s = rows["kind"].shape[ax]
+    target = max(64, 1 << max(s - 1, 0).bit_length())
+    out = {}
+    for k, v in rows.items():
+        v = np.asarray(v)
+        pads = [(0, 0)] * v.ndim
+        pads[ax] = (0, target - s)
+        if k in ("entry_seg_class", "entry_seg_cycles"):
+            g = v.shape[-1]
+            pads[-1] = (0, max(4, 1 << max(g - 1, 0).bit_length()) - g)
+        out[k] = np.pad(v, pads)
+    return out
+
+
+def _reboot_upper_bound(rows: dict, caps: np.ndarray,
+                        lane_axis: bool) -> np.ndarray:
+    """Cheap per-lane estimate of how many reboots a replay can plausibly
+    take: nominal plan cycles over the nominal charge (with a 4x safety
+    margin for jitter, torn-prefix re-execution and adaptive drains),
+    plus one reboot per BURN row and a full ladder per CALIB row.  Used
+    only to decide whether the fused replay's all-nominal fast path is
+    *reachable* (``reboots >= nominal_from``); the flag is a pure
+    compile-size knob -- an under-estimate never changes results, the
+    charge-wise step just walks the nominal tail one charge at a time."""
+    ax = 1 if lane_axis else 0
+    work = np.sum(rows["entry_cycles"]
+                  + rows["n"] * (rows["iter_cycles"]
+                                 + rows["commit_cycles"]), axis=ax)
+    if "tile_n" in rows:
+        work = work + np.sum(
+            np.max(rows["tile_n"] * rows["tile_iter_cycles"], axis=-1),
+            axis=ax)
+    burns = (np.sum(rows["kind"] == KIND_BURN, axis=ax)
+             + _K_TILES * np.sum(rows["kind"] == KIND_CALIB, axis=ax))
+    with np.errstate(invalid="ignore"):
+        est = np.where(np.isinf(caps), 0.0, 4.0 * work / caps)
+    return est + burns
+
+
 def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 shared_rows: bool, trace_cum: np.ndarray | None = None,
                 tail_s: np.ndarray | None = None, policy: str = "fixed",
                 theta: float = 0.5, batch_rows: int = 1,
                 belief_alpha: float = 0.0,
                 charge_cum: np.ndarray | None = None,
-                mesh=None) -> dict:
+                mesh=None, backend: str = "auto",
+                n_rows=None, chunk: int = 128) -> dict:
+    from repro.runtime.failures import (charge_trace_nominal_from,
+                                        pad_charge_trace_columns)
+
     if policy not in REPLAY_POLICIES:
         raise ValueError(f"unknown replay policy {policy!r}; "
                          f"expected one of {REPLAY_POLICIES}")
@@ -1093,6 +923,11 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
     if not 0.0 <= belief_alpha < 1.0:
         raise ValueError(f"belief_alpha must be in [0, 1), "
                          f"got {belief_alpha}")
+    if backend not in REPLAY_BACKENDS:
+        raise ValueError(f"unknown replay backend {backend!r}; "
+                         f"expected one of {REPLAY_BACKENDS}")
+    if backend == "auto":
+        backend = "xla"
     n_lanes = caps.shape[0]
     parametric = "tile_sel_cost" in rows
     adaptive = policy == "adaptive"
@@ -1100,12 +935,47 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
     # capacity trace: route it through the charge-by-charge path, where a
     # missing trace degenerates to all-nominal refills.
     stochastic = charge_cum is not None or (adaptive and batch_rows > 1)
+    # Fractional initial charges are floored to whole cycles on the
+    # charge-wise path: every cost and capacity is integral, so this keeps
+    # the entire energy state in exact-integer float64 arithmetic -- the
+    # invariant that makes the fused path's closed-form fast forward (and
+    # the charge-wise replay) grouping-independent, i.e. bitwise identical
+    # however the charges are batched.  The deterministic closed form does
+    # not need it and keeps the caller's fractional charge (it is compared
+    # against cycle-exact scalar simulators).
+    if stochastic:
+        rem0 = np.where(np.isinf(rem0), np.inf,
+                        np.floor(np.asarray(rem0, np.float64)))
+    # Per-lane real row count: the fused path's cursor bound (padding rows
+    # past it are never walked).
+    s_axis = 1 if not shared_rows else 0
+    s_real = np.broadcast_to(
+        np.asarray(n_rows if n_rows is not None
+                   else rows["kind"].shape[s_axis], np.int32), (n_lanes,))
+    enable_fast = has_burn = False
+    nominal_from = np.zeros(n_lanes, np.float64)
+    if stochastic:
+        # Shape-bucket the plan so similarly-sized plans (and different
+        # trace lengths) share one compiled fused replay.
+        has_burn = bool(np.any(rows["kind"] == KIND_BURN))
+        rows = _bucket_rows(rows, lane_axis=not shared_rows)
+        if charge_cum is not None:
+            charge_cum = pad_charge_trace_columns(charge_cum, caps)
+            nominal_from = charge_trace_nominal_from(charge_cum, caps)
+            enable_fast = bool(np.any(
+                _reboot_upper_bound(rows, caps, not shared_rows)
+                >= nominal_from))
+        else:
+            enable_fast = True
     if trace_cum is None:
         trace_cum = np.zeros((n_lanes, 1), np.float64)
     if charge_cum is None:
         charge_cum = np.zeros((n_lanes, 1), np.float64)
     if tail_s is None:
         tail_s = np.zeros(n_lanes, np.float64)
+    if backend == "pallas" and mesh is not None:
+        raise ValueError("backend='pallas' does not compose with mesh "
+                         "sharding; use backend='xla' (or 'auto')")
     with _x64():
         import jax.numpy as jnp
         args = [{k: jnp.asarray(v) for k, v in rows.items()},
@@ -1113,12 +983,28 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 jnp.asarray(trace_cum), jnp.asarray(np.broadcast_to(
                     np.asarray(tail_s, np.float64), (n_lanes,))),
                 jnp.asarray(charge_cum),
+                jnp.asarray(nominal_from),
+                jnp.asarray(s_real),
                 jnp.asarray(float(theta), jnp.float64),
                 jnp.asarray(float(batch_rows), jnp.float64),
                 jnp.asarray(float(belief_alpha), jnp.float64)]
+        if backend == "pallas" and stochastic:
+            # The Pallas lane kernel (interpret-mode on CPU); the
+            # deterministic closed form has no charge loop to fuse, so a
+            # non-stochastic replay under backend="pallas" falls through
+            # to the XLA path below.
+            from repro.kernels.ops import charge_replay as _pallas_replay
+            out = _pallas_replay(*args, adaptive=adaptive,
+                                 parametric=parametric,
+                                 shared_rows=shared_rows,
+                                 enable_fast=enable_fast,
+                                 has_burn=has_burn, chunk=chunk)
+            return {k: np.asarray(v) for k, v in out.items()}
+        xla_backend = "xla" if backend == "pallas" else backend
         if mesh is None:
             out = _jit_replay(shared_rows, adaptive, parametric,
-                              stochastic)(*args)
+                              stochastic, xla_backend, chunk,
+                              enable_fast, has_burn)(*args)
             return {k: np.asarray(v) for k, v in out.items()}
         # shard_map: pad the lane axis to a mesh multiple with inert
         # continuous lanes (cap = rem0 = inf completes every row in one
@@ -1126,8 +1012,10 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
         n_shards = int(mesh.devices.size)
         pad = (-n_lanes) % n_shards
         if pad:
-            # caps, rem0, trace, tail, charge_cum lane fills
-            fills = (np.inf, np.inf, 0.0, 0.0, 0.0)
+            # caps, rem0, trace, tail, charge_cum, nominal_from, s_real
+            # lane fills (s_real=0: the fused event stream skips the pad
+            # lanes outright)
+            fills = (np.inf, np.inf, 0.0, 0.0, 0.0, 0.0, 0)
             for i, fill in enumerate(fills, start=1):
                 args[i] = jnp.concatenate(
                     [args[i], jnp.full((pad,) + args[i].shape[1:], fill,
@@ -1137,7 +1025,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                     [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
                     for k, v in args[0].items()}
         out = _jit_sharded_replay(mesh, shared_rows, adaptive, parametric,
-                                  stochastic)(*args)
+                                  stochastic, xla_backend, chunk,
+                                  enable_fast, has_burn)(*args)
         return {k: np.asarray(v)[:n_lanes] for k, v in out.items()}
 
 
@@ -1158,13 +1047,17 @@ def replay_plans(plans: list[FleetPlan],
                  policy: str = "fixed", theta: float = 0.5,
                  batch_rows: int = 1, belief_alpha: float = 0.0,
                  recharge_traces: np.ndarray | None = None,
-                 charge_traces: np.ndarray | None = None
-                 ) -> list[ReplayOut]:
+                 charge_traces: np.ndarray | None = None,
+                 backend: str = "auto") -> list[ReplayOut]:
     """Replay many plans in one jitted vmap'd call (one lane per plan).
 
     ``init_frac`` optionally scales each lane's initial buffer charge
     (default 1.0: every device starts a full charge, like the scalar
-    ``evaluate``).  ``recharge_traces`` is an optional ``(len(plans), R)``
+    ``evaluate``); on the stochastic charge-wise path fractional initial
+    charges are floored to whole cycles so the replay's energy state
+    stays exact-integer.  ``backend``
+    selects the replay implementation (``REPLAY_BACKENDS``; every backend
+    is bit-identical, the knob trades compile/runtime shape).  ``recharge_traces`` is an optional ``(len(plans), R)``
     matrix of per-reboot recharge times; reboots beyond ``R`` fall back to
     each plan's mean ``recharge_s``.  ``charge_traces`` is an optional
     ``(len(plans), R)`` matrix of per-charge capacities (cycles delivered
@@ -1209,7 +1102,10 @@ def replay_plans(plans: list[FleetPlan],
     out = _run_replay(_pad_stack(plans), caps, rem0, shared_rows=False,
                       trace_cum=cum, tail_s=tail, policy=policy,
                       theta=theta, batch_rows=batch_rows,
-                      belief_alpha=belief_alpha, charge_cum=ccum)
+                      belief_alpha=belief_alpha, charge_cum=ccum,
+                      backend=backend,
+                      n_rows=np.asarray([len(p) for p in plans],
+                                        np.int32))
     results = []
     for i, p in enumerate(plans):
         by_class = {op: float(v) for op, v in
@@ -1233,8 +1129,8 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
                    policy: str = "fixed", theta: float = 0.5,
                    batch_rows: int = 1, belief_alpha: float = 0.0,
                    recharge_traces: np.ndarray | None = None,
-                   charge_traces: np.ndarray | None = None
-                   ) -> list[RunResult]:
+                   charge_traces: np.ndarray | None = None,
+                   backend: str = "auto") -> list[RunResult]:
     """The full strategy x power matrix as one vectorized replay.
 
     Returns :class:`RunResult` rows interchangeable with the scalar
@@ -1267,7 +1163,7 @@ def fleet_evaluate(net: SimNet, x: np.ndarray,
     outs = replay_plans(plans, policy=policy, theta=theta,
                         batch_rows=batch_rows, belief_alpha=belief_alpha,
                         recharge_traces=recharge_traces,
-                        charge_traces=charge_traces)
+                        charge_traces=charge_traces, backend=backend)
     results = []
     for p, o in zip(plans, outs):
         if not o.completed:
@@ -1338,7 +1234,8 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                 batch_rows: int = 1, belief_alpha: float = 0.0,
                 trace_reboots: int = 0, charge_cv: float = 0.0,
                 charge_bias_cv: float = 0.0,
-                charge_reboots: int = 0, mesh=None) -> FleetSweepResult:
+                charge_reboots: int = 0, mesh=None,
+                backend: str = "auto") -> FleetSweepResult:
     """Replay one (strategy, power) plan across ``n_devices`` simulated
     devices with per-device harvest-trace jitter, in one compiled pass.
 
@@ -1395,7 +1292,7 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                       trace_cum=cum, tail_s=tail, policy=policy,
                       theta=theta, batch_rows=batch_rows,
                       belief_alpha=belief_alpha, charge_cum=ccum,
-                      mesh=mesh)
+                      mesh=mesh, backend=backend, n_rows=len(plan))
     return FleetSweepResult(
         strategy, power, n_devices,
         completed=~out["stuck"],
@@ -1441,7 +1338,8 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
                     theta: float = 0.5, batch_rows: int = 1,
                     belief_alpha: float = 0.0, charge_cv: float = 0.0,
                     charge_bias_cv: float = 0.0, charge_reboots: int = 0,
-                    mesh=None) -> CapacitorSweepResult:
+                    mesh=None,
+                    backend: str = "auto") -> CapacitorSweepResult:
     """Sweep (capacitor size x device) in ONE vmapped/sharded replay of ONE
     parameterized plan -- no per-capacitor re-extraction.
 
@@ -1483,7 +1381,8 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
     out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
                       tail_s=tail, policy=policy, theta=theta,
                       batch_rows=batch_rows, belief_alpha=belief_alpha,
-                      charge_cum=ccum, mesh=mesh)
+                      charge_cum=ccum, mesh=mesh, backend=backend,
+                      n_rows=len(plan))
     shape = (n_caps, n_devices)
     return CapacitorSweepResult(
         strategy, capacities, n_devices,

@@ -202,6 +202,54 @@ def charge_trace_cumulative(traces: np.ndarray) -> np.ndarray:
     return recharge_trace_cumulative(traces)
 
 
+def charge_trace_nominal_from(charge_cum, caps) -> np.ndarray:
+    """First trace index from which *every* subsequent charge delivers the
+    nominal capacity, per lane: ``(devices,)`` float64.
+
+    The fused replay (``repro.kernels.charge_replay``) switches a lane from
+    charge-by-charge replay to the closed-form fast path once its reboot
+    counter reaches this index -- from there on, refills inside the trace
+    equal the nominal and refills past the trace fall back to it, so the
+    deterministic algebra is exact.  Computed as the length of the trace's
+    trailing all-nominal run.  Continuous (infinite-capacity) lanes compare
+    unequal everywhere (``inf - inf`` is NaN), yielding the full trace
+    length: they simply stay on the charge-wise path, which completes each
+    of their rows in one event anyway.
+    """
+    cum = np.asarray(charge_cum, np.float64)
+    caps = np.broadcast_to(np.asarray(caps, np.float64), (cum.shape[0],))
+    deliv = cum[:, 1:] - cum[:, :-1]
+    with np.errstate(invalid="ignore"):
+        eq = deliv == caps[:, None]
+    run = np.cumprod(eq[:, ::-1].astype(np.int64), axis=1).sum(axis=1)
+    return (deliv.shape[1] - run).astype(np.float64)
+
+
+def pad_charge_trace_columns(charge_cum: np.ndarray, caps,
+                             min_cols: int = 8) -> np.ndarray:
+    """Pad a cumulative charge-capacity table's column axis to the next
+    power of two (at least ``min_cols``) by extending it with nominal
+    charges: ``out[:, R + k] = out[:, R] + k * cap``.
+
+    Shape-bucketing the trace axis lets sweeps with different trace
+    lengths share one compiled replay.  The extension is *bitwise*
+    transparent: capacities are whole cycles (integers exact in float64),
+    so the windowed gather-subtract over the padded tail equals the
+    ``overrun * nominal`` fallback term it replaces exactly.  (Dead-time
+    traces are fractional seconds and must never be padded this way.)
+    """
+    cum = np.asarray(charge_cum, np.float64)
+    cols = cum.shape[1]
+    target = max(min_cols, 1 << max(cols - 1, 0).bit_length())
+    if target == cols:
+        return cum
+    caps = np.broadcast_to(np.asarray(caps, np.float64),
+                           (cum.shape[0],))
+    k = np.arange(1, target - cols + 1, dtype=np.float64)
+    ext = cum[:, -1:] + caps[:, None] * k[None, :]
+    return np.concatenate([cum, ext], axis=1)
+
+
 def simulate(policy: str, fleet: FleetSpec, job: JobSpec, interval: int = 50,
              seed: int = 0, horizon_factor: float = 50.0) -> RunStats:
     """Run the job under a fault-tolerance policy against a failure trace."""

@@ -113,6 +113,14 @@ def reference_replay(rows: dict, cap: float, rem0: float, *,
     window = float(batch_rows)
     alpha = float(belief_alpha)
     theta = float(theta)
+    # Mirror _run_replay: on the charge-wise (stochastic) path the initial
+    # charge is floored to whole cycles so every energy accumulator stays
+    # integral (the fused fast path depends on grouping-independent
+    # integer arithmetic).  The deterministic closed form keeps the
+    # caller's fractional charge.
+    stochastic = charge_cum is not None or (adaptive and batch_rows > 1)
+    if stochastic and not np.isinf(rem0):
+        rem0 = float(np.floor(rem0))
     s = _Lane(float(cap), float(rem0))
     n_rows = len(rows["kind"])
 

@@ -300,7 +300,8 @@ def test_theta_sweep_reuses_one_compilation(small_net):
 
     net, x = small_net
     plan = build_plan(net, x, "sonic", "100uF")
-    fn = _jit_replay(False, True, False, False)   # matrix-shape adaptive
+    fn = _jit_replay(False, True, False, False,
+                     "xla", 128, False, False)   # matrix adaptive
     replay_plans([plan], policy="adaptive", theta=0.33)     # warm the shape
     n0 = fn._cache_size()
     outs = [replay_plans([plan], policy="adaptive", theta=t)[0]
@@ -320,7 +321,10 @@ def test_theta_alpha_window_sweep_reuses_one_compilation(small_net):
     net, x = small_net
     plan = build_plan(net, x, "sonic", "100uF")
     traces = np.full((1, 32), plan.capacity)
-    fn = _jit_replay(False, True, False, True)   # stochastic adaptive
+    # all-nominal trace -> nominal_from=0 -> fast path compiled in; the
+    # sonic plan has no BURN rows so that block is elided
+    fn = _jit_replay(False, True, False, True,
+                     "xla", 128, True, False)   # stochastic adaptive
     replay_plans([plan], policy="adaptive", theta=0.33, batch_rows=2,
                  belief_alpha=0.1, charge_traces=traces)    # warm the shape
     n0 = fn._cache_size()

@@ -44,10 +44,14 @@ POLICIES = (
     ("adaptive", 0.25, 4, 0.0),         # bounded cross-charge window
     ("adaptive", 0.5, 1_000_000, 0.3),  # one commit per charge + EWMA
     ("adaptive", 1.0, 2, 0.2),
+    ("adaptive", 0.75, 1, 0.25),        # window 1 + EWMA drift
 )
 
-#: (charge_cv, bias_cv, with_recharge_trace)
-JITTERS = ((0.0, 0.0, False), (0.4, 0.0, True), (0.25, 0.5, False))
+#: (charge_cv, bias_cv, with_recharge_trace, n_charges) -- the last entry
+#: exhausts its jittered trace after a handful of charges so the fused
+#: replay's all-nominal fast forward actually engages mid-run.
+JITTERS = ((0.0, 0.0, False, 48), (0.4, 0.0, True, 48),
+           (0.25, 0.5, False, 48), (0.5, 0.0, False, 6))
 
 #: (net seed, strategy, capacity as a fraction of the plan's total cycles)
 PLANS = (
@@ -79,14 +83,14 @@ def sweep_results():
     for plan in plans:
         rows = _plan_rows(plan)
         for policy, theta, w, alpha in POLICIES:
-            for cv, bias, with_recharge in JITTERS:
+            for cv, bias, with_recharge, n_ch in JITTERS:
                 case_seed += 1
                 rng = np.random.default_rng(case_seed)
                 frac = rng.uniform(0.02, 1.0, LANES_PER_GROUP)
                 ctr = cum = ccum = rtr = None
                 if cv > 0 or bias > 0:
                     ctr = charge_capacity_jitter(
-                        LANES_PER_GROUP, N_CHARGES, plan.capacity,
+                        LANES_PER_GROUP, n_ch, plan.capacity,
                         seed=case_seed, cv=cv, bias_cv=bias)
                     ccum = charge_trace_cumulative(ctr)
                 if with_recharge:
@@ -94,11 +98,12 @@ def sweep_results():
                         LANES_PER_GROUP, N_RECHARGES, plan.recharge_s,
                         seed=case_seed + 1)
                     cum = recharge_trace_cumulative(rtr)
-                outs = replay_plans(
-                    [plan] * LANES_PER_GROUP, init_frac=frac,
-                    policy=policy, theta=theta, batch_rows=w,
-                    belief_alpha=alpha, recharge_traces=rtr,
-                    charge_traces=ctr)
+                kw = dict(init_frac=frac, policy=policy, theta=theta,
+                          batch_rows=w, belief_alpha=alpha,
+                          recharge_traces=rtr, charge_traces=ctr)
+                outs = replay_plans([plan] * LANES_PER_GROUP, **kw)
+                outs_old = replay_plans([plan] * LANES_PER_GROUP,
+                                        backend="_while", **kw)
                 for i, out in enumerate(outs):
                     ref = reference_replay(
                         rows, plan.capacity, plan.capacity * frac[i],
@@ -109,8 +114,8 @@ def sweep_results():
                         belief_alpha=alpha)
                     results.append(dict(
                         cfg=(plan.strategy, plan.capacity, policy, theta,
-                             w, alpha, cv, bias, i),
-                        scan=out, ref=ref,
+                             w, alpha, cv, bias, n_ch, i),
+                        scan=out, old=outs_old[i], ref=ref,
                         # deterministic runs take the scan's closed-form
                         # path; stuck lanes there book a bogus pass-through
                         # (flagged DNF and discarded by fleet_evaluate), so
@@ -166,6 +171,42 @@ def test_scan_matches_reference_exactly(sweep_results):
             assert scan.belief_cycles == ref["belief"], cfg
             assert scan.by_class == ref_by_class, cfg
             assert scan.dead_s == ref["dead"], cfg
+
+
+def test_fused_path_matches_legacy_while_loop(sweep_results):
+    """Every config replayed through the default fused event stream is
+    *bit-identical* -- every ``ReplayOut`` field, ``wasted_cycles``
+    included -- to the pre-rewrite data-dependent ``lax.while_loop`` path
+    (kept behind the private ``backend="_while"`` flag for this PR)."""
+    for r in sweep_results:
+        new, old, cfg = r["scan"], r["old"], r["cfg"]
+        assert new.completed == old.completed, cfg
+        assert new.live_cycles == old.live_cycles, cfg
+        assert new.reboots == old.reboots, cfg
+        assert new.dead_s == old.dead_s, cfg
+        assert new.wasted_cycles == old.wasted_cycles, cfg
+        assert new.belief_cycles == old.belief_cycles, cfg
+        assert new.by_class == old.by_class, cfg
+
+
+def test_pallas_backend_matches_default():
+    """Spot-check the accelerator form: the Pallas lane kernel (interpret
+    mode on CPU) reproduces the default backend bitwise on a stochastic
+    adaptive config."""
+    plan = _hypothesis_plan()
+    ctr = charge_capacity_jitter(2, 12, plan.capacity, seed=11, cv=0.35)
+    kw = dict(init_frac=[0.4, 0.9], policy="adaptive", theta=0.5,
+              batch_rows=3, belief_alpha=0.2, charge_traces=ctr)
+    base = replay_plans([plan] * 2, **kw)
+    pal = replay_plans([plan] * 2, backend="pallas", **kw)
+    for b, p in zip(base, pal):
+        assert p.completed == b.completed
+        assert p.live_cycles == b.live_cycles
+        assert p.reboots == b.reboots
+        assert p.dead_s == b.dead_s
+        assert p.wasted_cycles == b.wasted_cycles
+        assert p.belief_cycles == b.belief_cycles
+        assert p.by_class == b.by_class
 
 
 def test_accounting_invariant_all_configs(sweep_results):
