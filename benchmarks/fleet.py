@@ -9,9 +9,13 @@ with a measured speedup over looping the scalar simulator, plus a
 
 Each run records the machine-readable perf trajectory in
 ``BENCH_fleet.json`` at the repo root (devices/sec, speedup vs scalar,
-per-strategy wall time) so regressions are visible across PRs.  ``python
+per-strategy wall time, and the streamed ``fleet_scaling`` section --
+devices/sec and peak lane-buffer bytes for ``reduce="stats"`` replays up
+to 1e7 lanes) so regressions are visible across PRs.  ``python
 benchmarks/fleet.py --smoke`` runs a tiny fleet and *asserts* the replay
-beats the scalar loop (the CI smoke job).
+beats the scalar loop AND that the streamed replay's peak lane-buffer
+bytes stay under a fixed budget independent of lane count (the CI smoke
+job).
 """
 
 from __future__ import annotations
@@ -156,10 +160,17 @@ def device_fleet_sweep(n_devices: int = 1000, scalar_sample: int = 8,
 
 
 def tails_capacitor_sweep(n_devices_per_cap: int = 128,
-                          bench: dict | None = None) -> list[tuple]:
+                          bench: dict | None = None,
+                          repeats: int = 3) -> list[tuple]:
     """The parameterized-IR payoff: ONE TAILS plan, ONE vmapped replay over
     a (capacitor sizes x devices) grid -- tile calibration happens inside
-    the scan per lane, no per-capacitor plan re-extraction."""
+    the scan per lane, no per-capacitor plan re-extraction.
+
+    The timed number is the *min* replay wall over ``repeats`` hot runs
+    after one untimed warm-up: the first call pays XLA compilation, and
+    single-sample hot walls on shared CI runners still jitter ~1.6x
+    (BENCH_history held 563 and 901 lanes/sec for identical configs), so
+    min-of-repeats is the stable trajectory statistic."""
     from repro.core.energy import LEA_COSTS
     from repro.core.inference import tails_tile_candidates, tails_tile_index
 
@@ -168,8 +179,10 @@ def tails_capacitor_sweep(n_devices_per_cap: int = 128,
     t0 = time.perf_counter()
     plan = build_plan(net, x, "tails", "1mF", parametric=True)
     build_s = time.perf_counter() - t0
-    r = capacitor_sweep(net, x, caps, n_devices=n_devices_per_cap, seed=7,
-                        plan=plan)
+    kw = dict(n_devices=n_devices_per_cap, seed=7, plan=plan)
+    capacitor_sweep(net, x, caps, **kw)        # untimed warm-up (compile)
+    r = min((capacitor_sweep(net, x, caps, **kw)
+             for _ in range(max(1, repeats))), key=lambda s: s.wall_s)
     lanes = caps.size * n_devices_per_cap
     kw = net.layers[0].w.shape[3]
     cands = tails_tile_candidates()
@@ -183,6 +196,7 @@ def tails_capacitor_sweep(n_devices_per_cap: int = 128,
             "plan_build_s": round(build_s, 4),
             "replay_wall_s": round(r.wall_s, 4),
             "lanes_per_sec": round(lanes / r.wall_s, 1),
+            "timing": f"min of {max(1, repeats)} hot runs after warm-up",
             "conv_tile_per_cap": tiles,
             "completed_per_cap": r.completed.sum(axis=1).tolist(),
             "mean_reboots_per_cap":
@@ -192,9 +206,66 @@ def tails_capacitor_sweep(n_devices_per_cap: int = 128,
         "fleetsim/tails_capacitor_sweep_lanes_per_sec",
         round(lanes / r.wall_s, 1),
         f"{caps.size} capacitors x {n_devices_per_cap} devices = {lanes} "
-        f"lanes in {r.wall_s:.3f}s from ONE parametric plan "
+        f"lanes in {r.wall_s:.3f}s (min of {max(1, repeats)} hot runs) "
+        f"from ONE parametric plan "
         f"(built once in {build_s:.3f}s); conv tiles per cap={tiles} "
         f"completed={r.completed.sum(axis=1).tolist()}")]
+
+
+#: Chunk size for the streamed (``reduce="stats"``) scaling runs: every
+#: lane count replays through identical ``SCALING_LANE_CHUNK``-lane donated
+#: buffers, so peak device-axis memory is a function of the chunk, never the
+#: fleet.  The budget is what one chunk's lane-side inputs + outputs cost
+#: (caps/rem0/tail + recharge & charge cumulative traces + per-lane result
+#: channels) with generous headroom; the smoke gate asserts both that the
+#: measured peak stays under it and that it does not move between 1e4 and
+#: 1e5 lanes.
+SCALING_LANE_CHUNK = 8192
+SCALING_PEAK_BUDGET_BYTES = 4 << 20
+
+
+def fleet_scaling(lane_counts=(10**4, 10**6, 10**7),
+                  lane_chunk: int = SCALING_LANE_CHUNK,
+                  bench: dict | None = None) -> list[tuple]:
+    """Memory-flat streamed replay at fleet scale: ``reduce="stats"`` +
+    ``lane_chunk`` stream-reduces each chunk into the fixed-size
+    ``FleetStats`` summary, so 1e7 devices cost the same peak lane-buffer
+    bytes as 1e4.  Deterministic energy model (``charge_cv=0`` -- the
+    closed-form fast-forward path) so the 1e7-lane point finishes on a
+    1-core runner; the stochastic path's streamed equivalence is pinned by
+    ``tests/test_fleetstats.py`` instead."""
+    net, x = _device_net()
+    points = []
+    for n in lane_counts:
+        st = fleet_sweep(net, x, "sonic", "1mF", n_devices=n, seed=7,
+                         reduce="stats", lane_chunk=lane_chunk)
+        s = st.summary()
+        points.append({
+            "lanes": int(n),
+            "wall_s": round(st.wall_s, 3),
+            "devices_per_sec": round(n / st.wall_s, 1),
+            "peak_lane_bytes": int(st.peak_lane_bytes),
+            "completion_rate": round(st.completion_rate[0], 6),
+            "p95_total_s": round(s["p95_total_s"], 4),
+        })
+    if bench is not None:
+        bench.update({
+            "strategy": "sonic",
+            "power": "1mF",
+            "reduce": "stats",
+            "lane_chunk": int(lane_chunk),
+            "peak_budget_bytes": SCALING_PEAK_BUDGET_BYTES,
+            "points": points,
+        })
+    return [(
+        f"fleetsim/scaling_{p['lanes']:.0e}_devices_per_sec".replace(
+            "e+0", "e"),
+        p["devices_per_sec"],
+        f"streamed reduce=stats lane_chunk={lane_chunk}: {p['lanes']} lanes "
+        f"in {p['wall_s']}s, peak lane-buffer {p['peak_lane_bytes']} bytes "
+        f"(budget {SCALING_PEAK_BUDGET_BYTES}), "
+        f"completion={p['completion_rate']}")
+        for p in points]
 
 
 def adaptive_risk_frontier(n_devices: int = 256,
@@ -332,19 +403,23 @@ def adaptive_risk_frontier(n_devices: int = 256,
 
 
 def write_bench(fleet: dict, capsweep: dict, frontier: dict,
+                scaling: dict | None = None,
                 path: Path = BENCH_PATH,
                 history: Path = HISTORY_PATH) -> None:
     payload = {
-        # schema 4: the device fleet sweep runs the stochastic per-charge
-        # energy model (charge_cv > 0) through the fused constant-trip
-        # replay; schema 3 ran it deterministically (and the frontier
-        # gained the belief axis); schema-2 grid entries carried no
-        # "alpha" key
-        "schema": 4,
+        # schema 5: adds the "fleet_scaling" section (streamed
+        # reduce="stats" replay -- devices/sec and peak lane-buffer bytes
+        # at 1e4..1e7 lanes) and capsweep timing becomes min-of-repeats
+        # after warm-up; schema 4 ran the device fleet sweep stochastically
+        # (charge_cv > 0) through the fused constant-trip replay; schema 3
+        # ran it deterministically (and the frontier gained the belief
+        # axis); schema-2 grid entries carried no "alpha" key
+        "schema": 5,
         "generated_unix": round(time.time(), 1),
         "fleet": fleet,
         "tails_capacitor_sweep": capsweep,
         "adaptive_risk_frontier": frontier,
+        "fleet_scaling": scaling or {},
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")
     # One compact line per run appended to the cross-PR trajectory (the
@@ -364,6 +439,15 @@ def write_bench(fleet: dict, capsweep: dict, frontier: dict,
         "speedup_vs_scalar": {s: b.get("speedup_vs_scalar")
                               for s, b in fleet.items()},
         "capsweep_lanes_per_sec": capsweep.get("lanes_per_sec"),
+        # streamed scaling trajectory: lanes -> devices/sec, plus the one
+        # peak (identical across lane counts by construction -- that is
+        # the memory-flat claim the smoke gate asserts)
+        "scaling_devices_per_sec": {
+            str(p["lanes"]): p["devices_per_sec"]
+            for p in (scaling or {}).get("points", [])},
+        "scaling_peak_lane_bytes": max(
+            (p["peak_lane_bytes"]
+             for p in (scaling or {}).get("points", [])), default=None),
         "risk_max_wasted_cycles": max(
             (g["mean_wasted_cycles"] for g in frontier.get("grid", [])),
             default=None),
@@ -389,7 +473,7 @@ def perf_regression_guard(fleet: dict, history: Path = HISTORY_PATH,
     more than ``max_drop`` of its speedup.  Returns the violation strings
     (empty list = pass) so the CLI can fail the bench-smoke job."""
     any_fleet = next(iter(fleet.values()), {})
-    key = (4, any_fleet.get("devices"), bool(any_fleet.get("warm")))
+    key = (5, any_fleet.get("devices"), bool(any_fleet.get("warm")))
     prior = None
     if history.exists():
         for ln in history.read_text().splitlines():
@@ -418,30 +502,37 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
                    thetas=(0.25, 0.5, 0.75, 1.0, 1.5),
                    cvs=(0.0, 0.3, 0.5, 0.8),
                    alphas=(0.0, 0.25, 0.5),
-                   warm: bool = False) -> tuple[list, dict, dict, dict]:
-    """The fleetsim benchmark trio + its BENCH_fleet.json payloads -- the
-    single composition shared by :func:`run` and the CLI so the recorded
-    schema cannot drift between them."""
+                   scaling_lanes=(10**4, 10**6, 10**7),
+                   warm: bool = False) -> tuple[list, dict, dict, dict,
+                                                dict]:
+    """The fleetsim benchmark quartet + its BENCH_fleet.json payloads --
+    the single composition shared by :func:`run` and the CLI so the
+    recorded schema cannot drift between them."""
     fleet_bench: dict = {}
     cap_bench: dict = {}
     risk_bench: dict = {}
+    scaling_bench: dict = {}
     rows = (device_fleet_sweep(n_devices=n_devices,
                                scalar_sample=scalar_sample,
                                bench=fleet_bench, warm=warm)
             + tails_capacitor_sweep(n_devices_per_cap=n_devices_per_cap,
                                     bench=cap_bench)
+            + fleet_scaling(lane_counts=scaling_lanes, bench=scaling_bench)
             + adaptive_risk_frontier(n_devices=frontier_devices,
                                      thetas=thetas, cvs=cvs, alphas=alphas,
                                      bench=risk_bench))
     # compare against the prior comparable line BEFORE appending this run
     fleet_bench["_perf_regressions"] = perf_regression_guard(fleet_bench)
     write_bench({k: v for k, v in fleet_bench.items()
-                 if not k.startswith("_")}, cap_bench, risk_bench)
-    return rows, fleet_bench, cap_bench, risk_bench
+                 if not k.startswith("_")}, cap_bench, risk_bench,
+                scaling_bench)
+    return rows, fleet_bench, cap_bench, risk_bench, scaling_bench
 
 
 def run() -> list[tuple]:
-    sim_rows, _, _, _ = _fleetsim_rows()
+    # the quick bench-runner surface keeps the scaling curve at smoke
+    # scale; the 1e4/1e6/1e7 record comes from the full CLI run
+    sim_rows, _, _, _, _ = _fleetsim_rows(scaling_lanes=(10**4, 10**5))
     return (policy_sweep() + straggler_sweep() + elastic_sweep() + sim_rows)
 
 
@@ -460,12 +551,16 @@ def main() -> None:
         # cv=0.6 only, recovery reads 0.43 -- a sampling artifact, not a
         # belief bug; see the cv=0.3 / fleet-size decomposition in the
         # fused-replay PR).
-        rows, fleet_bench, _, risk_bench = _fleetsim_rows(
+        # scaling_lanes spans a 10x range so the smoke job can assert the
+        # peak lane buffer does NOT move with the fleet (the memory-flat
+        # gate) without paying the full 1e7-lane run on every CI push.
+        rows, fleet_bench, _, risk_bench, scaling_bench = _fleetsim_rows(
             n_devices=200, scalar_sample=2, n_devices_per_cap=16,
             frontier_devices=256, thetas=(0.5, 1.5), cvs=(0.0, 0.3, 0.6),
-            alphas=(0.0, 0.25, 0.5), warm=True)
+            alphas=(0.0, 0.25, 0.5), scaling_lanes=(10**4, 10**5),
+            warm=True)
     else:
-        rows, fleet_bench, _, risk_bench = _fleetsim_rows()
+        rows, fleet_bench, _, risk_bench, scaling_bench = _fleetsim_rows()
     for n, v, d in rows:
         print(f'{n},{v},"{d}"')
     print(f"wrote {BENCH_PATH} (+1 line in {HISTORY_PATH.name})")
@@ -479,6 +574,19 @@ def main() -> None:
         raise SystemExit(
             "speedup_vs_scalar dropped >20% vs the last comparable "
             f"BENCH_history line: {regressions}")
+    # memory-flat gate: the streamed replay's peak lane-buffer bytes must
+    # sit under the fixed budget AND be identical at every lane count --
+    # a peak that grows with the fleet means the device axis leaked past
+    # the chunk (the tentpole claim of the streamed reduction)
+    peaks = {p["lanes"]: p["peak_lane_bytes"]
+             for p in scaling_bench["points"]}
+    if len(set(peaks.values())) != 1:
+        raise SystemExit(
+            f"peak lane-buffer bytes moved with lane count: {peaks}")
+    if max(peaks.values()) > SCALING_PEAK_BUDGET_BYTES:
+        raise SystemExit(
+            f"peak lane-buffer bytes {max(peaks.values())} exceeds the "
+            f"{SCALING_PEAK_BUDGET_BYTES}-byte budget: {peaks}")
     # risk-model gate: deterministic charges never waste; jittered charges
     # under batched commits must (that is the whole point of the model)
     det = [g for g in risk_bench["grid"]

@@ -13,9 +13,11 @@ from .energy import (CostTable, Device, DeviceStats, LEA_COSTS,
                      SOFTWARE_COSTS, class_cycle_vector, custom_power_system,
                      make_power_system)
 from .fleetsim import (CapacitorSweepResult, FleetPlan, FleetSweepResult,
-                       REPLAY_POLICIES, ReplayOut, build_plan,
-                       capacitor_sweep, fleet_evaluate, fleet_sweep,
-                       replay_plans)
+                       REPLAY_POLICIES, REPLAY_REDUCES, ReplayOut,
+                       build_plan, capacitor_sweep, fleet_evaluate,
+                       fleet_sweep, replay_plans)
+from .fleetstats import (FleetStats, STAT_CHANNELS, default_stat_edges,
+                         stats_from_outputs)
 from .imp import AppModel, WILDLIFE, accuracy_sweep
 from .inference import (Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC)
 from .intermittent import (POWER_SYSTEMS, RunResult, STRATEGIES, evaluate)
@@ -23,13 +25,14 @@ from .nvstore import NVStore
 
 __all__ = [
     "AppModel", "CapacitorSweepResult", "Conv2D", "CostTable", "DenseFC",
-    "Device", "DeviceStats", "FleetPlan", "FleetSweepResult", "LEA_COSTS",
-    "LoopOrderedBuffer", "MaxPool2D", "NVStore", "NonTermination",
-    "OP_CLASSES", "POWER_SYSTEMS", "PowerFailure", "PowerSystem",
-    "REPLAY_POLICIES", "ReplayOut", "ResumableLoop", "RunResult",
+    "Device", "DeviceStats", "FleetPlan", "FleetStats",
+    "FleetSweepResult", "LEA_COSTS", "LoopOrderedBuffer", "MaxPool2D",
+    "NVStore", "NonTermination", "OP_CLASSES", "POWER_SYSTEMS",
+    "PowerFailure", "PowerSystem", "REPLAY_POLICIES", "REPLAY_REDUCES",
+    "ReplayOut", "ResumableLoop", "RunResult", "STAT_CHANNELS",
     "STRATEGIES", "SOFTWARE_COSTS", "SimNet", "SparseFC", "SparseUndoLog",
     "WILDLIFE", "accuracy_sweep", "build_plan", "capacitor_sweep",
-    "class_cycle_vector", "custom_power_system", "evaluate",
-    "fleet_evaluate", "fleet_sweep", "make_power_system", "replay_plans",
-    "run_intermittent",
+    "class_cycle_vector", "custom_power_system", "default_stat_edges",
+    "evaluate", "fleet_evaluate", "fleet_sweep", "make_power_system",
+    "replay_plans", "run_intermittent", "stats_from_outputs",
 ]

@@ -174,6 +174,7 @@ import numpy as np
 from .energy import (CLOCK_HZ, Device, JOULES_PER_CYCLE, LEA_COSTS,
                      OP_CLASSES, SOFTWARE_COSTS, class_cycle_vector,
                      make_power_system, rf_recharge_seconds)
+from .fleetstats import FleetStats, default_stat_edges
 from .inference import (Conv2D, DenseFC, SimNet, TAILS_FC_ENTRY_COSTS,
                         build_layer_segments, iter_task_spans,
                         naive_layer_cycles, run_naive, sonic_segments,
@@ -211,6 +212,13 @@ _TILE_FIELDS = ("tile_n", "tile_iter_cycles", "tile_iter_class",
 #: testing (private; scheduled for removal once the fused path has been
 #: the default for one release).
 REPLAY_BACKENDS = ("auto", "xla", "pallas", "_while")
+
+#: Output reductions: "none" materializes per-lane arrays (the bit-exact
+#: legacy path and the differential oracle), "stats" stream-reduces lanes
+#: into a fixed-size ``core.fleetstats.FleetStats`` inside the jit, so
+#: output (and, with ``lane_chunk=``, peak) memory is independent of the
+#: fleet size.
+REPLAY_REDUCES = ("none", "stats")
 
 
 class ScanState(NamedTuple):
@@ -811,6 +819,83 @@ def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
         out_specs=lane))
 
 
+@lru_cache(maxsize=None)
+def _jit_replay_stats(shared_rows: bool, adaptive: bool, parametric: bool,
+                      stochastic: bool, backend: str, chunk: int,
+                      enable_fast: bool, has_burn: bool, n_groups: int,
+                      donate: bool):
+    """The replay with the fleet-statistics reduction fused into the same
+    jit: per-lane outputs are folded to ``(psums, pmins, pmaxs)`` partials
+    (``core.fleetstats``) before they ever leave the compiled call, and
+    ``donate=True`` additionally donates the per-lane input buffers so a
+    chunked sweep's peak memory is one chunk of lanes, not the fleet."""
+    import jax
+
+    from .fleetstats import reduce_lane_outputs
+
+    fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
+                      backend, chunk, enable_fast, has_burn)
+
+    def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window, alpha,
+            gid, valid, edges):
+        out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
+                 alpha)
+        return reduce_lane_outputs(out, gid, valid, edges, n_groups)
+
+    dn = (1, 2, 3, 4, 5, 6, 7, 11, 12) if donate else ()
+    return jax.jit(run, donate_argnums=dn)
+
+
+@lru_cache(maxsize=None)
+def _jit_sharded_replay_stats(mesh, shared_rows: bool, adaptive: bool,
+                              parametric: bool, stochastic: bool,
+                              backend: str, chunk: int, enable_fast: bool,
+                              has_burn: bool, n_groups: int):
+    """Sharded replay + in-shard stats reduction + cross-shard all-reduce:
+    each shard folds its lanes into partials and ``fleet_all_reduce``
+    (psum/pmin/pmax over the ``devices`` axis) leaves every shard holding
+    the identical fleet summary -- the only collective in the fleet path,
+    and the reason a sharded sweep's output size is independent of both
+    the fleet and the mesh."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import compat_shard_map, fleet_all_reduce
+
+    from .fleetstats import reduce_lane_outputs
+
+    fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
+                      backend, chunk, enable_fast, has_burn)
+
+    def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window, alpha,
+            gid, valid, edges):
+        out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
+                 alpha)
+        parts = reduce_lane_outputs(out, gid, valid, edges, n_groups)
+        return fleet_all_reduce(parts, "devices")
+
+    lane = P("devices")
+    rows_spec = P() if shared_rows else lane
+    return jax.jit(compat_shard_map(
+        run, mesh,
+        in_specs=(rows_spec, lane, lane, lane, lane, lane, lane, lane,
+                  P(), P(), P(), lane, lane, P()),
+        out_specs=P()))
+
+
+@lru_cache(maxsize=None)
+def _jit_reduce_only(n_groups: int):
+    """Standalone jitted stats reduction over already-materialized lane
+    outputs (the Pallas backend's stats path, and a convenience for
+    validating the fused reduction)."""
+    import jax
+
+    from .fleetstats import reduce_lane_outputs
+
+    return jax.jit(lambda out, gid, valid, edges: reduce_lane_outputs(
+        out, gid, valid, edges, n_groups))
+
+
 def _x64():
     from jax.experimental import enable_x64
     return enable_x64()
@@ -911,7 +996,11 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 belief_alpha: float = 0.0,
                 charge_cum: np.ndarray | None = None,
                 mesh=None, backend: str = "auto",
-                n_rows=None, chunk: int = 128) -> dict:
+                n_rows=None, chunk: int = 128, reduce: str = "none",
+                group_id: np.ndarray | None = None,
+                valid: np.ndarray | None = None,
+                edges: dict | None = None, n_groups: int = 1,
+                donate: bool = False) -> dict | tuple:
     from repro.runtime.failures import (charge_trace_nominal_from,
                                         pad_charge_trace_columns)
 
@@ -926,6 +1015,11 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
     if backend not in REPLAY_BACKENDS:
         raise ValueError(f"unknown replay backend {backend!r}; "
                          f"expected one of {REPLAY_BACKENDS}")
+    if reduce not in REPLAY_REDUCES:
+        raise ValueError(f"unknown reduce mode {reduce!r}; "
+                         f"expected one of {REPLAY_REDUCES}")
+    if reduce == "stats" and edges is None:
+        raise ValueError("reduce='stats' needs histogram edges")
     if backend == "auto":
         backend = "xla"
     n_lanes = caps.shape[0]
@@ -977,6 +1071,7 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
         raise ValueError("backend='pallas' does not compose with mesh "
                          "sharding; use backend='xla' (or 'auto')")
     with _x64():
+        import jax
         import jax.numpy as jnp
         args = [{k: jnp.asarray(v) for k, v in rows.items()},
                 jnp.asarray(caps), jnp.asarray(rem0),
@@ -988,6 +1083,18 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 jnp.asarray(float(theta), jnp.float64),
                 jnp.asarray(float(batch_rows), jnp.float64),
                 jnp.asarray(float(belief_alpha), jnp.float64)]
+        stats = reduce == "stats"
+        if stats:
+            gid = jnp.asarray(
+                np.zeros(n_lanes, np.int32) if group_id is None
+                else np.asarray(group_id, np.int32))
+            vld = jnp.asarray(
+                np.ones(n_lanes, bool) if valid is None
+                else np.asarray(valid, bool))
+            jedges = {k: jnp.asarray(e) for k, e in edges.items()}
+            # Donation only where the platform implements it; elsewhere it
+            # just warns and copies.
+            donate = donate and jax.default_backend() != "cpu"
         if backend == "pallas" and stochastic:
             # The Pallas lane kernel (interpret-mode on CPU); the
             # deterministic closed form has no charge loop to fuse, so a
@@ -999,9 +1106,18 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                                  shared_rows=shared_rows,
                                  enable_fast=enable_fast,
                                  has_burn=has_burn, chunk=chunk)
+            if stats:
+                parts = _jit_reduce_only(n_groups)(out, gid, vld, jedges)
+                return jax.tree_util.tree_map(np.asarray, parts)
             return {k: np.asarray(v) for k, v in out.items()}
         xla_backend = "xla" if backend == "pallas" else backend
         if mesh is None:
+            if stats:
+                parts = _jit_replay_stats(
+                    shared_rows, adaptive, parametric, stochastic,
+                    xla_backend, chunk, enable_fast, has_burn, n_groups,
+                    donate)(*args, gid, vld, jedges)
+                return jax.tree_util.tree_map(np.asarray, parts)
             out = _jit_replay(shared_rows, adaptive, parametric,
                               stochastic, xla_backend, chunk,
                               enable_fast, has_burn)(*args)
@@ -1024,10 +1140,91 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 args[0] = {k: jnp.concatenate(
                     [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
                     for k, v in args[0].items()}
+        if stats:
+            if pad:
+                # padding lanes are masked out of every statistic
+                gid = jnp.concatenate([gid, jnp.zeros(pad, gid.dtype)])
+                vld = jnp.concatenate([vld, jnp.zeros(pad, bool)])
+            parts = _jit_sharded_replay_stats(
+                mesh, shared_rows, adaptive, parametric, stochastic,
+                xla_backend, chunk, enable_fast, has_burn,
+                n_groups)(*args, gid, vld, jedges)
+            return jax.tree_util.tree_map(np.asarray, parts)
         out = _jit_sharded_replay(mesh, shared_rows, adaptive, parametric,
                                   stochastic, xla_backend, chunk,
                                   enable_fast, has_burn)(*args)
         return {k: np.asarray(v)[:n_lanes] for k, v in out.items()}
+
+
+def _lane_io_bytes(n_lanes: int, *arrays) -> int:
+    """Host-visible per-lane buffer bytes of one replay call: the per-lane
+    input arrays plus the in-jit per-lane output channels (6 f64 scalars,
+    the per-class cycle matrix, and the bool ``stuck`` flag).  This is the
+    quantity the memory-flat bench asserts is a function of the chunk
+    size, not the fleet size."""
+    return (sum(a.nbytes for a in arrays if a is not None)
+            + n_lanes * (8 * (6 + _N_CLASSES) + 1))
+
+
+def _chunked_replay(plan_rows: dict, n_rows: int, n_lanes: int,
+                    lane_chunk: int, make_inputs, group_id_of,
+                    policy: str, theta: float, batch_rows: int,
+                    belief_alpha: float, mesh, backend: str, reduce: str,
+                    edges: dict | None, n_groups: int):
+    """Drive one shared-rows replay over the device axis in fixed-size
+    lane chunks: per-chunk inputs are generated on demand by
+    ``make_inputs(lane_lo, m)`` (chunk-invariant counter-based samplers,
+    so the chunking never changes a lane's inputs), the final partial
+    chunk is padded to ``lane_chunk`` with inert masked lanes so every
+    chunk reuses one compiled program, and lane buffers are donated to
+    the jit.  Under ``reduce="stats"`` chunk partials merge associatively
+    into one :class:`FleetStats` -- peak lane memory is the chunk, not
+    the fleet.  Under ``reduce="none"`` per-chunk outputs are
+    concatenated (bit-identical to the unchunked streamed call; used as
+    the differential oracle, not for scale)."""
+    if lane_chunk < 1:
+        raise ValueError(f"lane_chunk must be >= 1, got {lane_chunk}")
+    stats = None
+    outs: list[dict] = []
+    peak = 0
+    for lo in range(0, n_lanes, lane_chunk):
+        m = min(lane_chunk, n_lanes - lo)
+        pad = lane_chunk - m if n_lanes > lane_chunk else 0
+        caps, rem0, tail, cum, ccum = make_inputs(lo, m)
+        gid = np.asarray(group_id_of(lo, m), np.int32)
+        if pad:
+            # inert lanes: continuous power completes every row in one
+            # pass; valid=False masks them out of every statistic.
+            caps = np.concatenate([caps, np.full(pad, np.inf)])
+            rem0 = np.concatenate([rem0, np.full(pad, np.inf)])
+            tail = np.concatenate([tail, np.zeros(pad)])
+            if cum is not None:
+                cum = np.concatenate(
+                    [cum, np.zeros((pad, cum.shape[1]))])
+            if ccum is not None:
+                ccum = np.concatenate(
+                    [ccum, np.zeros((pad, ccum.shape[1]))])
+            gid = np.concatenate([gid, np.zeros(pad, np.int32)])
+        valid = np.arange(m + pad) < m
+        peak = max(peak, _lane_io_bytes(m + pad, caps, rem0, tail, cum,
+                                        ccum, gid, valid))
+        res = _run_replay(plan_rows, caps, rem0, shared_rows=True,
+                          trace_cum=cum, tail_s=tail, policy=policy,
+                          theta=theta, batch_rows=batch_rows,
+                          belief_alpha=belief_alpha, charge_cum=ccum,
+                          mesh=mesh, backend=backend, n_rows=n_rows,
+                          reduce=reduce, group_id=gid, valid=valid,
+                          edges=edges, n_groups=n_groups, donate=True)
+        if reduce == "stats":
+            part = FleetStats.from_parts(res, edges)
+            stats = part if stats is None else stats.merge(part)
+        else:
+            outs.append({k: v[:m] for k, v in res.items()})
+    if reduce == "stats":
+        stats.peak_lane_bytes = peak
+        return stats
+    return {k: np.concatenate([o[k] for o in outs])
+            for k in outs[0]}, peak
 
 
 @dataclass
@@ -1048,7 +1245,10 @@ def replay_plans(plans: list[FleetPlan],
                  batch_rows: int = 1, belief_alpha: float = 0.0,
                  recharge_traces: np.ndarray | None = None,
                  charge_traces: np.ndarray | None = None,
-                 backend: str = "auto") -> list[ReplayOut]:
+                 backend: str = "auto", reduce: str = "none",
+                 stats_bins: int = 64,
+                 stats_edges: dict | None = None
+                 ) -> list[ReplayOut] | FleetStats:
     """Replay many plans in one jitted vmap'd call (one lane per plan).
 
     ``init_frac`` optionally scales each lane's initial buffer charge
@@ -1074,10 +1274,19 @@ def replay_plans(plans: list[FleetPlan],
     parameterized plans (where the static ``max_atomic`` bound is sized
     with the continuously-calibrated tile and would falsely DNF lanes that
     select a smaller tile), and identical to the scalar simulator's
-    ``max_atomic`` check for everything else."""
+    ``max_atomic`` check for everything else.
+
+    ``reduce="stats"`` folds the lanes into one :class:`FleetStats`
+    inside the jit (``REPLAY_REDUCES``) instead of materializing
+    :class:`ReplayOut` rows; ``stats_bins``/``stats_edges`` size its
+    fixed histogram bins (defaults derived from the plans' nominal
+    bounds)."""
     from repro.runtime.failures import (charge_trace_cumulative,
                                         recharge_trace_cumulative)
 
+    if reduce not in REPLAY_REDUCES:
+        raise ValueError(f"unknown reduce mode {reduce!r}; "
+                         f"expected one of {REPLAY_REDUCES}")
     caps = np.asarray([p.capacity for p in plans], np.float64)
     rem0 = caps if init_frac is None else \
         np.where(np.isinf(caps), np.inf, caps * np.asarray(init_frac))
@@ -1099,6 +1308,27 @@ def replay_plans(plans: list[FleetPlan],
                 f"charge_traces must be (len(plans), R) = "
                 f"({len(plans)}, R), got {charge_traces.shape}")
         ccum = charge_trace_cumulative(charge_traces)
+    if reduce == "stats":
+        edges = stats_edges if stats_edges is not None else \
+            default_stat_edges(
+                max(p.total_cycles for p in plans),
+                np.asarray([p.capacity for p in plans]),
+                np.asarray([p.recharge_s for p in plans]), stats_bins)
+        t0 = time.perf_counter()
+        parts = _run_replay(_pad_stack(plans), caps, rem0,
+                            shared_rows=False, trace_cum=cum, tail_s=tail,
+                            policy=policy, theta=theta,
+                            batch_rows=batch_rows,
+                            belief_alpha=belief_alpha, charge_cum=ccum,
+                            backend=backend,
+                            n_rows=np.asarray([len(p) for p in plans],
+                                              np.int32),
+                            reduce="stats", edges=edges)
+        stats = FleetStats.from_parts(parts, edges)
+        stats.wall_s = time.perf_counter() - t0
+        stats.peak_lane_bytes = _lane_io_bytes(len(plans), caps, rem0,
+                                               tail, cum, ccum)
+        return stats
     out = _run_replay(_pad_stack(plans), caps, rem0, shared_rows=False,
                       trace_cum=cum, tail_s=tail, policy=policy,
                       theta=theta, batch_rows=batch_rows,
@@ -1235,7 +1465,10 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                 trace_reboots: int = 0, charge_cv: float = 0.0,
                 charge_bias_cv: float = 0.0,
                 charge_reboots: int = 0, mesh=None,
-                backend: str = "auto") -> FleetSweepResult:
+                backend: str = "auto", reduce: str = "none",
+                lane_chunk: int | None = None, stats_bins: int = 64,
+                stats_edges: dict | None = None
+                ) -> FleetSweepResult | FleetStats:
     """Replay one (strategy, power) plan across ``n_devices`` simulated
     devices with per-device harvest-trace jitter, in one compiled pass.
 
@@ -1262,17 +1495,85 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
     shards the device axis across chips.  The plan is broadcast across
     device lanes, so memory scales with plan size + fleet size, not their
     product.
+
+    ``reduce="stats"`` replaces the per-lane result arrays with one
+    fixed-size :class:`FleetStats` folded inside the jit
+    (``REPLAY_REDUCES``), and ``lane_chunk=`` additionally streams the
+    device axis through that many lanes at a time -- per-chunk inputs
+    come from the chunk-invariant ``*_stream`` samplers in
+    ``runtime.failures`` (so results do not depend on the chunking, but
+    differ bitwise from the legacy unchunked draw stream), chunk partials
+    merge associatively, and peak device-axis memory is a function of
+    ``lane_chunk`` alone (``FleetStats.peak_lane_bytes`` records it) --
+    this is the 1e7-device memory-flat path.  ``stats_bins``/
+    ``stats_edges`` size the fixed histogram bins.
     """
     from repro.runtime.failures import (charge_capacity_jitter,
+                                        charge_capacity_jitter_stream,
                                         charge_trace_cumulative,
                                         harvest_jitter,
+                                        harvest_jitter_stream,
                                         initial_charge_fraction,
+                                        initial_charge_fraction_stream,
                                         reboot_recharge_times,
+                                        reboot_recharge_times_stream,
                                         recharge_trace_cumulative)
 
+    if reduce not in REPLAY_REDUCES:
+        raise ValueError(f"unknown reduce mode {reduce!r}; "
+                         f"expected one of {REPLAY_REDUCES}")
     t0 = time.perf_counter()
     if plan is None:
         plan = build_plan(net, x, strategy, power)
+    use_charge = charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0
+    edges = None
+    if reduce == "stats":
+        edges = stats_edges if stats_edges is not None else \
+            default_stat_edges(plan.total_cycles, plan.capacity,
+                               plan.recharge_s, stats_bins)
+    if lane_chunk is not None:
+        def make_inputs(lo, m):
+            frac = initial_charge_fraction_stream(m, seed=seed,
+                                                  lane_lo=lo)
+            jm = harvest_jitter_stream(m, seed=seed, cv=recharge_cv,
+                                       lane_lo=lo)
+            caps_c = np.full(m, plan.capacity, np.float64)
+            rem0_c = np.where(np.isinf(caps_c), np.inf, caps_c * frac)
+            tail_c = plan.recharge_s * jm
+            cum_c = ccum_c = None
+            if trace_reboots > 0:
+                tr = reboot_recharge_times_stream(
+                    m, trace_reboots, plan.recharge_s, seed=seed,
+                    lane_lo=lo)
+                cum_c = recharge_trace_cumulative(tr * jm[:, None])
+            if use_charge:
+                ctr = charge_capacity_jitter_stream(
+                    m, charge_reboots or 256, plan.capacity, seed=seed,
+                    cv=charge_cv, bias_cv=charge_bias_cv, lane_lo=lo)
+                ccum_c = charge_trace_cumulative(ctr)
+            return caps_c, rem0_c, tail_c, cum_c, ccum_c
+
+        res = _chunked_replay(
+            _plan_rows(plan), len(plan), n_devices, lane_chunk,
+            make_inputs, lambda lo, m: np.zeros(m, np.int32), policy,
+            theta, batch_rows, belief_alpha, mesh, backend, reduce,
+            edges, 1)
+        if reduce == "stats":
+            res.wall_s = time.perf_counter() - t0
+            return res
+        out, _peak = res
+        return FleetSweepResult(
+            strategy, power, n_devices,
+            completed=~out["stuck"],
+            live_s=out["live"] / CLOCK_HZ,
+            dead_s=out["dead"],
+            reboots=out["reboots"],
+            energy_j=out["live"] * JOULES_PER_CYCLE,
+            wall_s=time.perf_counter() - t0,
+            wasted_cycles=out["wasted"],
+            belief_cycles=out["belief"],
+            policy=policy, theta=theta, batch_rows=batch_rows,
+            belief_alpha=belief_alpha)
     frac = initial_charge_fraction(n_devices, seed=seed)
     jit_mult = harvest_jitter(n_devices, seed=seed + 1, cv=recharge_cv)
     caps = np.full(n_devices, plan.capacity, np.float64)
@@ -1283,11 +1584,27 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
         traces = reboot_recharge_times(n_devices, trace_reboots,
                                        plan.recharge_s, seed=seed + 2)
         cum = recharge_trace_cumulative(traces * jit_mult[:, None])
-    if charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0:
+    if use_charge:
         ctr = charge_capacity_jitter(n_devices, charge_reboots or 256,
                                      plan.capacity, seed=seed + 3,
                                      cv=charge_cv, bias_cv=charge_bias_cv)
         ccum = charge_trace_cumulative(ctr)
+    if reduce == "stats":
+        # Unchunked stats: same legacy input draws as reduce="none", so
+        # the reduction is bit-exactly comparable to statistics computed
+        # from the materialized outputs (the differential oracle).
+        parts = _run_replay(_plan_rows(plan), caps, rem0,
+                            shared_rows=True, trace_cum=cum, tail_s=tail,
+                            policy=policy, theta=theta,
+                            batch_rows=batch_rows,
+                            belief_alpha=belief_alpha, charge_cum=ccum,
+                            mesh=mesh, backend=backend, n_rows=len(plan),
+                            reduce="stats", edges=edges)
+        stats = FleetStats.from_parts(parts, edges)
+        stats.wall_s = time.perf_counter() - t0
+        stats.peak_lane_bytes = _lane_io_bytes(n_devices, caps, rem0,
+                                               tail, cum, ccum)
+        return stats
     out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
                       trace_cum=cum, tail_s=tail, policy=policy,
                       theta=theta, batch_rows=batch_rows,
@@ -1338,8 +1655,10 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
                     theta: float = 0.5, batch_rows: int = 1,
                     belief_alpha: float = 0.0, charge_cv: float = 0.0,
                     charge_bias_cv: float = 0.0, charge_reboots: int = 0,
-                    mesh=None,
-                    backend: str = "auto") -> CapacitorSweepResult:
+                    mesh=None, backend: str = "auto",
+                    reduce: str = "none", lane_chunk: int | None = None,
+                    stats_bins: int = 64, stats_edges: dict | None = None
+                    ) -> CapacitorSweepResult | FleetStats:
     """Sweep (capacitor size x device) in ONE vmapped/sharded replay of ONE
     parameterized plan -- no per-capacitor re-extraction.
 
@@ -1352,12 +1671,25 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
     would falsely DNF small-capacitor lanes).  ``charge_cv``/
     ``charge_reboots`` switch on stochastic per-charge capacities (see
     :func:`fleet_sweep`), jittered around each lane's own nominal budget.
+
+    ``reduce="stats"`` folds the grid into one :class:`FleetStats` with
+    one statistics *group per capacitor* (``group_labels`` holds the
+    capacities) inside the jit, and ``lane_chunk=`` streams the flat
+    (capacitor-major) lane axis through that many lanes at a time with
+    chunk-invariant samplers -- see :func:`fleet_sweep` for the
+    memory-flat semantics.
     """
     from repro.runtime.failures import (charge_capacity_jitter,
+                                        charge_capacity_jitter_stream,
                                         charge_trace_cumulative,
                                         harvest_jitter,
-                                        initial_charge_fraction)
+                                        harvest_jitter_stream,
+                                        initial_charge_fraction,
+                                        initial_charge_fraction_stream)
 
+    if reduce not in REPLAY_REDUCES:
+        raise ValueError(f"unknown reduce mode {reduce!r}; "
+                         f"expected one of {REPLAY_REDUCES}")
     t0 = time.perf_counter()
     if plan is None:
         plan = build_plan(net, x, strategy, "1mF", parametric=True)
@@ -1367,17 +1699,83 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
     capacities = np.asarray(capacities, np.float64)
     n_caps = capacities.shape[0]
     lanes = n_caps * n_devices
+    use_charge = charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0
+    edges = None
+    if reduce == "stats":
+        fin = capacities[np.isfinite(capacities)]
+        rec = (rf_recharge_seconds(fin) if fin.size
+               else np.zeros(1))
+        edges = stats_edges if stats_edges is not None else \
+            default_stat_edges(plan.total_cycles, capacities, rec,
+                               stats_bins)
+    if lane_chunk is not None:
+        def make_inputs(lo, m):
+            caps_c = capacities[
+                (lo + np.arange(m)) // n_devices]
+            frac = initial_charge_fraction_stream(m, seed=seed,
+                                                  lane_lo=lo)
+            jm = harvest_jitter_stream(m, seed=seed, cv=recharge_cv,
+                                       lane_lo=lo)
+            rem0_c = np.where(np.isinf(caps_c), np.inf, caps_c * frac)
+            tail_c = np.where(np.isinf(caps_c), 0.0,
+                              rf_recharge_seconds(caps_c) * jm)
+            ccum_c = None
+            if use_charge:
+                ctr = charge_capacity_jitter_stream(
+                    m, charge_reboots or 256, caps_c, seed=seed,
+                    cv=charge_cv, bias_cv=charge_bias_cv, lane_lo=lo)
+                ccum_c = charge_trace_cumulative(ctr)
+            return caps_c, rem0_c, tail_c, None, ccum_c
+
+        res = _chunked_replay(
+            _plan_rows(plan), len(plan), lanes, lane_chunk, make_inputs,
+            lambda lo, m: (lo + np.arange(m)) // n_devices, policy,
+            theta, batch_rows, belief_alpha, mesh, backend, reduce,
+            edges, n_caps)
+        if reduce == "stats":
+            res.group_labels = capacities
+            res.wall_s = time.perf_counter() - t0
+            return res
+        out, _peak = res
+        shape = (n_caps, n_devices)
+        return CapacitorSweepResult(
+            strategy, capacities, n_devices,
+            completed=(~out["stuck"]).reshape(shape),
+            live_s=(out["live"] / CLOCK_HZ).reshape(shape),
+            dead_s=out["dead"].reshape(shape),
+            reboots=out["reboots"].reshape(shape),
+            energy_j=(out["live"] * JOULES_PER_CYCLE).reshape(shape),
+            wall_s=time.perf_counter() - t0,
+            wasted_cycles=out["wasted"].reshape(shape),
+            belief_cycles=out["belief"].reshape(shape),
+            policy=policy, theta=theta, batch_rows=batch_rows,
+            belief_alpha=belief_alpha)
     caps = np.repeat(capacities, n_devices)
     frac = initial_charge_fraction(lanes, seed=seed)
     jit_mult = harvest_jitter(lanes, seed=seed + 1, cv=recharge_cv)
     rem0 = np.where(np.isinf(caps), np.inf, caps * frac)
     tail = np.where(np.isinf(caps), 0.0, rf_recharge_seconds(caps) * jit_mult)
     ccum = None
-    if charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0:
+    if use_charge:
         ctr = charge_capacity_jitter(lanes, charge_reboots or 256, caps,
                                      seed=seed + 3, cv=charge_cv,
                                      bias_cv=charge_bias_cv)
         ccum = charge_trace_cumulative(ctr)
+    if reduce == "stats":
+        gid = np.repeat(np.arange(n_caps, dtype=np.int32), n_devices)
+        parts = _run_replay(_plan_rows(plan), caps, rem0,
+                            shared_rows=True, tail_s=tail, policy=policy,
+                            theta=theta, batch_rows=batch_rows,
+                            belief_alpha=belief_alpha, charge_cum=ccum,
+                            mesh=mesh, backend=backend, n_rows=len(plan),
+                            reduce="stats", group_id=gid, edges=edges,
+                            n_groups=n_caps)
+        stats = FleetStats.from_parts(parts, edges,
+                                      group_labels=capacities)
+        stats.wall_s = time.perf_counter() - t0
+        stats.peak_lane_bytes = _lane_io_bytes(lanes, caps, rem0, tail,
+                                               ccum)
+        return stats
     out = _run_replay(_plan_rows(plan), caps, rem0, shared_rows=True,
                       tail_s=tail, policy=policy, theta=theta,
                       batch_rows=batch_rows, belief_alpha=belief_alpha,

@@ -51,6 +51,7 @@ is also how the differential harness pins it against the XLA path.
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple
 
 import jax
@@ -87,6 +88,45 @@ def torn_prefix(entry_class, seg_class, seg_cycles, p):
     starts = jnp.cumsum(seg_cycles) - seg_cycles
     amt = jnp.clip(p - starts, 0.0, seg_cycles)
     return jnp.zeros_like(entry_class).at[seg_class].add(amt)
+
+
+def pack_rows(rows: dict):
+    """Flatten a plan's per-row field dict into one ``(S, F)`` f64 matrix
+    plus a static unpack layout.
+
+    An event used to gather ~19 separate row fields (scalars, class
+    vectors, segment lists, tile tables) with one dynamic index each --
+    the dominant per-event cost on gather-bound plans (sonic, tile-8).
+    Packing them column-wise means :func:`unpack_row` reads the entire
+    row with a single ``dynamic_slice`` of one contiguous ``(1, F)``
+    stripe.  Everything is stored as f64: every integer field (``kind``,
+    ``tile_flag``, the segment class ids) is a small whole number, exact
+    in f64, and is cast back to its original dtype on unpack -- the
+    round-trip is bitwise lossless, so the packed replay is bit-identical
+    to the unpacked one.  The pack itself is event-loop-invariant (built
+    once per replay, hoisted out of the compiled loop)."""
+    keys = tuple(sorted(rows))
+    cols, layout, off = [], [], 0
+    for k in keys:
+        v = jnp.asarray(rows[k])
+        flat = v.reshape(v.shape[0], -1).astype(jnp.float64)
+        layout.append((k, off, v.shape[1:], v.dtype))
+        cols.append(flat)
+        off += flat.shape[1]
+    return jnp.concatenate(cols, axis=1), tuple(layout)
+
+
+def unpack_row(packed, layout, i) -> dict:
+    """Rebuild row ``i``'s field dict from the packed matrix with one
+    ``dynamic_slice`` (the static ``layout`` splits the stripe for
+    free)."""
+    stripe = lax.dynamic_slice_in_dim(packed, i, 1, axis=0)[0]
+    row = {}
+    for k, off, shape, dtype in layout:
+        w = math.prod(shape) if shape else 1
+        v = stripe[off:off + w]
+        row[k] = (v.reshape(shape) if shape else v[0]).astype(dtype)
+    return row
 
 
 class RowCtx(NamedTuple):
@@ -472,10 +512,10 @@ def _select(pred, a, b):
         lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def event_step(rows, cap, trace_cum, tail_s, charge_cum, nominal_from,
-               theta, window, alpha, adaptive: bool, parametric: bool,
-               enable_fast: bool, has_burn: bool, st: EventState,
-               active) -> EventState:
+def event_step(packed, layout, cap, trace_cum, tail_s, charge_cum,
+               nominal_from, theta, window, alpha, adaptive: bool,
+               parametric: bool, enable_fast: bool, has_burn: bool,
+               st: EventState, active) -> EventState:
     """One event: one charge of the current row, or the row's closed-form
     remainder when eligible, or a whole BURN/CALIB row.
 
@@ -488,9 +528,9 @@ def event_step(rows, cap, trace_cum, tail_s, charge_cum, nominal_from,
     never changes results -- the fast path is a pure shortcut and the
     BURN override is dead code without BURN rows -- it only removes the
     corresponding per-event arithmetic from the compiled body."""
-    s_pad = rows["kind"].shape[0]
+    s_pad = packed.shape[0]
     i = jnp.minimum(st.i, s_pad - 1)
-    row = {k: v[i] for k, v in rows.items()}
+    row = unpack_row(packed, layout, i)
     ctx = row_ctx(row, cap, theta, adaptive, parametric)
 
     # Entering a row resets the row-local loop state (iterations left,
@@ -609,6 +649,7 @@ def event_replay(rows, cap, rem0, trace_cum, tail_s, charge_cum,
     ``s_real`` is the lane's real (pre-padding) row count: the cursor
     never walks padding rows, and once ``i == s_real`` every further event
     is a bitwise no-op (see the module docstring's masking scheme)."""
+    packed, layout = pack_rows(rows)
     zero = jnp.zeros_like(rem0)
     st0 = EventState(
         i=jnp.asarray(0, jnp.int32),
@@ -623,10 +664,10 @@ def event_replay(rows, cap, rem0, trace_cum, tail_s, charge_cum,
         stuck=jnp.asarray(False))
 
     def masked_event(st, _):
-        return event_step(rows, cap, trace_cum, tail_s, charge_cum,
-                          nominal_from, theta, window, alpha, adaptive,
-                          parametric, enable_fast, has_burn, st,
-                          active=st.i < s_real), None
+        return event_step(packed, layout, cap, trace_cum, tail_s,
+                          charge_cum, nominal_from, theta, window, alpha,
+                          adaptive, parametric, enable_fast, has_burn,
+                          st, active=st.i < s_real), None
 
     st = lax.while_loop(
         lambda st: st.i < s_real,

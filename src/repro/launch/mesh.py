@@ -74,6 +74,25 @@ def compat_shard_map(f, mesh, in_specs, out_specs):
         return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
+def fleet_all_reduce(parts, axis_name: str = "devices"):
+    """All-reduce the fleet-statistics partials of
+    ``repro.core.fleetstats.reduce_lane_outputs`` across a mesh axis.
+
+    ``parts`` is the ``(psums, pmins, pmaxs)`` triple, split by reduction
+    operator: sums/counts/histograms combine with ``psum``, the exact
+    extremes with ``pmin``/``pmax``.  After the reduce every shard holds
+    the identical fleet summary (replicated, ``out_specs=P()``), so a
+    sharded sweep returns one fixed-size result instead of per-lane
+    arrays -- the cross-shard half of the memory-flat reduction (lane
+    chunking on the host is the other half)."""
+    from jax import lax, tree_util
+
+    psums, pmins, pmaxs = parts
+    return (tree_util.tree_map(lambda x: lax.psum(x, axis_name), psums),
+            tree_util.tree_map(lambda x: lax.pmin(x, axis_name), pmins),
+            tree_util.tree_map(lambda x: lax.pmax(x, axis_name), pmaxs))
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axes of a mesh (pod folds into DP)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

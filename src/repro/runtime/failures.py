@@ -250,6 +250,118 @@ def pad_charge_trace_columns(charge_cum: np.ndarray, caps,
     return np.concatenate([cum, ext], axis=1)
 
 
+# --------------------------------------------------------------------------
+# Lane-indexed streamed samplers (chunk-invariant counter-based RNG)
+# --------------------------------------------------------------------------
+# The legacy samplers above draw one sequential stream over the whole fleet,
+# so a sweep that generates its inputs chunk-by-chunk (``fleet_sweep(...,
+# lane_chunk=...)`` -- the memory-flat path) could never reproduce them: the
+# draws for lane ``i`` would depend on where the chunk boundaries fell.
+# These ``*_stream`` variants use a counter-based generator (Philox) keyed
+# on ``(seed, stream)`` and *advanced* to ``lane_lo * draws_per_lane``, with
+# a fixed number of draws per lane, so the values for any lane range are a
+# pure function of ``(seed, lane index)`` -- generating lanes [0, 1e7) in
+# one call or in 77 chunks yields bit-identical arrays, and peak host
+# memory is the chunk, not the fleet.  Distributions match the legacy
+# samplers (lognormal via Box-Muller, exponential via inverse CDF) but the
+# draw streams are distinct, so seeds are not interchangeable across the
+# two families.
+
+_FRAC_STREAM, _HARVEST_STREAM, _RECHARGE_STREAM, _CHARGE_STREAM = 0, 1, 2, 3
+
+
+def _stream_uniforms(n_lanes: int, draws_per_lane: int, seed: int,
+                     stream: int, lane_lo: int) -> np.ndarray:
+    """``(n_lanes, draws_per_lane)`` doubles in [0, 1): draws
+    ``[lane_lo * k, (lane_lo + n_lanes) * k)`` of the counter-based stream
+    ``(seed, stream)`` -- lane ``i`` always sees the same ``k`` draws no
+    matter how the fleet is chunked."""
+    if seed < 0 or stream < 0 or lane_lo < 0:
+        raise ValueError("seed, stream and lane_lo must be >= 0")
+    # Philox.advance() moves whole 128-bit counter blocks (4 uint64 draws
+    # = 4 doubles), so each lane's slot is padded to a multiple of 4 draws
+    # to keep every lane boundary block-aligned.
+    slot = -(-int(draws_per_lane) // 4) * 4
+    bg = np.random.Philox(key=np.array([seed, stream], np.uint64))
+    bg.advance(int(lane_lo) * slot // 4)
+    u = np.random.Generator(bg).random(n_lanes * slot)
+    return u.reshape(n_lanes, slot)[:, :draws_per_lane]
+
+
+def _stream_normals(n_lanes: int, per_lane: int, seed: int, stream: int,
+                    lane_lo: int) -> np.ndarray:
+    """``(n_lanes, per_lane)`` standard normals via Box-Muller (two
+    uniforms per normal, so 2 * per_lane draws per lane)."""
+    u = _stream_uniforms(n_lanes, 2 * per_lane, seed, stream, lane_lo)
+    u1, u2 = u[:, :per_lane], u[:, per_lane:]
+    return np.sqrt(-2.0 * np.log1p(-u1)) * np.cos(2.0 * np.pi * u2)
+
+
+def initial_charge_fraction_stream(n_devices: int, seed: int = 0,
+                                   lane_lo: int = 0) -> np.ndarray:
+    """Chunk-invariant :func:`initial_charge_fraction`: uniform [0.05, 1)
+    wake fill levels for lanes ``[lane_lo, lane_lo + n_devices)``."""
+    u = _stream_uniforms(n_devices, 1, seed, _FRAC_STREAM, lane_lo)
+    return 0.05 + 0.95 * u[:, 0]
+
+
+def harvest_jitter_stream(n_devices: int, seed: int = 0, cv: float = 0.25,
+                          lane_lo: int = 0) -> np.ndarray:
+    """Chunk-invariant :func:`harvest_jitter`: mean-1 lognormal recharge
+    multipliers with coefficient of variation ``cv`` (2 draws/lane)."""
+    z = _stream_normals(n_devices, 1, seed, _HARVEST_STREAM, lane_lo)[:, 0]
+    sigma = np.sqrt(np.log1p(cv * cv))
+    return np.exp(-sigma * sigma / 2 + sigma * z)
+
+
+def reboot_recharge_times_stream(n_devices: int, n_reboots: int,
+                                 mean_recharge_s: float, seed: int = 0,
+                                 lane_lo: int = 0) -> np.ndarray:
+    """Chunk-invariant :func:`reboot_recharge_times`: exponential
+    per-reboot recharge times, ``n_reboots`` draws per lane."""
+    u = _stream_uniforms(n_devices, n_reboots, seed, _RECHARGE_STREAM,
+                         lane_lo)
+    return -mean_recharge_s * np.log1p(-u)
+
+
+def charge_capacity_jitter_stream(n_devices: int, n_charges: int,
+                                  nominal_cycles, seed: int = 0,
+                                  cv: float = 0.25, bias_cv: float = 0.0,
+                                  lane_lo: int = 0, lo: float = 0.25,
+                                  hi: float = 4.0) -> np.ndarray:
+    """Chunk-invariant :func:`charge_capacity_jitter`: truncated-lognormal
+    per-charge capacity multiples (plus the optional persistent per-device
+    bias), ``2 * (n_charges + 1)`` draws per lane regardless of ``cv`` so
+    lane alignment never depends on the distribution parameters.
+    ``nominal_cycles`` may be a scalar or a ``(devices,)`` vector holding
+    this lane range's nominals."""
+    if cv < 0:
+        raise ValueError(f"cv must be >= 0, got {cv}")
+    if bias_cv < 0:
+        raise ValueError(f"bias_cv must be >= 0, got {bias_cv}")
+    if not 0 < lo <= 1.0 <= hi:
+        raise ValueError(f"need 0 < lo <= 1 <= hi, got lo={lo} hi={hi}")
+    z = _stream_normals(n_devices, n_charges + 1, seed, _CHARGE_STREAM,
+                        lane_lo)
+    nominal = np.broadcast_to(
+        np.asarray(nominal_cycles, np.float64).reshape(-1, 1),
+        (n_devices, n_charges))
+    if cv == 0 and bias_cv == 0:
+        mult = np.ones((n_devices, n_charges))
+    else:
+        if cv > 0:
+            sigma = np.sqrt(np.log1p(cv * cv))
+            mult = np.exp(-sigma * sigma / 2 + sigma * z[:, :n_charges])
+        else:
+            mult = np.ones((n_devices, n_charges))
+        if bias_cv > 0:
+            bsig = np.sqrt(np.log1p(bias_cv * bias_cv))
+            bias = np.exp(-bsig * bsig / 2 + bsig * z[:, n_charges])
+            mult = mult * bias[:, None]
+        mult = np.clip(mult, lo, hi)
+    return np.maximum(np.rint(nominal * mult), 1.0)
+
+
 def simulate(policy: str, fleet: FleetSpec, job: JobSpec, interval: int = 50,
              seed: int = 0, horizon_factor: float = 50.0) -> RunStats:
     """Run the job under a fault-tolerance policy against a failure trace."""
