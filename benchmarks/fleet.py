@@ -9,9 +9,11 @@ with a measured speedup over looping the scalar simulator, plus a
 
 Each run records the machine-readable perf trajectory in
 ``BENCH_fleet.json`` at the repo root (devices/sec, speedup vs scalar,
-per-strategy wall time, and the streamed ``fleet_scaling`` section --
+per-strategy wall time, the streamed ``fleet_scaling`` section --
 devices/sec and peak lane-buffer bytes for ``reduce="stats"`` replays up
-to 1e7 lanes) so regressions are visible across PRs.  ``python
+to 1e7 lanes -- and the ``design_space`` section: a stacked ``PlanSet``
+of 18 candidates replayed under ONE compiled scan) so regressions are
+visible across PRs.  ``python
 benchmarks/fleet.py --smoke`` runs a tiny fleet and *asserts* the replay
 beats the scalar loop AND that the streamed replay's peak lane-buffer
 bytes stay under a fixed budget independent of lane count (the CI smoke
@@ -212,6 +214,101 @@ def tails_capacitor_sweep(n_devices_per_cap: int = 128,
         f"completed={r.completed.sum(axis=1).tolist()}")]
 
 
+def _design_candidate_nets():
+    """Three device-net variants (channel/width scaled) spanning the
+    design axis: same input, different conv channels and FC width."""
+    nets = []
+    for seed, co, m in ((0, 4, 10), (1, 6, 12), (2, 3, 8)):
+        rng = np.random.default_rng(seed)
+        nets.append(SimNet([
+            Conv2D((rng.normal(size=(co, 1, 5, 5)) * 0.3
+                    ).astype(np.float32),
+                   rng.normal(size=co).astype(np.float32)),
+            MaxPool2D(2),
+            DenseFC((rng.normal(size=(m, co * 64)) * 0.1
+                     ).astype(np.float32),
+                    rng.normal(size=m).astype(np.float32), relu=False),
+        ], input_shape=(1, 20, 20), name=f"designdev{seed}"))
+    x = np.random.default_rng(9).normal(size=(1, 20, 20)).astype(np.float32)
+    return nets, x
+
+
+def design_space_sweep(n_devices: int = 64, bench: dict | None = None,
+                       verify: bool = False) -> list[tuple]:
+    """Plan IR v2: the whole (networks x strategies x capacitors) design
+    space as ONE ``PlanSet`` replay -- 18 candidates (3 net variants x
+    tile-8/sonic/tails x 100uF/1mF), each with ``n_devices`` jittered
+    lanes, under a single compiled scan.  Records candidates, lanes/sec,
+    the plan-shape-derived event chunk, and per-strategy worst-case event
+    pressure (rows walked + charge boundaries -- tile-8's fine-grained
+    rows are the ~30k-events/lane case the chunk default exists for).
+    ``verify=True`` (the CI smoke gate) additionally asserts the stacked
+    sweep compiled exactly once and that every candidate's per-device
+    channels are bit-exact against replaying that plan by itself."""
+    from repro.core import PlanSet
+    from repro.core.fleetsim import _jit_replay
+
+    nets, x = _design_candidate_nets()
+    t0 = time.perf_counter()
+    plans, labels = [], []
+    for ni, net in enumerate(nets):
+        for strat in ("tile-8", "sonic", "tails"):
+            ref = None
+            for power in ("100uF", "1mF"):
+                plan = build_plan(net, x, strat, power, ref=ref)
+                ref = (plan.ref_output, plan.max_atomic)
+                plans.append(plan)
+                labels.append(f"net{ni}/{strat}/{power}")
+    ps = PlanSet.from_plans(plans, labels=labels)
+    build_s = time.perf_counter() - t0
+    kw = dict(n_devices=n_devices, seed=7, charge_cv=FLEET_CHARGE_CV,
+              charge_reboots=64, trace_reboots=16)
+    fleet_sweep(plan=ps, **kw)          # untimed warm-up (compile)
+    res = fleet_sweep(plan=ps, **kw)
+    lanes = len(ps) * n_devices
+    compiles = _jit_replay(*res.replay_config)._cache_size()
+    events: dict[str, int] = {}
+    for plan in plans:
+        e = int(len(plan) + np.ceil(plan.total_cycles / plan.capacity))
+        events[plan.strategy] = max(events.get(plan.strategy, 0), e)
+    bitexact = None
+    if verify:
+        bitexact = True
+        for p, plan in enumerate(plans):
+            solo = fleet_sweep(plan=plan, **kw)
+            for ch in ("completed", "energy_j", "dead_s", "reboots",
+                       "wasted_cycles", "belief_cycles"):
+                if not np.array_equal(getattr(res, ch)[p],
+                                      getattr(solo, ch)):
+                    bitexact = False
+    if bench is not None:
+        bench.update({
+            "candidates": len(ps),
+            "devices_per_candidate": n_devices,
+            "lanes": int(lanes),
+            "charge_cv": FLEET_CHARGE_CV,
+            "plan_build_s": round(build_s, 4),
+            "replay_wall_s": round(res.wall_s, 4),
+            "lanes_per_sec": round(lanes / res.wall_s, 1),
+            "event_chunk": res.replay_config[5],
+            "max_events_per_lane": events,
+            "compiles": compiles,
+            "bitexact_vs_sequential": bitexact,
+            "completion_per_candidate":
+                [round(float(c), 4) for c in res.completion_rate],
+        })
+    return [(
+        "fleetsim/design_space_lanes_per_sec",
+        round(lanes / res.wall_s, 1),
+        f"{len(ps)} candidates x {n_devices} devices = {lanes} lanes in "
+        f"{res.wall_s:.3f}s under ONE compiled scan "
+        f"(compiles={compiles}, event_chunk={res.replay_config[5]}, "
+        f"max events/lane per strategy {events}; plans built once in "
+        f"{build_s:.3f}s"
+        + (f"; bitexact_vs_sequential={bitexact}" if verify else "")
+        + ")")]
+
+
 #: Chunk size for the streamed (``reduce="stats"``) scaling runs: every
 #: lane count replays through identical ``SCALING_LANE_CHUNK``-lane donated
 #: buffers, so peak device-axis memory is a function of the chunk, never the
@@ -404,22 +501,28 @@ def adaptive_risk_frontier(n_devices: int = 256,
 
 def write_bench(fleet: dict, capsweep: dict, frontier: dict,
                 scaling: dict | None = None,
+                design: dict | None = None,
                 path: Path = BENCH_PATH,
                 history: Path = HISTORY_PATH) -> None:
     payload = {
-        # schema 5: adds the "fleet_scaling" section (streamed
-        # reduce="stats" replay -- devices/sec and peak lane-buffer bytes
-        # at 1e4..1e7 lanes) and capsweep timing becomes min-of-repeats
-        # after warm-up; schema 4 ran the device fleet sweep stochastically
-        # (charge_cv > 0) through the fused constant-trip replay; schema 3
-        # ran it deterministically (and the frontier gained the belief
-        # axis); schema-2 grid entries carried no "alpha" key
-        "schema": 5,
+        # schema 6: adds the "design_space" section (Plan IR v2 -- a
+        # stacked PlanSet of 18 candidates replayed under ONE compiled
+        # scan, with lanes/sec, the derived event chunk, and per-strategy
+        # event pressure); schema 5 added the "fleet_scaling" section
+        # (streamed reduce="stats" replay -- devices/sec and peak
+        # lane-buffer bytes at 1e4..1e7 lanes) and capsweep timing became
+        # min-of-repeats after warm-up; schema 4 ran the device fleet
+        # sweep stochastically (charge_cv > 0) through the fused
+        # constant-trip replay; schema 3 ran it deterministically (and the
+        # frontier gained the belief axis); schema-2 grid entries carried
+        # no "alpha" key
+        "schema": 6,
         "generated_unix": round(time.time(), 1),
         "fleet": fleet,
         "tails_capacitor_sweep": capsweep,
         "adaptive_risk_frontier": frontier,
         "fleet_scaling": scaling or {},
+        "design_space": design or {},
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")
     # One compact line per run appended to the cross-PR trajectory (the
@@ -459,6 +562,8 @@ def write_bench(fleet: dict, capsweep: dict, frontier: dict,
              if g["theta"] <= 1.0 and g.get("alpha", 0.0) == 0.0),
             default=None),
         "risk_ewma_recovery_max": max(recovery, default=None),
+        "design_lanes_per_sec": (design or {}).get("lanes_per_sec"),
+        "design_candidates": (design or {}).get("candidates"),
     }
     with history.open("a") as fh:
         fh.write(json.dumps(line) + "\n")
@@ -473,7 +578,7 @@ def perf_regression_guard(fleet: dict, history: Path = HISTORY_PATH,
     more than ``max_drop`` of its speedup.  Returns the violation strings
     (empty list = pass) so the CLI can fail the bench-smoke job."""
     any_fleet = next(iter(fleet.values()), {})
-    key = (5, any_fleet.get("devices"), bool(any_fleet.get("warm")))
+    key = (6, any_fleet.get("devices"), bool(any_fleet.get("warm")))
     prior = None
     if history.exists():
         for ln in history.read_text().splitlines():
@@ -503,21 +608,26 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
                    cvs=(0.0, 0.3, 0.5, 0.8),
                    alphas=(0.0, 0.25, 0.5),
                    scaling_lanes=(10**4, 10**6, 10**7),
+                   design_devices: int = 64,
+                   design_verify: bool = False,
                    warm: bool = False) -> tuple[list, dict, dict, dict,
-                                                dict]:
-    """The fleetsim benchmark quartet + its BENCH_fleet.json payloads --
+                                                dict, dict]:
+    """The fleetsim benchmark quintet + its BENCH_fleet.json payloads --
     the single composition shared by :func:`run` and the CLI so the
     recorded schema cannot drift between them."""
     fleet_bench: dict = {}
     cap_bench: dict = {}
     risk_bench: dict = {}
     scaling_bench: dict = {}
+    design_bench: dict = {}
     rows = (device_fleet_sweep(n_devices=n_devices,
                                scalar_sample=scalar_sample,
                                bench=fleet_bench, warm=warm)
             + tails_capacitor_sweep(n_devices_per_cap=n_devices_per_cap,
                                     bench=cap_bench)
             + fleet_scaling(lane_counts=scaling_lanes, bench=scaling_bench)
+            + design_space_sweep(n_devices=design_devices,
+                                 bench=design_bench, verify=design_verify)
             + adaptive_risk_frontier(n_devices=frontier_devices,
                                      thetas=thetas, cvs=cvs, alphas=alphas,
                                      bench=risk_bench))
@@ -525,14 +635,15 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
     fleet_bench["_perf_regressions"] = perf_regression_guard(fleet_bench)
     write_bench({k: v for k, v in fleet_bench.items()
                  if not k.startswith("_")}, cap_bench, risk_bench,
-                scaling_bench)
-    return rows, fleet_bench, cap_bench, risk_bench, scaling_bench
+                scaling_bench, design_bench)
+    return (rows, fleet_bench, cap_bench, risk_bench, scaling_bench,
+            design_bench)
 
 
 def run() -> list[tuple]:
     # the quick bench-runner surface keeps the scaling curve at smoke
     # scale; the 1e4/1e6/1e7 record comes from the full CLI run
-    sim_rows, _, _, _, _ = _fleetsim_rows(scaling_lanes=(10**4, 10**5))
+    sim_rows = _fleetsim_rows(scaling_lanes=(10**4, 10**5))[0]
     return (policy_sweep() + straggler_sweep() + elastic_sweep() + sim_rows)
 
 
@@ -554,13 +665,18 @@ def main() -> None:
         # scaling_lanes spans a 10x range so the smoke job can assert the
         # peak lane buffer does NOT move with the fleet (the memory-flat
         # gate) without paying the full 1e7-lane run on every CI push.
-        rows, fleet_bench, _, risk_bench, scaling_bench = _fleetsim_rows(
+        # design_verify=True: the smoke job re-replays every design-space
+        # candidate individually and asserts the stacked PlanSet sweep is
+        # bit-exact against the sequential replays AND compiled once.
+        (rows, fleet_bench, _, risk_bench, scaling_bench,
+         design_bench) = _fleetsim_rows(
             n_devices=200, scalar_sample=2, n_devices_per_cap=16,
             frontier_devices=256, thetas=(0.5, 1.5), cvs=(0.0, 0.3, 0.6),
             alphas=(0.0, 0.25, 0.5), scaling_lanes=(10**4, 10**5),
-            warm=True)
+            design_devices=16, design_verify=True, warm=True)
     else:
-        rows, fleet_bench, _, risk_bench, scaling_bench = _fleetsim_rows()
+        (rows, fleet_bench, _, risk_bench, scaling_bench,
+         design_bench) = _fleetsim_rows()
     for n, v, d in rows:
         print(f'{n},{v},"{d}"')
     print(f"wrote {BENCH_PATH} (+1 line in {HISTORY_PATH.name})")
@@ -587,6 +703,18 @@ def main() -> None:
         raise SystemExit(
             f"peak lane-buffer bytes {max(peaks.values())} exceeds the "
             f"{SCALING_PEAK_BUDGET_BYTES}-byte budget: {peaks}")
+    # design-space gate: the stacked PlanSet sweep must compile exactly
+    # once (one jit cache entry behind its static key) and, in smoke mode,
+    # reproduce every candidate's sequential replay bit for bit -- either
+    # failing means the plan axis stopped being a pure batching transform
+    if design_bench.get("compiles") != 1:
+        raise SystemExit(
+            f"design-space sweep took {design_bench.get('compiles')} "
+            f"compiles; the stacked plan axis must share ONE")
+    if design_bench.get("bitexact_vs_sequential") is False:
+        raise SystemExit(
+            "stacked design-space sweep diverged from sequential "
+            "per-candidate replays")
     # risk-model gate: deterministic charges never waste; jittered charges
     # under batched commits must (that is the whole point of the model)
     det = [g for g in risk_bench["grid"]

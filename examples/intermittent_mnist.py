@@ -85,6 +85,69 @@ def main():
     print("\n(one compiled scan per strategy -- the scalar simulator at "
           f"~tens of ms/device would need minutes for {2 * n} runs.)")
 
+    # Plan IR v2: the whole (networks x tile-k x capacitors) design space
+    # as ONE PlanSet replay.  Every candidate -- original vs GENESIS-
+    # compressed network, task tiling vs SONIC vs TAILS, three capacitor
+    # sizes -- becomes one lane-major stripe of a single compiled sweep,
+    # with per-charge capacity jitter; the Pareto column marks the
+    # (completion up, energy down) frontier.  SONIC and Tile-8 rows don't
+    # depend on the capacitor, so those plans are built once and restamped
+    # per power system; TAILS bakes its tile choice from the capacitor at
+    # build time (the "tiles" axis), so it builds per power.  Tile-8 on
+    # the 476k-param original would alone be a ~500k-row plan (minutes of
+    # build for a config the Fig. 9 matrix already shows DNFs on small
+    # caps), so the original network enters via SONIC/TAILS.
+    import dataclasses
+    from repro.core import PlanSet, build_plan
+    from repro.core.energy import make_power_system
+    from repro.core.fleetsim import _jit_replay
+    powers = ("100uF", "1mF", "50mF")
+
+    def restamped(plan, power):
+        p = make_power_system(power)
+        return dataclasses.replace(plan, capacity=p.cycles_per_charge,
+                                   recharge_s=p.recharge_s, power=p.name)
+
+    plans, labels = [], []
+    for nname, cnet in (("orig", orig), ("genesis", net)):
+        sonic = build_plan(cnet, x, "sonic", "1mF")
+        for p in powers:
+            plans.append(restamped(sonic, p))
+            labels.append(f"{nname}/sonic/{p}")
+            plans.append(build_plan(cnet, x, "tails", p))
+            labels.append(f"{nname}/tails/{p}")
+    tile8 = build_plan(net, x, "tile-8", "1mF")
+    for p in powers:
+        plans.append(restamped(tile8, p))
+        labels.append(f"genesis/tile-8/{p}")
+    design = PlanSet.from_plans(plans, labels=labels)
+    res = fleet_sweep(plan=design, n_devices=64, seed=42, charge_cv=0.2,
+                      charge_reboots=32)
+    rows = res.summary()
+    frontier = set()
+    best = -1.0
+    for i in sorted(range(len(rows)),
+                    key=lambda i: rows[i]["mean_energy_j"]):
+        if rows[i]["completion"] > best:
+            frontier.add(i)
+            best = rows[i]["completion"]
+    print(f"\ndesign-space sweep: {len(design)} candidates x "
+          f"{res.n_devices} devices in ONE compiled replay "
+          f"(compiles={_jit_replay(*res.replay_config)._cache_size()}, "
+          f"wall={res.wall_s:.2f}s):")
+    print(f"  {'candidate':22s} {'done':>5s} {'mean uJ':>9s} "
+          f"{'p95 ms':>8s} {'pareto':>6s}")
+    for i, row in enumerate(rows):
+        uj = (f"{row['mean_energy_j'] * 1e6:9.2f}"
+              if np.isfinite(row["mean_energy_j"]) else f"{'DNF':>9s}")
+        ms = (f"{row['p95_total_s'] * 1e3:8.1f}"
+              if np.isfinite(row["p95_total_s"]) else f"{'-':>8s}")
+        print(f"  {row['label']:22s} {row['completion']:5.2f} {uj} {ms} "
+              f"{'  *' if i in frontier else '':>6s}")
+    print("(every row above replayed under the same jit -- the stacked "
+          "candidate axis is how GENESIS prices its whole accuracy-energy "
+          "frontier in one fleet_sweep call.)")
+
     # Risk sweep: the energy-adaptive commit policy (batch the per-
     # iteration cursor write to one commit per charge chunk) is a strict
     # win while every charge delivers exactly its nominal budget.  Give

@@ -54,6 +54,8 @@ class ConfigResult:
     e_infer_j: float
     feasible: bool
     impj: float = 0.0
+    completion: float = 1.0      # fleet completion rate under the sweep's
+    latency_s: float = 0.0       # intermittent power; mean wall-clock
     net: SimNet = field(default=None, repr=False)
 
 
@@ -122,15 +124,41 @@ def apply_config(net: SimNet, choices) -> SimNet:
     return SimNet(layers, net.input_shape, net.name)
 
 
-def estimate_energy(net: SimNet, runtime: str = "tails") -> float:
-    cycles = net.total_macs() * CYCLES_PER_MAC[runtime]
-    return cycles * JOULES_PER_CYCLE
+def estimate_energy(net: SimNet, runtime: str = "tails", *,
+                    stats=None, group: int | None = None,
+                    power: str = "continuous") -> float:
+    """Energy per inference in joules, measured by replay.
+
+    With ``stats``/``group`` this is a thin query over an already-replayed
+    design sweep (``fleet_sweep(plan=PlanSet, reduce="stats")``): the mean
+    live cycles of that candidate's statistics group.  Without them it
+    builds the network's plan and replays one lane under ``power`` -- the
+    same compiled path the sweep uses, replacing the old closed-form
+    MACs x cycles-per-MAC estimate (``CYCLES_PER_MAC`` remains exported
+    for coarse pre-sweep screens)."""
+    if stats is not None:
+        if group is None:
+            raise ValueError("estimate_energy(stats=...) needs group=")
+        live = float(np.asarray(stats.mean("live_cycles"))[group])
+        return live * JOULES_PER_CYCLE
+    from ..core.fleetsim import build_plan, replay_plans
+    x = np.zeros(net.input_shape, np.float32)
+    plan = build_plan(net, x, runtime, power)
+    return replay_plans([plan])[0].live_cycles * JOULES_PER_CYCLE
 
 
 def sweep(net: SimNet, data: Dataset, app: AppModel, positive: int = 0,
           runtime: str = "tails", epochs: int = 4, max_configs: int = 36,
-          seed: int = 0) -> list[ConfigResult]:
-    """Evaluate a grid of per-layer compression configs (with retraining)."""
+          seed: int = 0, power: str = "1mF", n_devices: int = 32
+          ) -> list[ConfigResult]:
+    """Evaluate a grid of per-layer compression configs (with retraining).
+
+    Every candidate's plan is built once into a :class:`PlanSet` and the
+    whole grid is priced by ONE ``fleet_sweep`` replay (Plan IR v2): each
+    candidate gets ``n_devices`` jittered lanes on ``power``, and its
+    energy/completion/latency come from its per-plan statistics group --
+    no per-candidate re-extraction or recompile."""
+    from ..core.fleetsim import PlanSet, build_plan, fleet_sweep
     from .train_small import class_rates, train
 
     grids = [layer_choices(l) for l in net.layers]
@@ -143,26 +171,44 @@ def sweep(net: SimNet, data: Dataset, app: AppModel, positive: int = 0,
     rng.shuffle(combos)
     combos = [base] + combos[:max_configs - 1]
 
-    results = []
+    x = np.asarray(data.x_test[0], np.float32)
+    results, plans = [], []
     for choices in combos:
         cnet = apply_config(net, choices)
         trained, acc = train(cnet, data, epochs=epochs, seed=seed)
         tp, tn = class_rates(trained, data, positive)
         pb = trained.params_bytes()
-        e = estimate_energy(trained, runtime)
         feasible = pb <= DEVICE_WEIGHT_BYTES
-        r = ConfigResult(choices, trained.total_params(), pb,
-                         trained.total_macs(), acc, tp, tn, e, feasible,
-                         net=trained)
-        m = AppModel(app.p, app.e_sense, app.e_comm, e)
-        r.impj = m.inference(tp, tn) if feasible else 0.0
-        results.append(r)
+        results.append(ConfigResult(
+            choices, trained.total_params(), pb, trained.total_macs(),
+            acc, tp, tn, 0.0, feasible, net=trained))
+        plans.append(build_plan(trained, x, runtime, power))
+
+    ps = PlanSet.from_plans(
+        plans, labels=tuple(f"cfg{i}" for i in range(len(plans))))
+    stats = fleet_sweep(plan=ps, n_devices=n_devices, seed=seed,
+                        reduce="stats")
+    completion = np.asarray(stats.completion_rate)
+    live = np.asarray(stats.mean("live_cycles"))
+    total_s = np.asarray(stats.mean("total_s"))
+    for g, r in enumerate(results):
+        r.completion = float(completion[g])
+        r.latency_s = float(total_s[g])
+        r.e_infer_j = (float(live[g]) * JOULES_PER_CYCLE
+                       if r.completion > 0 else float("inf"))
+        m = AppModel(app.p, app.e_sense, app.e_comm, r.e_infer_j)
+        r.impj = (m.inference(r.tp, r.tn)
+                  if r.feasible and r.completion > 0 else 0.0)
     return results
 
 
 def pareto_frontier(results) -> list[ConfigResult]:
-    """Non-dominated set over (accuracy up, energy down)."""
-    pts = sorted(results, key=lambda r: r.e_infer_j)
+    """Non-dominated set over (accuracy up, energy down); candidates that
+    never complete under intermittent power (completion 0) are off the
+    frontier by definition."""
+    pts = sorted((r for r in results
+                  if getattr(r, "completion", 1.0) > 0),
+                 key=lambda r: r.e_infer_j)
     out = []
     best = -1.0
     for r in pts:

@@ -12,10 +12,11 @@ from .energy import (CostTable, Device, DeviceStats, LEA_COSTS,
                      NonTermination, OP_CLASSES, PowerFailure, PowerSystem,
                      SOFTWARE_COSTS, class_cycle_vector, custom_power_system,
                      make_power_system)
-from .fleetsim import (CapacitorSweepResult, FleetPlan, FleetSweepResult,
-                       REPLAY_POLICIES, REPLAY_REDUCES, ReplayOut,
-                       build_plan, capacitor_sweep, fleet_evaluate,
-                       fleet_sweep, replay_plans)
+from .fleetsim import (CapacitorSweepResult, DesignSweepResult, FleetPlan,
+                       FleetSweepResult, PlanSet, REPLAY_POLICIES,
+                       REPLAY_REDUCES, ReplayOut, build_plan,
+                       capacitor_sweep, fleet_evaluate, fleet_sweep,
+                       replay_plans)
 from .fleetstats import (FleetStats, STAT_CHANNELS, default_stat_edges,
                          stats_from_outputs)
 from .imp import AppModel, WILDLIFE, accuracy_sweep
@@ -25,10 +26,11 @@ from .nvstore import NVStore
 
 __all__ = [
     "AppModel", "CapacitorSweepResult", "Conv2D", "CostTable", "DenseFC",
-    "Device", "DeviceStats", "FleetPlan", "FleetStats",
-    "FleetSweepResult", "LEA_COSTS", "LoopOrderedBuffer", "MaxPool2D",
-    "NVStore", "NonTermination", "OP_CLASSES", "POWER_SYSTEMS",
-    "PowerFailure", "PowerSystem", "REPLAY_POLICIES", "REPLAY_REDUCES",
+    "DesignSweepResult", "Device", "DeviceStats", "FleetPlan",
+    "FleetStats", "FleetSweepResult", "LEA_COSTS", "LoopOrderedBuffer",
+    "MaxPool2D", "NVStore", "NonTermination", "OP_CLASSES",
+    "POWER_SYSTEMS", "PlanSet", "PowerFailure", "PowerSystem",
+    "REPLAY_POLICIES", "REPLAY_REDUCES",
     "ReplayOut", "ResumableLoop", "RunResult", "STAT_CHANNELS",
     "STRATEGIES", "SOFTWARE_COSTS", "SimNet", "SparseFC", "SparseUndoLog",
     "WILDLIFE", "accuracy_sweep", "build_plan", "capacitor_sweep",

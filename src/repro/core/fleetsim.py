@@ -84,6 +84,31 @@ run-time decisions are taken per device lane **inside** ``_scan_step``:
    the energy-adaptive trade-off: with deterministic charges batching is a
    strict win, with jitter it pays for every mis-predicted commit.
 
+Plan IR v2: the stacked candidate-plan axis (``PlanSet``)
+---------------------------------------------------------
+The parameterized IR above carries exactly one candidate axis inside a
+row (TAILS tile tables).  Plan IR v2 generalizes it: a :class:`PlanSet`
+stacks P whole candidate plans -- different GENESIS compression configs,
+Tile-k task sizes, strategies, restamped capacitors -- into one
+``(P, S, ...)`` row-table batch (per-plan row counts bucket-padded to
+shared powers of two by the same machinery that buckets single plans)
+plus a per-plan header (strategy, real row count, capacity, recharge,
+nominal cycles).  ``fleet_sweep(plan=planset)`` threads the plan axis as
+a broadcast operand: lanes are plan-major (``lane = p * n_devices + d``),
+each lane carries an integer ``plan_idx``, and the fused event stream
+reads lane rows from a packed ``(P, S, F)`` tensor with one two-index
+dynamic slice per event (``kernels/charge_replay.py``), so the entire
+(networks x tile-k x tiles x devices x capacitors) design space replays
+under ONE compiled scan -- no per-candidate re-extraction or recompile.
+Per-plan results come back as :class:`~repro.core.fleetstats.FleetStats`
+groups (``reduce="stats"``, mesh all-reduce and ``lane_chunk`` streaming
+included) or as a materialized :class:`DesignSweepResult`, and each
+plan's lanes draw bit-identical sampler inputs to an individual
+``fleet_sweep`` of that plan, so the stacked sweep is bit-exact against
+replaying every candidate separately (pinned by
+``tests/test_planset.py``).  ``compress/genesis.py`` prices its whole
+accuracy-energy frontier through one such sweep.
+
 Plan rows and the paper's Sec. 6 commit protocol
 ------------------------------------------------
 Each row models one committed unit of work as ``(kind, n, iter_cycles,
@@ -712,7 +737,8 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, window, alpha,
 def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum,
               nominal_from, s_real, theta, window, alpha, adaptive,
               parametric, stochastic, backend, chunk, enable_fast,
-              has_burn):
+              has_burn, plan_idx=None):
+    import jax
     import jax.numpy as jnp
     from jax import lax
 
@@ -726,7 +752,16 @@ def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum,
                             window, alpha, adaptive=adaptive,
                             parametric=parametric,
                             enable_fast=enable_fast, has_burn=has_burn,
-                            chunk=chunk)
+                            chunk=chunk, plan_idx=plan_idx)
+
+    # Plan IR v2 on the legacy paths: gather this lane's candidate from
+    # the stacked (P, S, ...) row tables.  Under vmap this materializes a
+    # per-lane copy of the rows, so the plan axis only rides the legacy
+    # scan for small differential-oracle configs; real design sweeps are
+    # stochastic and take the fused event stream above, which indexes the
+    # packed (P, S, F) tensor in place.
+    if plan_idx is not None:
+        rows = jax.tree_util.tree_map(lambda a: a[plan_idx], rows)
 
     # NB: the wasted channel is zeros_like(rem0) (not a fresh constant) so
     # its shard_map replication matches the other carries even on the
@@ -756,13 +791,18 @@ def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum,
 
 
 @lru_cache(maxsize=None)
-def _vmap_replay(shared_rows: bool, adaptive: bool, parametric: bool,
+def _vmap_replay(shared_rows, adaptive: bool, parametric: bool,
                  stochastic: bool, backend: str, chunk: int,
                  enable_fast: bool, has_burn: bool):
     """The vmapped replay.  ``shared_rows=False``: rows, caps, rem0, traces
     all batched on axis 0 (one lane per plan -- the Fig. 9 matrix).
     ``shared_rows=True``: one plan broadcast across every device lane (fleet
-    sweeps; avoids materializing D copies of the plan).  ``adaptive``/
+    sweeps; avoids materializing D copies of the plan).
+    ``shared_rows="plan"`` is Plan IR v2: a stacked (P, S, ...) candidate
+    batch broadcast across every lane, plus a 12th per-lane operand --
+    the lane's integer ``plan_idx`` into the candidate axis -- so one
+    compiled replay prices a whole design space (``PlanSet``).
+    ``adaptive``/
     ``parametric``/``stochastic``/``backend`` are static so the default
     configuration compiles to exactly the legacy closed form; ``theta``,
     ``window`` (the cross-charge commit window) and ``alpha`` (the EWMA
@@ -771,6 +811,15 @@ def _vmap_replay(shared_rows: bool, adaptive: bool, parametric: bool,
     ``s_real`` (real row count) are per-lane traced operands of the fused
     event stream; the legacy paths ignore them."""
     import jax
+    if shared_rows == "plan":
+        return jax.vmap(
+            lambda rows, cap, rem0, tc, ts, ccum, nf, sr, theta, window,
+            alpha, pidx:
+            _scan_one(rows, cap, rem0, tc, ts, ccum, nf, sr, theta,
+                      window, alpha, adaptive, parametric, stochastic,
+                      backend, chunk, enable_fast, has_burn,
+                      plan_idx=pidx),
+            in_axes=(None, 0, 0, 0, 0, 0, 0, 0, None, None, None, 0))
     in_axes = ((None if shared_rows else 0), 0, 0, 0, 0, 0, 0, 0, None,
                None, None)
     return jax.vmap(
@@ -783,7 +832,7 @@ def _vmap_replay(shared_rows: bool, adaptive: bool, parametric: bool,
 
 
 @lru_cache(maxsize=None)
-def _jit_replay(shared_rows: bool, adaptive: bool, parametric: bool,
+def _jit_replay(shared_rows, adaptive: bool, parametric: bool,
                 stochastic: bool, backend: str = "xla",
                 chunk: int = 128, enable_fast: bool = False,
                 has_burn: bool = False):
@@ -794,13 +843,15 @@ def _jit_replay(shared_rows: bool, adaptive: bool, parametric: bool,
 
 
 @lru_cache(maxsize=None)
-def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
+def _jit_sharded_replay(mesh, shared_rows, adaptive: bool,
                         parametric: bool, stochastic: bool,
                         backend: str = "xla", chunk: int = 128,
                         enable_fast: bool = False,
                         has_burn: bool = False):
     """The replay wrapped in ``shard_map`` over the fleet's device axis:
-    per-lane inputs/outputs split across the mesh, plan rows replicated.
+    per-lane inputs/outputs split across the mesh, plan rows replicated
+    (the whole stacked candidate batch under ``shared_rows="plan"``, with
+    the per-lane ``plan_idx`` sharded like every other lane input).
     Lanes are independent, so no collectives are needed -- the mesh purely
     spreads lane memory and compute across chips."""
     import jax
@@ -811,16 +862,17 @@ def _jit_sharded_replay(mesh, shared_rows: bool, adaptive: bool,
     fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
                       backend, chunk, enable_fast, has_burn)
     lane = P("devices")
-    rows_spec = P() if shared_rows else lane
+    rows_spec = lane if shared_rows is False else P()
+    in_specs = (rows_spec, lane, lane, lane, lane, lane, lane, lane,
+                P(), P(), P())
+    if shared_rows == "plan":
+        in_specs += (lane,)
     return jax.jit(compat_shard_map(
-        fn, mesh,
-        in_specs=(rows_spec, lane, lane, lane, lane, lane, lane, lane,
-                  P(), P(), P()),
-        out_specs=lane))
+        fn, mesh, in_specs=in_specs, out_specs=lane))
 
 
 @lru_cache(maxsize=None)
-def _jit_replay_stats(shared_rows: bool, adaptive: bool, parametric: bool,
+def _jit_replay_stats(shared_rows, adaptive: bool, parametric: bool,
                       stochastic: bool, backend: str, chunk: int,
                       enable_fast: bool, has_burn: bool, n_groups: int,
                       donate: bool):
@@ -828,13 +880,26 @@ def _jit_replay_stats(shared_rows: bool, adaptive: bool, parametric: bool,
     jit: per-lane outputs are folded to ``(psums, pmins, pmaxs)`` partials
     (``core.fleetstats``) before they ever leave the compiled call, and
     ``donate=True`` additionally donates the per-lane input buffers so a
-    chunked sweep's peak memory is one chunk of lanes, not the fleet."""
+    chunked sweep's peak memory is one chunk of lanes, not the fleet.
+    Under ``shared_rows="plan"`` the per-lane ``plan_idx`` operand rides
+    between ``alpha`` and the stats operands, and one statistics group per
+    candidate plan gives the design sweep its per-plan summaries."""
     import jax
 
     from .fleetstats import reduce_lane_outputs
 
     fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
                       backend, chunk, enable_fast, has_burn)
+
+    if shared_rows == "plan":
+        def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
+                alpha, pidx, gid, valid, edges):
+            out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta,
+                     window, alpha, pidx)
+            return reduce_lane_outputs(out, gid, valid, edges, n_groups)
+
+        dn = (1, 2, 3, 4, 5, 6, 7, 11, 12, 13) if donate else ()
+        return jax.jit(run, donate_argnums=dn)
 
     def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window, alpha,
             gid, valid, edges):
@@ -847,7 +912,7 @@ def _jit_replay_stats(shared_rows: bool, adaptive: bool, parametric: bool,
 
 
 @lru_cache(maxsize=None)
-def _jit_sharded_replay_stats(mesh, shared_rows: bool, adaptive: bool,
+def _jit_sharded_replay_stats(mesh, shared_rows, adaptive: bool,
                               parametric: bool, stochastic: bool,
                               backend: str, chunk: int, enable_fast: bool,
                               has_burn: bool, n_groups: int):
@@ -867,20 +932,30 @@ def _jit_sharded_replay_stats(mesh, shared_rows: bool, adaptive: bool,
     fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
                       backend, chunk, enable_fast, has_burn)
 
-    def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window, alpha,
-            gid, valid, edges):
-        out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
-                 alpha)
-        parts = reduce_lane_outputs(out, gid, valid, edges, n_groups)
-        return fleet_all_reduce(parts, "devices")
-
     lane = P("devices")
-    rows_spec = P() if shared_rows else lane
+    rows_spec = lane if shared_rows is False else P()
+    if shared_rows == "plan":
+        def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
+                alpha, pidx, gid, valid, edges):
+            out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta,
+                     window, alpha, pidx)
+            parts = reduce_lane_outputs(out, gid, valid, edges, n_groups)
+            return fleet_all_reduce(parts, "devices")
+
+        in_specs = (rows_spec, lane, lane, lane, lane, lane, lane, lane,
+                    P(), P(), P(), lane, lane, lane, P())
+    else:
+        def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
+                alpha, gid, valid, edges):
+            out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta,
+                     window, alpha)
+            parts = reduce_lane_outputs(out, gid, valid, edges, n_groups)
+            return fleet_all_reduce(parts, "devices")
+
+        in_specs = (rows_spec, lane, lane, lane, lane, lane, lane, lane,
+                    P(), P(), P(), lane, lane, P())
     return jax.jit(compat_shard_map(
-        run, mesh,
-        in_specs=(rows_spec, lane, lane, lane, lane, lane, lane, lane,
-                  P(), P(), P(), lane, lane, P()),
-        out_specs=P()))
+        run, mesh, in_specs=in_specs, out_specs=P()))
 
 
 @lru_cache(maxsize=None)
@@ -941,17 +1016,24 @@ def _plan_rows(plan: FleetPlan) -> dict:
     return {k: getattr(plan, k) for k in fields}
 
 
-def _bucket_rows(rows: dict, lane_axis: bool) -> dict:
+def _bucket_target(s: int, floor: int = 64) -> int:
+    """The power-of-two row-bucket a plan of ``s`` rows is padded to."""
+    return max(floor, 1 << max(s - 1, 0).bit_length())
+
+
+def _bucket_rows(rows: dict, lane_axis) -> dict:
     """Pad the plan's row axis to a power-of-two bucket (>= 64) and the
     charge-segment axis to a power-of-two bucket (>= 4), so plans of
     similar size share one compiled replay (SONIC and TAILS land in the
     same bucket, halving the fleet bench's compile bill).  Padding rows
     are all-zero WORK rows -- both replay paths complete them for free
     without touching any output channel -- and the fused path's ``s_real``
-    cursor bound never walks them anyway."""
-    ax = 1 if lane_axis else 0
+    cursor bound never walks them anyway.  ``lane_axis`` is ``False`` for
+    a single shared plan (row axis 0), and ``True`` or ``"plan"`` for a
+    leading batch axis (per-plan lanes / the stacked candidate axis)."""
+    ax = 0 if lane_axis is False else 1
     s = rows["kind"].shape[ax]
-    target = max(64, 1 << max(s - 1, 0).bit_length())
+    target = _bucket_target(s)
     out = {}
     for k, v in rows.items():
         v = np.asarray(v)
@@ -965,7 +1047,7 @@ def _bucket_rows(rows: dict, lane_axis: bool) -> dict:
 
 
 def _reboot_upper_bound(rows: dict, caps: np.ndarray,
-                        lane_axis: bool) -> np.ndarray:
+                        lane_axis) -> np.ndarray:
     """Cheap per-lane estimate of how many reboots a replay can plausibly
     take: nominal plan cycles over the nominal charge (with a 4x safety
     margin for jitter, torn-prefix re-execution and adaptive drains),
@@ -974,7 +1056,7 @@ def _reboot_upper_bound(rows: dict, caps: np.ndarray,
     *reachable* (``reboots >= nominal_from``); the flag is a pure
     compile-size knob -- an under-estimate never changes results, the
     charge-wise step just walks the nominal tail one charge at a time."""
-    ax = 1 if lane_axis else 0
+    ax = 0 if lane_axis is False else 1
     work = np.sum(rows["entry_cycles"]
                   + rows["n"] * (rows["iter_cycles"]
                                  + rows["commit_cycles"]), axis=ax)
@@ -984,23 +1066,96 @@ def _reboot_upper_bound(rows: dict, caps: np.ndarray,
             axis=ax)
     burns = (np.sum(rows["kind"] == KIND_BURN, axis=ax)
              + _K_TILES * np.sum(rows["kind"] == KIND_CALIB, axis=ax))
+    if lane_axis == "plan":
+        # Stacked candidate axis: (P,) per-plan work against (n_lanes,)
+        # caps.  The worst-case plan bounds every lane -- the flag is a
+        # compile-size knob, so over-estimating merely keeps the fast
+        # path compiled in.
+        work = np.max(work)
+        burns = np.max(burns)
     with np.errstate(invalid="ignore"):
         est = np.where(np.isinf(caps), 0.0, 4.0 * work / caps)
     return est + burns
 
 
+@dataclass
+class PlanSet:
+    """Plan IR v2: a stacked batch of candidate plans -- the design axis.
+
+    Where :class:`FleetPlan` is one (network, strategy, power) cell, a
+    ``PlanSet`` is P of them stacked into one ``(P, S, ...)`` row-table
+    batch (per-plan row counts bucket-padded to shared powers of two by
+    the same machinery that buckets single plans) plus a per-plan header:
+    strategy, real row count, capacity, recharge, nominal cycles.
+    ``fleet_sweep(plan=planset)`` replays the whole set -- GENESIS
+    compression candidates, Tile-k task sizes, TAILS tiles, restamped
+    capacitors -- under ONE compiled scan: lanes are plan-major
+    (``lane = p * n_devices + d``), each lane carries its candidate index
+    into the packed ``(P, S, F)`` row tensor, and per-plan statistics
+    come back as :class:`~repro.core.fleetstats.FleetStats` groups or a
+    :class:`DesignSweepResult`.
+
+    The unchunked design sweep draws each plan's lanes with the same
+    legacy samplers and seeds an individual ``fleet_sweep(plan=plans[p])``
+    call uses, and every jitter multiplier is independent of the plan's
+    nominal capacity/recharge, so the stacked sweep's per-plan outputs
+    are bit-exact against replaying each plan separately
+    (``tests/test_planset.py`` pins this)."""
+    plans: tuple
+    labels: tuple
+    rows: dict                  # (P, S, ...) bucket-padded row tables
+    n_rows: np.ndarray          # (P,) int32 real (pre-padding) row counts
+    capacity: np.ndarray        # (P,) float64 cycles per full charge
+    recharge_s: np.ndarray      # (P,) float64 mean dead time per reboot
+    total_cycles: np.ndarray    # (P,) float64 nominal plan cycles
+    strategies: tuple
+
+    def __len__(self) -> int:
+        return len(self.plans)
+
+    @property
+    def parametric(self) -> bool:
+        return "tile_sel_cost" in self.rows
+
+    @classmethod
+    def from_plans(cls, plans, labels=None) -> "PlanSet":
+        plans = tuple(plans)
+        if not plans:
+            raise ValueError("PlanSet needs at least one plan")
+        if labels is None:
+            labels = tuple(f"{p.network}/{p.strategy}/{p.power}"
+                           for p in plans)
+        labels = tuple(labels)
+        if len(labels) != len(plans):
+            raise ValueError(f"got {len(labels)} labels for "
+                             f"{len(plans)} plans")
+        rows = _bucket_rows(_pad_stack(list(plans)), lane_axis="plan")
+        return cls(
+            plans=plans, labels=labels, rows=rows,
+            n_rows=np.asarray([len(p) for p in plans], np.int32),
+            capacity=np.asarray([p.capacity for p in plans], np.float64),
+            recharge_s=np.asarray([p.recharge_s for p in plans],
+                                  np.float64),
+            total_cycles=np.asarray([p.total_cycles for p in plans],
+                                    np.float64),
+            strategies=tuple(p.strategy for p in plans))
+
+
 def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
-                shared_rows: bool, trace_cum: np.ndarray | None = None,
+                shared_rows, trace_cum: np.ndarray | None = None,
                 tail_s: np.ndarray | None = None, policy: str = "fixed",
                 theta: float = 0.5, batch_rows: int = 1,
                 belief_alpha: float = 0.0,
                 charge_cum: np.ndarray | None = None,
                 mesh=None, backend: str = "auto",
-                n_rows=None, chunk: int = 128, reduce: str = "none",
+                n_rows=None, chunk: int | None = None,
+                reduce: str = "none",
                 group_id: np.ndarray | None = None,
                 valid: np.ndarray | None = None,
                 edges: dict | None = None, n_groups: int = 1,
-                donate: bool = False) -> dict | tuple:
+                donate: bool = False,
+                plan_idx: np.ndarray | None = None,
+                config_out: dict | None = None) -> dict | tuple:
     from repro.runtime.failures import (charge_trace_nominal_from,
                                         pad_charge_trace_columns)
 
@@ -1022,6 +1177,14 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
         raise ValueError("reduce='stats' needs histogram edges")
     if backend == "auto":
         backend = "xla"
+    plan_mode = shared_rows == "plan"
+    if plan_mode and plan_idx is None:
+        raise ValueError("shared_rows='plan' needs a per-lane plan_idx")
+    if plan_mode and backend == "pallas":
+        raise ValueError(
+            "backend='pallas' does not support the stacked candidate-plan "
+            "axis (the lane kernel's BlockSpecs cannot gather a per-lane "
+            "plan index); use backend='xla' (or 'auto')")
     n_lanes = caps.shape[0]
     parametric = "tile_sel_cost" in rows
     adaptive = policy == "adaptive"
@@ -1042,7 +1205,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                         np.floor(np.asarray(rem0, np.float64)))
     # Per-lane real row count: the fused path's cursor bound (padding rows
     # past it are never walked).
-    s_axis = 1 if not shared_rows else 0
+    s_axis = 0 if shared_rows is True else 1
+    lane_axis = "plan" if plan_mode else not (shared_rows is True)
     s_real = np.broadcast_to(
         np.asarray(n_rows if n_rows is not None
                    else rows["kind"].shape[s_axis], np.int32), (n_lanes,))
@@ -1052,15 +1216,33 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
         # Shape-bucket the plan so similarly-sized plans (and different
         # trace lengths) share one compiled fused replay.
         has_burn = bool(np.any(rows["kind"] == KIND_BURN))
-        rows = _bucket_rows(rows, lane_axis=not shared_rows)
+        rows = _bucket_rows(rows, lane_axis=lane_axis)
         if charge_cum is not None:
             charge_cum = pad_charge_trace_columns(charge_cum, caps)
             nominal_from = charge_trace_nominal_from(charge_cum, caps)
             enable_fast = bool(np.any(
-                _reboot_upper_bound(rows, caps, not shared_rows)
+                _reboot_upper_bound(rows, caps, lane_axis)
                 >= nominal_from))
         else:
             enable_fast = True
+    if chunk is None:
+        # Plan-shape-derived event-chunk default: size the inner scan to
+        # the (bucketed) row axis so short plans do not pay a 128-event
+        # trip per charge and the tile-8 ~30k-events/lane case amortizes
+        # its outer while-loop (kernels/charge_replay.py).
+        from repro.kernels.charge_replay import (EVENT_CHUNK,
+                                                 default_event_chunk)
+        chunk = (default_event_chunk(rows["kind"].shape[s_axis])
+                 if stochastic else EVENT_CHUNK)
+    if config_out is not None:
+        # The static compile key of the jit this call dispatches to, in
+        # _jit_replay's parameter order -- lets callers pin "the whole
+        # sweep was one compile" via _jit_replay(*key)._cache_size().
+        config_out.update(
+            shared_rows=shared_rows, adaptive=adaptive,
+            parametric=parametric, stochastic=stochastic,
+            backend="xla" if backend == "pallas" else backend,
+            chunk=chunk, enable_fast=enable_fast, has_burn=has_burn)
     if trace_cum is None:
         trace_cum = np.zeros((n_lanes, 1), np.float64)
     if charge_cum is None:
@@ -1083,6 +1265,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 jnp.asarray(float(theta), jnp.float64),
                 jnp.asarray(float(batch_rows), jnp.float64),
                 jnp.asarray(float(belief_alpha), jnp.float64)]
+        if plan_mode:
+            args.append(jnp.asarray(np.asarray(plan_idx, np.int32)))
         stats = reduce == "stats"
         if stats:
             gid = jnp.asarray(
@@ -1136,7 +1320,11 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 args[i] = jnp.concatenate(
                     [args[i], jnp.full((pad,) + args[i].shape[1:], fill,
                                        args[i].dtype)], axis=0)
-            if not shared_rows:
+            if plan_mode:
+                # pad lanes point at candidate 0; s_real=0 skips them
+                args[11] = jnp.concatenate(
+                    [args[11], jnp.zeros(pad, args[11].dtype)])
+            if shared_rows is False:
                 args[0] = {k: jnp.concatenate(
                     [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
                     for k, v in args[0].items()}
@@ -1166,11 +1354,13 @@ def _lane_io_bytes(n_lanes: int, *arrays) -> int:
             + n_lanes * (8 * (6 + _N_CLASSES) + 1))
 
 
-def _chunked_replay(plan_rows: dict, n_rows: int, n_lanes: int,
+def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
                     lane_chunk: int, make_inputs, group_id_of,
                     policy: str, theta: float, batch_rows: int,
                     belief_alpha: float, mesh, backend: str, reduce: str,
-                    edges: dict | None, n_groups: int):
+                    edges: dict | None, n_groups: int,
+                    event_chunk: int | None = None,
+                    plan_idx_of=None, config_out: dict | None = None):
     """Drive one shared-rows replay over the device axis in fixed-size
     lane chunks: per-chunk inputs are generated on demand by
     ``make_inputs(lane_lo, m)`` (chunk-invariant counter-based samplers,
@@ -1181,9 +1371,13 @@ def _chunked_replay(plan_rows: dict, n_rows: int, n_lanes: int,
     into one :class:`FleetStats` -- peak lane memory is the chunk, not
     the fleet.  Under ``reduce="none"`` per-chunk outputs are
     concatenated (bit-identical to the unchunked streamed call; used as
-    the differential oracle, not for scale)."""
+    the differential oracle, not for scale).  With ``plan_idx_of`` the
+    chunks run in Plan IR v2 mode: ``plan_rows`` is the stacked
+    (P, S, ...) batch, ``n_rows`` the per-plan (P,) row counts, and
+    ``plan_idx_of(lane_lo, m)`` each chunk's per-lane candidate index."""
     if lane_chunk < 1:
         raise ValueError(f"lane_chunk must be >= 1, got {lane_chunk}")
+    plan_mode = plan_idx_of is not None
     stats = None
     outs: list[dict] = []
     peak = 0
@@ -1192,6 +1386,10 @@ def _chunked_replay(plan_rows: dict, n_rows: int, n_lanes: int,
         pad = lane_chunk - m if n_lanes > lane_chunk else 0
         caps, rem0, tail, cum, ccum = make_inputs(lo, m)
         gid = np.asarray(group_id_of(lo, m), np.int32)
+        pidx = nr = None
+        if plan_mode:
+            pidx = np.asarray(plan_idx_of(lo, m), np.int32)
+            nr = np.asarray(n_rows, np.int32)[pidx]
         if pad:
             # inert lanes: continuous power completes every row in one
             # pass; valid=False masks them out of every statistic.
@@ -1205,16 +1403,23 @@ def _chunked_replay(plan_rows: dict, n_rows: int, n_lanes: int,
                 ccum = np.concatenate(
                     [ccum, np.zeros((pad, ccum.shape[1]))])
             gid = np.concatenate([gid, np.zeros(pad, np.int32)])
+            if plan_mode:
+                pidx = np.concatenate([pidx, np.zeros(pad, np.int32)])
+                nr = np.concatenate([nr, np.zeros(pad, np.int32)])
         valid = np.arange(m + pad) < m
         peak = max(peak, _lane_io_bytes(m + pad, caps, rem0, tail, cum,
-                                        ccum, gid, valid))
-        res = _run_replay(plan_rows, caps, rem0, shared_rows=True,
+                                        ccum, gid, valid, pidx))
+        res = _run_replay(plan_rows, caps, rem0,
+                          shared_rows="plan" if plan_mode else True,
                           trace_cum=cum, tail_s=tail, policy=policy,
                           theta=theta, batch_rows=batch_rows,
                           belief_alpha=belief_alpha, charge_cum=ccum,
-                          mesh=mesh, backend=backend, n_rows=n_rows,
-                          reduce=reduce, group_id=gid, valid=valid,
-                          edges=edges, n_groups=n_groups, donate=True)
+                          mesh=mesh, backend=backend,
+                          n_rows=nr if plan_mode else n_rows,
+                          chunk=event_chunk, reduce=reduce,
+                          group_id=gid, valid=valid, edges=edges,
+                          n_groups=n_groups, donate=True,
+                          plan_idx=pidx, config_out=config_out)
         if reduce == "stats":
             part = FleetStats.from_parts(res, edges)
             stats = part if stats is None else stats.merge(part)
@@ -1247,7 +1452,11 @@ def replay_plans(plans: list[FleetPlan],
                  charge_traces: np.ndarray | None = None,
                  backend: str = "auto", reduce: str = "none",
                  stats_bins: int = 64,
-                 stats_edges: dict | None = None
+                 stats_edges: dict | None = None, seed: int | None = None,
+                 recharge_cv: float = 0.25, trace_reboots: int = 0,
+                 charge_cv: float = 0.0, charge_bias_cv: float = 0.0,
+                 charge_reboots: int = 0, lane_lo: int = 0,
+                 event_chunk: int | None = None
                  ) -> list[ReplayOut] | FleetStats:
     """Replay many plans in one jitted vmap'd call (one lane per plan).
 
@@ -1280,17 +1489,50 @@ def replay_plans(plans: list[FleetPlan],
     inside the jit (``REPLAY_REDUCES``) instead of materializing
     :class:`ReplayOut` rows; ``stats_bins``/``stats_edges`` size its
     fixed histogram bins (defaults derived from the plans' nominal
-    bounds)."""
-    from repro.runtime.failures import (charge_trace_cumulative,
+    bounds).
+
+    ``seed=`` switches the explicit-trace path onto the Philox
+    counter-based ``*_stream`` samplers (``runtime.failures``), closing
+    the chunk-invariance gap that previously covered only fleet/capacitor
+    sweeps: lane ``lane_lo + i`` draws the same initial charge fraction,
+    harvest multiplier, recharge trace (``trace_reboots``) and capacity
+    trace (``charge_cv``/``charge_bias_cv``/``charge_reboots``) whether
+    the plan batch is replayed whole or split into sub-batches at
+    arbitrary ``lane_lo`` offsets.  Explicitly-passed ``init_frac``/
+    ``recharge_traces``/``charge_traces`` override the corresponding
+    drawn inputs.  ``event_chunk`` overrides the plan-shape-derived
+    event-stream chunk length (``kernels.charge_replay``)."""
+    from repro.runtime.failures import (charge_capacity_jitter_stream,
+                                        charge_trace_cumulative,
+                                        harvest_jitter_stream,
+                                        initial_charge_fraction_stream,
+                                        reboot_recharge_times_stream,
                                         recharge_trace_cumulative)
 
     if reduce not in REPLAY_REDUCES:
         raise ValueError(f"unknown reduce mode {reduce!r}; "
                          f"expected one of {REPLAY_REDUCES}")
     caps = np.asarray([p.capacity for p in plans], np.float64)
+    tail = np.asarray([p.recharge_s for p in plans], np.float64)
+    if seed is not None:
+        n = len(plans)
+        if init_frac is None:
+            init_frac = initial_charge_fraction_stream(n, seed=seed,
+                                                       lane_lo=lane_lo)
+        jm = harvest_jitter_stream(n, seed=seed, cv=recharge_cv,
+                                   lane_lo=lane_lo)
+        if trace_reboots > 0 and recharge_traces is None:
+            recharge_traces = reboot_recharge_times_stream(
+                n, trace_reboots, tail, seed=seed,
+                lane_lo=lane_lo) * jm[:, None]
+        if (charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0) \
+                and charge_traces is None:
+            charge_traces = charge_capacity_jitter_stream(
+                n, charge_reboots or 256, caps, seed=seed, cv=charge_cv,
+                bias_cv=charge_bias_cv, lane_lo=lane_lo)
+        tail = tail * jm
     rem0 = caps if init_frac is None else \
         np.where(np.isinf(caps), np.inf, caps * np.asarray(init_frac))
-    tail = np.asarray([p.recharge_s for p in plans], np.float64)
     cum = ccum = None
     if recharge_traces is not None:
         recharge_traces = np.asarray(recharge_traces)
@@ -1323,7 +1565,8 @@ def replay_plans(plans: list[FleetPlan],
                             backend=backend,
                             n_rows=np.asarray([len(p) for p in plans],
                                               np.int32),
-                            reduce="stats", edges=edges)
+                            chunk=event_chunk, reduce="stats",
+                            edges=edges)
         stats = FleetStats.from_parts(parts, edges)
         stats.wall_s = time.perf_counter() - t0
         stats.peak_lane_bytes = _lane_io_bytes(len(plans), caps, rem0,
@@ -1335,7 +1578,8 @@ def replay_plans(plans: list[FleetPlan],
                       belief_alpha=belief_alpha, charge_cum=ccum,
                       backend=backend,
                       n_rows=np.asarray([len(p) for p in plans],
-                                        np.int32))
+                                        np.int32),
+                      chunk=event_chunk)
     results = []
     for i, p in enumerate(plans):
         by_class = {op: float(v) for op, v in
@@ -1456,10 +1700,201 @@ class FleetSweepResult:
         }
 
 
-def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
+@dataclass
+class DesignSweepResult:
+    """Per-candidate, per-device outcomes of one PlanSet design sweep."""
+    labels: tuple
+    strategies: tuple
+    capacities: np.ndarray       # (P,) cycles per full charge
+    n_devices: int               # devices per candidate plan
+    completed: np.ndarray        # (P, D) bool
+    live_s: np.ndarray           # (P, D)
+    dead_s: np.ndarray           # (P, D)
+    reboots: np.ndarray          # (P, D)
+    energy_j: np.ndarray         # (P, D)
+    wasted_cycles: np.ndarray    # (P, D)
+    belief_cycles: np.ndarray    # (P, D)
+    wall_s: float
+    replay_config: tuple = ()    # _jit_replay static key of the one jit
+    policy: str = "fixed"
+
+    @property
+    def total_s(self) -> np.ndarray:
+        return self.live_s + self.dead_s
+
+    @property
+    def completion_rate(self) -> np.ndarray:
+        return self.completed.mean(axis=1)
+
+    def summary(self) -> list[dict]:
+        """One dict per candidate: completion, mean energy over completed
+        lanes, p95 wall-clock latency -- the per-plan numbers GENESIS's
+        frontier selection consumes."""
+        rows = []
+        for p, label in enumerate(self.labels):
+            done = self.completed[p]
+            rows.append({
+                "label": label,
+                "strategy": self.strategies[p],
+                "capacity": float(self.capacities[p]),
+                "completion": float(done.mean()),
+                "mean_energy_j": float(self.energy_j[p][done].mean())
+                if done.any() else float("inf"),
+                "p95_total_s": float(np.percentile(self.total_s[p][done],
+                                                   95))
+                if done.any() else float("inf"),
+                "mean_reboots": float(self.reboots[p][done].mean())
+                if done.any() else 0.0,
+            })
+        return rows
+
+
+def _design_result(ps: PlanSet, n_devices: int, out: dict, t0: float,
+                   config_out: dict, policy: str) -> DesignSweepResult:
+    shape = (len(ps), n_devices)
+    cfg = ()
+    if config_out:
+        cfg = (config_out["shared_rows"], config_out["adaptive"],
+               config_out["parametric"], config_out["stochastic"],
+               config_out["backend"], config_out["chunk"],
+               config_out["enable_fast"], config_out["has_burn"])
+    return DesignSweepResult(
+        labels=ps.labels, strategies=ps.strategies,
+        capacities=ps.capacity, n_devices=n_devices,
+        completed=(~out["stuck"]).reshape(shape),
+        live_s=(out["live"] / CLOCK_HZ).reshape(shape),
+        dead_s=out["dead"].reshape(shape),
+        reboots=out["reboots"].reshape(shape),
+        energy_j=(out["live"] * JOULES_PER_CYCLE).reshape(shape),
+        wasted_cycles=out["wasted"].reshape(shape),
+        belief_cycles=out["belief"].reshape(shape),
+        wall_s=time.perf_counter() - t0,
+        replay_config=cfg, policy=policy)
+
+
+def _design_sweep(ps: PlanSet, n_devices: int, seed: int,
+                  recharge_cv: float, policy: str, theta: float,
+                  batch_rows: int, belief_alpha: float,
+                  trace_reboots: int, charge_cv: float,
+                  charge_bias_cv: float, charge_reboots: int, mesh,
+                  backend: str, reduce: str, lane_chunk: int | None,
+                  stats_bins: int, stats_edges: dict | None,
+                  event_chunk: int | None, t0: float):
+    """One compiled replay over a whole :class:`PlanSet` design space.
+
+    Lanes are plan-major (``lane = p * n_devices + d``).  Unchunked, each
+    plan's ``n_devices`` lanes draw with the same legacy samplers and
+    seeds an individual ``fleet_sweep(plan=plans[p])`` call uses, so
+    per-plan outputs are bit-exact against replaying each candidate
+    separately.  With ``lane_chunk`` the flat lane axis streams through
+    the chunk-invariant ``*_stream`` samplers instead (chunking-
+    independent, but a different draw stream).  Design sweeps always
+    replay charge-wise -- an all-nominal capacity trace when the jitter
+    knobs are off -- because the fused event stream is the path that
+    indexes the packed (P, S, F) candidate tensor in place instead of
+    materializing a per-lane gather of the stacked row tables."""
+    from repro.runtime.failures import (charge_capacity_jitter,
+                                        charge_capacity_jitter_stream,
+                                        charge_trace_cumulative,
+                                        harvest_jitter,
+                                        harvest_jitter_stream,
+                                        initial_charge_fraction,
+                                        initial_charge_fraction_stream,
+                                        reboot_recharge_times,
+                                        reboot_recharge_times_stream,
+                                        recharge_trace_cumulative)
+
+    n_plans, dev = len(ps), n_devices
+    lanes = n_plans * dev
+    use_charge = charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0
+    n_charges = charge_reboots or (256 if use_charge else 8)
+    edges = None
+    if reduce == "stats":
+        edges = stats_edges if stats_edges is not None else \
+            default_stat_edges(float(ps.total_cycles.max()), ps.capacity,
+                               ps.recharge_s, stats_bins)
+    config_out: dict = {}
+    if lane_chunk is not None:
+        def plan_of(lo, m):
+            return (lo + np.arange(m)) // dev
+
+        def make_inputs(lo, m):
+            p = plan_of(lo, m)
+            caps_c = ps.capacity[p]
+            frac = initial_charge_fraction_stream(m, seed=seed,
+                                                  lane_lo=lo)
+            jm = harvest_jitter_stream(m, seed=seed, cv=recharge_cv,
+                                       lane_lo=lo)
+            rem0_c = np.where(np.isinf(caps_c), np.inf, caps_c * frac)
+            tail_c = ps.recharge_s[p] * jm
+            cum_c = None
+            if trace_reboots > 0:
+                tr = reboot_recharge_times_stream(
+                    m, trace_reboots, ps.recharge_s[p], seed=seed,
+                    lane_lo=lo)
+                cum_c = recharge_trace_cumulative(tr * jm[:, None])
+            ctr = charge_capacity_jitter_stream(
+                m, n_charges, caps_c, seed=seed, cv=charge_cv,
+                bias_cv=charge_bias_cv, lane_lo=lo)
+            ccum_c = charge_trace_cumulative(ctr)
+            return caps_c, rem0_c, tail_c, cum_c, ccum_c
+
+        res = _chunked_replay(
+            ps.rows, ps.n_rows, lanes, lane_chunk, make_inputs, plan_of,
+            policy, theta, batch_rows, belief_alpha, mesh, backend,
+            reduce, edges, n_plans, event_chunk=event_chunk,
+            plan_idx_of=plan_of, config_out=config_out)
+        if reduce == "stats":
+            res.group_labels = np.asarray(ps.labels)
+            res.wall_s = time.perf_counter() - t0
+            return res
+        out, _peak = res
+        return _design_result(ps, dev, out, t0, config_out, policy)
+    pidx = np.repeat(np.arange(n_plans, dtype=np.int32), dev)
+    caps = ps.capacity[pidx]
+    # Per-plan legacy draws with per-plan seeds: the bit-exactness pin.
+    frac = np.tile(initial_charge_fraction(dev, seed=seed), n_plans)
+    jm = np.tile(harvest_jitter(dev, seed=seed + 1, cv=recharge_cv),
+                 n_plans)
+    rem0 = np.where(np.isinf(caps), np.inf, caps * frac)
+    tail = ps.recharge_s[pidx] * jm
+    cum = None
+    if trace_reboots > 0:
+        jm_d = jm[:dev]
+        cum = recharge_trace_cumulative(np.concatenate(
+            [reboot_recharge_times(dev, trace_reboots,
+                                   float(ps.recharge_s[p]),
+                                   seed=seed + 2) * jm_d[:, None]
+             for p in range(n_plans)]))
+    ccum = charge_trace_cumulative(np.concatenate(
+        [charge_capacity_jitter(dev, n_charges, float(ps.capacity[p]),
+                                seed=seed + 3, cv=charge_cv,
+                                bias_cv=charge_bias_cv)
+         for p in range(n_plans)]))
+    common = dict(trace_cum=cum, tail_s=tail, policy=policy, theta=theta,
+                  batch_rows=batch_rows, belief_alpha=belief_alpha,
+                  charge_cum=ccum, mesh=mesh, backend=backend,
+                  n_rows=ps.n_rows[pidx], chunk=event_chunk,
+                  plan_idx=pidx, config_out=config_out)
+    if reduce == "stats":
+        parts = _run_replay(ps.rows, caps, rem0, "plan", reduce="stats",
+                            group_id=pidx, edges=edges, n_groups=n_plans,
+                            **common)
+        stats = FleetStats.from_parts(parts, edges,
+                                      group_labels=np.asarray(ps.labels))
+        stats.wall_s = time.perf_counter() - t0
+        stats.peak_lane_bytes = _lane_io_bytes(lanes, caps, rem0, tail,
+                                               cum, ccum, pidx)
+        return stats
+    out = _run_replay(ps.rows, caps, rem0, "plan", **common)
+    return _design_result(ps, dev, out, t0, config_out, policy)
+
+
+def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
+                strategy: str | None = None, power=None,
                 n_devices: int = 1000, seed: int = 0,
                 recharge_cv: float = 0.25,
-                plan: FleetPlan | None = None,
+                plan: "FleetPlan | PlanSet | None" = None,
                 policy: str = "fixed", theta: float = 0.5,
                 batch_rows: int = 1, belief_alpha: float = 0.0,
                 trace_reboots: int = 0, charge_cv: float = 0.0,
@@ -1467,8 +1902,9 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                 charge_reboots: int = 0, mesh=None,
                 backend: str = "auto", reduce: str = "none",
                 lane_chunk: int | None = None, stats_bins: int = 64,
-                stats_edges: dict | None = None
-                ) -> FleetSweepResult | FleetStats:
+                stats_edges: dict | None = None,
+                event_chunk: int | None = None
+                ) -> "FleetSweepResult | DesignSweepResult | FleetStats":
     """Replay one (strategy, power) plan across ``n_devices`` simulated
     devices with per-device harvest-trace jitter, in one compiled pass.
 
@@ -1507,6 +1943,15 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
     ``lane_chunk`` alone (``FleetStats.peak_lane_bytes`` records it) --
     this is the 1e7-device memory-flat path.  ``stats_bins``/
     ``stats_edges`` size the fixed histogram bins.
+
+    ``plan=`` also accepts a :class:`PlanSet` (Plan IR v2): the whole
+    stacked candidate batch replays with ``n_devices`` jittered lanes per
+    candidate under ONE compiled scan, returning a
+    :class:`DesignSweepResult` (``reduce="none"``) or a
+    :class:`FleetStats` with one group per candidate
+    (``reduce="stats"``); ``net``/``x``/``strategy``/``power`` are then
+    unused.  ``event_chunk`` overrides the plan-shape-derived
+    event-stream chunk length (``kernels.charge_replay``).
     """
     from repro.runtime.failures import (charge_capacity_jitter,
                                         charge_capacity_jitter_stream,
@@ -1523,8 +1968,23 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
         raise ValueError(f"unknown reduce mode {reduce!r}; "
                          f"expected one of {REPLAY_REDUCES}")
     t0 = time.perf_counter()
+    if isinstance(plan, PlanSet):
+        return _design_sweep(plan, n_devices, seed, recharge_cv, policy,
+                             theta, batch_rows, belief_alpha,
+                             trace_reboots, charge_cv, charge_bias_cv,
+                             charge_reboots, mesh, backend, reduce,
+                             lane_chunk, stats_bins, stats_edges,
+                             event_chunk, t0)
     if plan is None:
+        if net is None or x is None or strategy is None or power is None:
+            raise ValueError("fleet_sweep needs (net, x, strategy, power) "
+                             "to build a plan, or an explicit plan= "
+                             "FleetPlan / PlanSet")
         plan = build_plan(net, x, strategy, power)
+    if strategy is None:
+        strategy = plan.strategy
+    if power is None:
+        power = plan.power
     use_charge = charge_cv > 0 or charge_bias_cv > 0 or charge_reboots > 0
     edges = None
     if reduce == "stats":
@@ -1557,7 +2017,7 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
             _plan_rows(plan), len(plan), n_devices, lane_chunk,
             make_inputs, lambda lo, m: np.zeros(m, np.int32), policy,
             theta, batch_rows, belief_alpha, mesh, backend, reduce,
-            edges, 1)
+            edges, 1, event_chunk=event_chunk)
         if reduce == "stats":
             res.wall_s = time.perf_counter() - t0
             return res
@@ -1599,7 +2059,8 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                             batch_rows=batch_rows,
                             belief_alpha=belief_alpha, charge_cum=ccum,
                             mesh=mesh, backend=backend, n_rows=len(plan),
-                            reduce="stats", edges=edges)
+                            chunk=event_chunk, reduce="stats",
+                            edges=edges)
         stats = FleetStats.from_parts(parts, edges)
         stats.wall_s = time.perf_counter() - t0
         stats.peak_lane_bytes = _lane_io_bytes(n_devices, caps, rem0,
@@ -1609,7 +2070,8 @@ def fleet_sweep(net: SimNet, x: np.ndarray, strategy: str, power: str,
                       trace_cum=cum, tail_s=tail, policy=policy,
                       theta=theta, batch_rows=batch_rows,
                       belief_alpha=belief_alpha, charge_cum=ccum,
-                      mesh=mesh, backend=backend, n_rows=len(plan))
+                      mesh=mesh, backend=backend, n_rows=len(plan),
+                      chunk=event_chunk)
     return FleetSweepResult(
         strategy, power, n_devices,
         completed=~out["stuck"],
@@ -1657,7 +2119,8 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
                     charge_bias_cv: float = 0.0, charge_reboots: int = 0,
                     mesh=None, backend: str = "auto",
                     reduce: str = "none", lane_chunk: int | None = None,
-                    stats_bins: int = 64, stats_edges: dict | None = None
+                    stats_bins: int = 64, stats_edges: dict | None = None,
+                    event_chunk: int | None = None
                     ) -> CapacitorSweepResult | FleetStats:
     """Sweep (capacitor size x device) in ONE vmapped/sharded replay of ONE
     parameterized plan -- no per-capacitor re-extraction.
@@ -1731,7 +2194,7 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
             _plan_rows(plan), len(plan), lanes, lane_chunk, make_inputs,
             lambda lo, m: (lo + np.arange(m)) // n_devices, policy,
             theta, batch_rows, belief_alpha, mesh, backend, reduce,
-            edges, n_caps)
+            edges, n_caps, event_chunk=event_chunk)
         if reduce == "stats":
             res.group_labels = capacities
             res.wall_s = time.perf_counter() - t0
@@ -1768,7 +2231,8 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
                             theta=theta, batch_rows=batch_rows,
                             belief_alpha=belief_alpha, charge_cum=ccum,
                             mesh=mesh, backend=backend, n_rows=len(plan),
-                            reduce="stats", group_id=gid, edges=edges,
+                            chunk=event_chunk, reduce="stats",
+                            group_id=gid, edges=edges,
                             n_groups=n_caps)
         stats = FleetStats.from_parts(parts, edges,
                                       group_labels=capacities)
@@ -1780,7 +2244,7 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
                       tail_s=tail, policy=policy, theta=theta,
                       batch_rows=batch_rows, belief_alpha=belief_alpha,
                       charge_cum=ccum, mesh=mesh, backend=backend,
-                      n_rows=len(plan))
+                      n_rows=len(plan), chunk=event_chunk)
     shape = (n_caps, n_devices)
     return CapacitorSweepResult(
         strategy, capacities, n_devices,

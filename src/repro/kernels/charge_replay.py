@@ -21,8 +21,11 @@ flat *event* stream with a constant trip count:
   charge *or* fast-forward the whole row when eligible, then apply the
   BURN/CALIB overrides and the per-row dead-time gather on row advance.
 * ``event_replay``   -- drives ``event_step`` to completion with a bounded
-  ``lax.scan`` (``EVENT_CHUNK`` events per trip) under an outer
-  ``lax.while_loop`` on the lane's real row cursor.
+  ``lax.scan`` (a plan-shape-derived chunk of events per trip; see
+  :func:`default_event_chunk`) under an outer ``lax.while_loop`` on the
+  lane's real row cursor.  With a stacked ``(P, S, F)`` pack and a
+  per-lane plan index (Plan IR v2), the same loop replays a whole
+  candidate design space from one broadcast row table.
 
 Masking scheme
 --------------
@@ -62,10 +65,40 @@ from repro.core.fleetsim import (KIND_BURN, KIND_CALIB, KIND_WORK,
                                  _BURN_IDX, _CONTROL_IDX, _K_TILES,
                                  _N_CLASSES)
 
-#: Events per inner ``lax.scan`` trip.  Fixed (never shape-derived) so every
-#: plan bucket shares the same loop structure; a lane overshoots its last
-#: event by at most ``EVENT_CHUNK - 1`` masked no-ops.
+#: Fallback events per inner ``lax.scan`` trip (the deterministic paths'
+#: placeholder and the floor of :func:`default_event_chunk`'s clamp).  The
+#: production chunk is *plan-shape-derived*: dispatch passes
+#: ``default_event_chunk(bucketed_rows)`` unless the caller overrides it
+#: (the ``event_chunk=`` knob on ``replay_plans`` / ``fleet_sweep`` /
+#: ``capacitor_sweep``).
 EVENT_CHUNK = 128
+
+#: Clamp bounds of the derived chunk: below 64 the outer while-loop's
+#: full-state select dominates, above 512 the compiled inner body bloats
+#: and the final overshoot (up to ``chunk - 1`` masked no-op events per
+#: lane) stops amortizing.
+_MIN_EVENT_CHUNK, _MAX_EVENT_CHUNK = 64, 512
+
+
+def default_event_chunk(plan_rows: int) -> int:
+    """Plan-shape-derived inner-scan trip count for the fused event stream.
+
+    A lane walks at least one event per real row, so short plans (sonic:
+    tens of rows) want short chunks -- the tail overshoot is bounded by
+    ``chunk - 1`` masked events and the outer ``while_loop`` already exits
+    after one or two trips -- while long row tables (tile-8 walks ~30k
+    events/lane on the bench capacitor) want long chunks to amortize the
+    outer loop's per-trip full-state select.  The heuristic is simply the
+    bucketed row count clamped to ``[64, 512]``: row tables are already
+    power-of-two bucket-padded (``fleetsim._bucket_rows``), so every plan
+    in a bucket derives the same chunk and keeps sharing one compiled
+    replay.  ``benchmarks/fleet.py`` records the derived chunk per
+    strategy (schema 6 ``design_space.event_chunks``)."""
+    if plan_rows < 1:
+        raise ValueError(f"plan_rows must be >= 1, got {plan_rows}")
+    return int(min(_MAX_EVENT_CHUNK,
+                   max(_MIN_EVENT_CHUNK,
+                       1 << (int(plan_rows) - 1).bit_length())))
 
 
 def trace_window(cum, r0, r1, fallback):
@@ -104,23 +137,39 @@ def pack_rows(rows: dict):
     in f64, and is cast back to its original dtype on unpack -- the
     round-trip is bitwise lossless, so the packed replay is bit-identical
     to the unpacked one.  The pack itself is event-loop-invariant (built
-    once per replay, hoisted out of the compiled loop)."""
+    once per replay, hoisted out of the compiled loop).
+
+    Plan IR v2: row dicts with a leading *candidate-plan* axis (every
+    field shaped ``(P, S, ...)`` -- a stacked ``fleetsim.PlanSet``) pack
+    to a ``(P, S, F)`` tensor the same way; :func:`unpack_row` then takes
+    the lane's plan index and reads its row with one two-index
+    ``dynamic_slice``, so a whole design space replays from one packed
+    broadcast operand."""
     keys = tuple(sorted(rows))
+    lead = int(jnp.asarray(rows["kind"]).ndim)   # 1 = (S,), 2 = (P, S)
     cols, layout, off = [], [], 0
     for k in keys:
         v = jnp.asarray(rows[k])
-        flat = v.reshape(v.shape[0], -1).astype(jnp.float64)
-        layout.append((k, off, v.shape[1:], v.dtype))
+        flat = v.reshape(v.shape[:lead] + (-1,)).astype(jnp.float64)
+        layout.append((k, off, v.shape[lead:], v.dtype))
         cols.append(flat)
-        off += flat.shape[1]
-    return jnp.concatenate(cols, axis=1), tuple(layout)
+        off += flat.shape[-1]
+    return jnp.concatenate(cols, axis=lead), tuple(layout)
 
 
-def unpack_row(packed, layout, i) -> dict:
+def unpack_row(packed, layout, i, plan=None) -> dict:
     """Rebuild row ``i``'s field dict from the packed matrix with one
     ``dynamic_slice`` (the static ``layout`` splits the stripe for
-    free)."""
-    stripe = lax.dynamic_slice_in_dim(packed, i, 1, axis=0)[0]
+    free).  With a ``(P, S, F)`` pack, ``plan`` selects the candidate
+    plan in the same slice."""
+    if packed.ndim == 3:
+        f = packed.shape[-1]
+        stripe = lax.dynamic_slice(
+            packed, (plan.astype(i.dtype) if hasattr(plan, "astype")
+                     else jnp.asarray(plan, i.dtype), i,
+                     jnp.asarray(0, i.dtype)), (1, 1, f))[0, 0]
+    else:
+        stripe = lax.dynamic_slice_in_dim(packed, i, 1, axis=0)[0]
     row = {}
     for k, off, shape, dtype in layout:
         w = math.prod(shape) if shape else 1
@@ -515,7 +564,7 @@ def _select(pred, a, b):
 def event_step(packed, layout, cap, trace_cum, tail_s, charge_cum,
                nominal_from, theta, window, alpha, adaptive: bool,
                parametric: bool, enable_fast: bool, has_burn: bool,
-               st: EventState, active) -> EventState:
+               st: EventState, active, plan=None) -> EventState:
     """One event: one charge of the current row, or the row's closed-form
     remainder when eligible, or a whole BURN/CALIB row.
 
@@ -527,10 +576,12 @@ def event_step(packed, layout, cap, trace_cum, tail_s, charge_cum,
     all-nominal regime" / "the plan has BURN rows"): disabling either
     never changes results -- the fast path is a pure shortcut and the
     BURN override is dead code without BURN rows -- it only removes the
-    corresponding per-event arithmetic from the compiled body."""
-    s_pad = packed.shape[0]
+    corresponding per-event arithmetic from the compiled body.  With a
+    ``(P, S, F)`` pack (Plan IR v2), ``plan`` is the lane's candidate
+    index into the stacked row table."""
+    s_pad = packed.shape[-2]
     i = jnp.minimum(st.i, s_pad - 1)
-    row = unpack_row(packed, layout, i)
+    row = unpack_row(packed, layout, i, plan)
     ctx = row_ctx(row, cap, theta, adaptive, parametric)
 
     # Entering a row resets the row-local loop state (iterations left,
@@ -643,13 +694,21 @@ def event_replay(rows, cap, rem0, trace_cum, tail_s, charge_cum,
                  nominal_from, s_real, theta, window, alpha, *,
                  adaptive: bool, parametric: bool,
                  enable_fast: bool = True, has_burn: bool = True,
-                 chunk: int = EVENT_CHUNK) -> dict:
+                 chunk: int = EVENT_CHUNK, plan_idx=None) -> dict:
     """Replay one lane's plan as a constant-trip masked event stream.
 
     ``s_real`` is the lane's real (pre-padding) row count: the cursor
     never walks padding rows, and once ``i == s_real`` every further event
-    is a bitwise no-op (see the module docstring's masking scheme)."""
+    is a bitwise no-op (see the module docstring's masking scheme).
+
+    Plan IR v2: with stacked ``(P, S, ...)`` rows and a per-lane
+    ``plan_idx``, every event reads the lane's own candidate's row from
+    the shared ``(P, S, F)`` pack -- the pack stays a broadcast
+    loop-invariant, so a whole :class:`~repro.core.fleetsim.PlanSet`
+    replays under ONE compiled scan."""
     packed, layout = pack_rows(rows)
+    if plan_idx is not None:
+        plan_idx = jnp.asarray(plan_idx, jnp.int32)
     zero = jnp.zeros_like(rem0)
     st0 = EventState(
         i=jnp.asarray(0, jnp.int32),
@@ -667,7 +726,7 @@ def event_replay(rows, cap, rem0, trace_cum, tail_s, charge_cum,
         return event_step(packed, layout, cap, trace_cum, tail_s,
                           charge_cum, nominal_from, theta, window, alpha,
                           adaptive, parametric, enable_fast, has_burn,
-                          st, active=st.i < s_real), None
+                          st, active=st.i < s_real, plan=plan_idx), None
 
     st = lax.while_loop(
         lambda st: st.i < s_real,

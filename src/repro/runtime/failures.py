@@ -315,13 +315,24 @@ def harvest_jitter_stream(n_devices: int, seed: int = 0, cv: float = 0.25,
 
 
 def reboot_recharge_times_stream(n_devices: int, n_reboots: int,
-                                 mean_recharge_s: float, seed: int = 0,
+                                 mean_recharge_s, seed: int = 0,
                                  lane_lo: int = 0) -> np.ndarray:
     """Chunk-invariant :func:`reboot_recharge_times`: exponential
-    per-reboot recharge times, ``n_reboots`` draws per lane."""
+    per-reboot recharge times, ``n_reboots`` draws per lane.
+
+    ``mean_recharge_s`` may be a scalar (one power system fleet-wide) or a
+    ``(devices,)`` vector holding this lane range's per-lane means (e.g.
+    ``replay_plans``' one-lane-per-plan layout, or a ``PlanSet`` design
+    sweep where each candidate plan carries its own capacitor).  The
+    underlying uniform draws depend only on ``(seed, lane index)``, so the
+    mean scales the same stream -- lane draws are invariant under both
+    chunking and the per-lane mean."""
     u = _stream_uniforms(n_devices, n_reboots, seed, _RECHARGE_STREAM,
                          lane_lo)
-    return -mean_recharge_s * np.log1p(-u)
+    mean = np.asarray(mean_recharge_s, np.float64)
+    if mean.ndim == 1:
+        mean = mean[:, None]
+    return -mean * np.log1p(-u)
 
 
 def charge_capacity_jitter_stream(n_devices: int, n_charges: int,

@@ -81,6 +81,56 @@ def test_paper_nets_infeasible_uncompressed(maker):
     assert net.params_bytes() > DEVICE_WEIGHT_BYTES, net.name
 
 
+def _cfg(acc, e, feasible=True, impj=0.0, completion=1.0):
+    from repro.compress.genesis import ConfigResult
+    return ConfigResult(choices=(), params=0, params_bytes=0, macs=0,
+                        accuracy=acc, tp=acc, tn=acc, e_infer_j=e,
+                        feasible=feasible, impj=impj,
+                        completion=completion)
+
+
+def test_pareto_frontier_empty_results():
+    assert pareto_frontier([]) == []
+
+
+def test_pareto_frontier_single_dominant_point():
+    """One config dominating on both axes is the whole frontier."""
+    dom = _cfg(0.9, 1e-6)
+    rest = [_cfg(0.5, 2e-6), _cfg(0.7, 3e-6), _cfg(0.8, 5e-6)]
+    front = pareto_frontier(rest + [dom])
+    assert front == [dom]
+
+
+def test_pareto_frontier_accuracy_tie_keeps_cheapest():
+    """Equal accuracy: only the lower-energy config is non-dominated."""
+    cheap, dear = _cfg(0.8, 1e-6), _cfg(0.8, 4e-6)
+    front = pareto_frontier([dear, cheap, _cfg(0.9, 9e-6)])
+    assert cheap in front and dear not in front
+
+
+def test_pareto_frontier_drops_never_completing_configs():
+    """completion=0 (infinite measured energy) is off the frontier even
+    with the best accuracy."""
+    dnf = _cfg(0.99, float("inf"), completion=0.0)
+    ok = _cfg(0.6, 2e-6)
+    assert pareto_frontier([dnf, ok]) == [ok]
+
+
+def test_select_no_feasible_raises():
+    with pytest.raises(RuntimeError, match="no feasible"):
+        select([_cfg(0.9, 1e-6, feasible=False, impj=5.0)])
+
+
+def test_select_max_impj_among_feasible_with_ties():
+    """select ignores infeasible configs however good their IMpJ, and a
+    tie on IMpJ still returns one of the tied feasible configs."""
+    infeasible = _cfg(0.9, 1e-6, feasible=False, impj=100.0)
+    a = _cfg(0.7, 2e-6, impj=3.0)
+    b = _cfg(0.8, 3e-6, impj=3.0)
+    best = select([infeasible, a, b])
+    assert best in (a, b) and best.impj == 3.0
+
+
 def test_sweep_and_selection_small():
     """End-to-end GENESIS on a reduced net: the selected config must fit,
     and compression must actually shrink the network."""

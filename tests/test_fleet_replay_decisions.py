@@ -322,9 +322,14 @@ def test_theta_alpha_window_sweep_reuses_one_compilation(small_net):
     plan = build_plan(net, x, "sonic", "100uF")
     traces = np.full((1, 32), plan.capacity)
     # all-nominal trace -> nominal_from=0 -> fast path compiled in; the
-    # sonic plan has no BURN rows so that block is elided
+    # sonic plan has no BURN rows so that block is elided.  The event
+    # chunk defaults to the plan's bucketed row count (Plan IR v2's
+    # shape-derived chunk), so derive the same value for the cache key.
+    from repro.core.fleetsim import _bucket_target
+    from repro.kernels.charge_replay import default_event_chunk
+    chunk = default_event_chunk(_bucket_target(len(plan)))
     fn = _jit_replay(False, True, False, True,
-                     "xla", 128, True, False)   # stochastic adaptive
+                     "xla", chunk, True, False)   # stochastic adaptive
     replay_plans([plan], policy="adaptive", theta=0.33, batch_rows=2,
                  belief_alpha=0.1, charge_traces=traces)    # warm the shape
     n0 = fn._cache_size()

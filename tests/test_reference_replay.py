@@ -318,6 +318,52 @@ def test_partial_debt_repay_never_drops_rollback_work():
         ref["useful"] + ref["wasted_total"] + ref["overhead"], rel=1e-12)
 
 
+def test_planset_design_sweep_matches_reference():
+    """Plan IR v2 differential: a stacked multi-plan design sweep
+    (mixed strategies, distinct restamped capacities, stochastic charges
+    AND recharge traces, cross-charge adaptive commits) must agree with
+    the Python oracle on every lane -- reconstructing the sweep's
+    per-plan legacy draws (frac seed, jitter seed+1, recharge seed+2,
+    charge seed+3) by hand and interpreting each lane independently."""
+    from repro.core.energy import JOULES_PER_CYCLE
+    from repro.core.fleetsim import PlanSet, fleet_sweep
+    from repro.runtime.failures import (harvest_jitter,
+                                        initial_charge_fraction)
+
+    plans = [_restamped(0, "sonic", 0.20), _restamped(2, "tile-8", 0.30),
+             _restamped(1, "tails", 0.15), _restamped(3, "naive", 1.50)]
+    dev, seed, cv, n_ch, n_rt, rcv = 3, 5, 0.35, 12, 6, 0.25
+    kw = dict(policy="adaptive", theta=0.5, batch_rows=4,
+              belief_alpha=0.2)
+    ps = PlanSet.from_plans(plans)
+    res = fleet_sweep(plan=ps, n_devices=dev, seed=seed, recharge_cv=rcv,
+                      charge_cv=cv, charge_reboots=n_ch,
+                      trace_reboots=n_rt, **kw)
+
+    frac = initial_charge_fraction(dev, seed=seed)
+    jm = harvest_jitter(dev, seed=seed + 1, cv=rcv)
+    for p, plan in enumerate(plans):
+        rows = _plan_rows(plan)
+        rtr = reboot_recharge_times(dev, n_rt, plan.recharge_s,
+                                    seed=seed + 2) * jm[:, None]
+        cum = recharge_trace_cumulative(rtr)
+        ccum = charge_trace_cumulative(charge_capacity_jitter(
+            dev, n_ch, plan.capacity, seed=seed + 3, cv=cv))
+        for d in range(dev):
+            ref = reference_replay(
+                rows, plan.capacity, plan.capacity * frac[d],
+                tail_s=plan.recharge_s * jm[d], recharge_cum=cum[d],
+                charge_cum=ccum[d], **kw)
+            cfg = (plan.strategy, p, d)
+            assert res.completed[p, d] == (not ref["stuck"]), cfg
+            assert res.energy_j[p, d] == ref["live"] * JOULES_PER_CYCLE, \
+                cfg
+            assert res.reboots[p, d] == int(round(ref["reboots"])), cfg
+            assert res.dead_s[p, d] == ref["dead"], cfg
+            assert res.wasted_cycles[p, d] == ref["wasted"], cfg
+            assert res.belief_cycles[p, d] == ref["belief"], cfg
+
+
 def test_reference_rejects_nothing_silently():
     """Sanity: the oracle's decomposition reacts to policy (a batched lane
     books commit overhead differently from a fixed one)."""
