@@ -109,6 +109,28 @@ replaying every candidate separately (pinned by
 ``tests/test_planset.py``).  ``compress/genesis.py`` prices its whole
 accuracy-energy frontier through one such sweep.
 
+The overlapped streaming pipeline (``lane_chunk`` + ``prefetch``)
+-----------------------------------------------------------------
+Chunked streaming (``lane_chunk=``) runs as a two-stage pipeline by
+default (``prefetch=1``, :func:`_chunked_replay`): a bounded producer
+thread builds chunk k+1's inputs -- Philox ``*_stream`` draws,
+inert-lane padding, stochastic trace post-processing -- and uploads
+them to the device while chunk k's replay is in flight, and under
+``reduce="stats"`` each chunk's partial folds into a *device-resident*
+donated accumulator inside a tiny compiled merge
+(``fleetstats.merge_parts``), so the loop never syncs with the host
+until the final ``FleetStats`` materializes.  Host sampler time hides
+under device compute instead of adding to it (the win scales with the
+host's spare cores; a 1-core runner sees ~1x).  The peak-memory bound
+is honest and recorded per sweep: ``peak_lane_bytes = (prefetch + 1) *
+max-chunk-bytes + one stats partial``.  ``prefetch=0`` is the legacy
+fully synchronous loop, bit-exact against the pipeline on every output
+channel (same chunk partials, same left-fold merge order) -- it is the
+differential oracle ``tests/test_overlap_pipeline.py`` pins, and the
+right choice when the host has no spare core or jobs are
+memory-squeezed to exactly one chunk.  Mesh-sharded and Pallas replays
+keep their own dispatch and overlap stage 1 (input generation) only.
+
 Plan rows and the paper's Sec. 6 commit protocol
 ------------------------------------------------
 Each row models one committed unit of work as ``(kind, n, iter_cycles,
@@ -244,6 +266,17 @@ REPLAY_BACKENDS = ("auto", "xla", "pallas", "_while")
 #: output (and, with ``lane_chunk=``, peak) memory is independent of the
 #: fleet size.
 REPLAY_REDUCES = ("none", "stats")
+
+#: Default number of chunks the streamed replay's producer stage may run
+#: ahead of the chunk currently replaying (the ``prefetch=`` knob on
+#: ``fleet_sweep`` / ``capacitor_sweep`` / ``replay_plans``).  1 is
+#: classic double buffering: while chunk k replays, chunk k+1's sampler
+#: draws, padding and device upload happen on a producer thread, so at
+#: most two chunks of lane buffers are alive at once.  0 is the legacy
+#: fully synchronous loop -- the bit-compatible differential oracle and
+#: the right choice when host memory, not wall clock, is the binding
+#: constraint.
+DEFAULT_PREFETCH = 1
 
 
 class ScanState(NamedTuple):
@@ -971,6 +1004,82 @@ def _jit_reduce_only(n_groups: int):
         out, gid, valid, edges, n_groups))
 
 
+@lru_cache(maxsize=None)
+def _jit_merge_parts(donate: bool):
+    """The device-resident stats accumulator: a tiny compiled call that
+    folds one chunk's ``(psums, pmins, pmaxs)`` partial into the running
+    partial (``fleetstats.merge_parts``) without ever leaving the device.
+    The running partial (argument 0) is donated where the platform
+    implements donation, so the accumulator is one buffer, not a history
+    of them.  A left fold of this call is bit-exact against the host-side
+    ``FleetStats.from_parts`` + ``merge`` loop (same f64 additions in the
+    same chunk order)."""
+    import jax
+
+    from .fleetstats import merge_parts
+
+    return jax.jit(merge_parts, donate_argnums=(0,) if donate else ())
+
+
+#: Measured event-chunk winners, keyed by (plan bucket shape x replay
+#: static config x lane count).  Bucketed row tables make the key stable
+#: across same-bucket plans, so one sweep's timing pays for every later
+#: sweep of a similarly-shaped plan.
+_EVENT_CHUNK_CACHE: dict = {}
+
+
+def _autotune_event_chunk(key: tuple, s_bucket: int, dispatch) -> int:
+    """Measured ``event_chunk="auto"`` resolution: time the candidate
+    pow2 chunk lengths (``kernels.charge_replay.event_chunk_candidates``,
+    the plan-shape default plus one octave either side) on the live
+    first-chunk operands via ``dispatch(candidate)`` -- which must run a
+    *non-donating* replay so the operands survive the timing runs -- and
+    cache the winner under ``key``.  Each candidate is dispatched twice
+    (compile + warm) and the warm wall decides, so the tuner never picks
+    a chunk on compile noise; the heuristic default is always among the
+    candidates, bounding the worst case at "what the default already
+    did" plus the one-off timing cost."""
+    import jax
+
+    from repro.kernels.charge_replay import event_chunk_candidates
+
+    hit = _EVENT_CHUNK_CACHE.get(key)
+    if hit is not None:
+        return hit
+    best, best_t = None, math.inf
+    for cand in event_chunk_candidates(s_bucket):
+        jax.block_until_ready(dispatch(cand))        # compile + warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(dispatch(cand))
+        dt = time.perf_counter() - t0
+        if dt < best_t:
+            best, best_t = cand, dt
+    _EVENT_CHUNK_CACHE[key] = best
+    return best
+
+
+def _validate_replay_knobs(policy: str, batch_rows: int,
+                           belief_alpha: float, backend: str,
+                           reduce: str) -> None:
+    """Shared replay-knob validation for ``_run_replay`` and the
+    overlapped chunk pipeline (which dispatches compiled replays without
+    going through ``_run_replay``)."""
+    if policy not in REPLAY_POLICIES:
+        raise ValueError(f"unknown replay policy {policy!r}; "
+                         f"expected one of {REPLAY_POLICIES}")
+    if batch_rows < 1:
+        raise ValueError(f"batch_rows must be >= 1, got {batch_rows}")
+    if not 0.0 <= belief_alpha < 1.0:
+        raise ValueError(f"belief_alpha must be in [0, 1), "
+                         f"got {belief_alpha}")
+    if backend not in REPLAY_BACKENDS:
+        raise ValueError(f"unknown replay backend {backend!r}; "
+                         f"expected one of {REPLAY_BACKENDS}")
+    if reduce not in REPLAY_REDUCES:
+        raise ValueError(f"unknown reduce mode {reduce!r}; "
+                         f"expected one of {REPLAY_REDUCES}")
+
+
 def _x64():
     from jax.experimental import enable_x64
     return enable_x64()
@@ -1159,20 +1268,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
     from repro.runtime.failures import (charge_trace_nominal_from,
                                         pad_charge_trace_columns)
 
-    if policy not in REPLAY_POLICIES:
-        raise ValueError(f"unknown replay policy {policy!r}; "
-                         f"expected one of {REPLAY_POLICIES}")
-    if batch_rows < 1:
-        raise ValueError(f"batch_rows must be >= 1, got {batch_rows}")
-    if not 0.0 <= belief_alpha < 1.0:
-        raise ValueError(f"belief_alpha must be in [0, 1), "
-                         f"got {belief_alpha}")
-    if backend not in REPLAY_BACKENDS:
-        raise ValueError(f"unknown replay backend {backend!r}; "
-                         f"expected one of {REPLAY_BACKENDS}")
-    if reduce not in REPLAY_REDUCES:
-        raise ValueError(f"unknown reduce mode {reduce!r}; "
-                         f"expected one of {REPLAY_REDUCES}")
+    _validate_replay_knobs(policy, batch_rows, belief_alpha, backend,
+                           reduce)
     if reduce == "stats" and edges is None:
         raise ValueError("reduce='stats' needs histogram edges")
     if backend == "auto":
@@ -1225,7 +1322,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 >= nominal_from))
         else:
             enable_fast = True
-    if chunk is None:
+    autotune = chunk == "auto"
+    if chunk is None or autotune:
         # Plan-shape-derived event-chunk default: size the inner scan to
         # the (bucketed) row axis so short plans do not pay a 128-event
         # trip per charge and the tile-8 ~30k-events/lane case amortizes
@@ -1234,6 +1332,11 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                                                  default_event_chunk)
         chunk = (default_event_chunk(rows["kind"].shape[s_axis])
                  if stochastic else EVENT_CHUNK)
+    # The measured tuner only applies where the fused event stream runs
+    # (stochastic XLA, unmeshed); everywhere else "auto" falls back to
+    # the plan-shape default above.
+    autotune = (autotune and stochastic and mesh is None
+                and backend == "xla")
     if config_out is not None:
         # The static compile key of the jit this call dispatches to, in
         # _jit_replay's parameter order -- lets callers pin "the whole
@@ -1279,6 +1382,24 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
             # Donation only where the platform implements it; elsewhere it
             # just warns and copies.
             donate = donate and jax.default_backend() != "cpu"
+        if autotune:
+            def _time_candidate(c):
+                if stats:
+                    return _jit_replay_stats(
+                        shared_rows, adaptive, parametric, stochastic,
+                        backend, c, enable_fast, has_burn, n_groups,
+                        False)(*args, gid, vld, jedges)
+                return _jit_replay(shared_rows, adaptive, parametric,
+                                   stochastic, backend, c, enable_fast,
+                                   has_burn)(*args)
+
+            chunk = _autotune_event_chunk(
+                (shared_rows, adaptive, parametric, stochastic, backend,
+                 enable_fast, has_burn, rows["kind"].shape, n_lanes,
+                 n_groups if stats else None), rows["kind"].shape[s_axis],
+                _time_candidate)
+            if config_out is not None:
+                config_out["chunk"] = chunk
         if backend == "pallas" and stochastic:
             # The Pallas lane kernel (interpret-mode on CPU); the
             # deterministic closed form has no charge loop to fuse, so a
@@ -1359,37 +1480,78 @@ def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
                     policy: str, theta: float, batch_rows: int,
                     belief_alpha: float, mesh, backend: str, reduce: str,
                     edges: dict | None, n_groups: int,
-                    event_chunk: int | None = None,
-                    plan_idx_of=None, config_out: dict | None = None):
-    """Drive one shared-rows replay over the device axis in fixed-size
-    lane chunks: per-chunk inputs are generated on demand by
-    ``make_inputs(lane_lo, m)`` (chunk-invariant counter-based samplers,
-    so the chunking never changes a lane's inputs), the final partial
-    chunk is padded to ``lane_chunk`` with inert masked lanes so every
-    chunk reuses one compiled program, and lane buffers are donated to
-    the jit.  Under ``reduce="stats"`` chunk partials merge associatively
-    into one :class:`FleetStats` -- peak lane memory is the chunk, not
-    the fleet.  Under ``reduce="none"`` per-chunk outputs are
-    concatenated (bit-identical to the unchunked streamed call; used as
-    the differential oracle, not for scale).  With ``plan_idx_of`` the
+                    event_chunk=None, plan_idx_of=None,
+                    config_out: dict | None = None,
+                    prefetch: int = DEFAULT_PREFETCH, shared_rows=None):
+    """Drive one replay over the device axis in fixed-size lane chunks:
+    per-chunk inputs are generated on demand by ``make_inputs(lane_lo,
+    m)`` (chunk-invariant counter-based samplers, so the chunking never
+    changes a lane's inputs), the final partial chunk is padded to
+    ``lane_chunk`` with inert masked lanes so every chunk reuses one
+    compiled program, and lane buffers are donated to the jit.  Under
+    ``reduce="stats"`` chunk partials merge associatively into one
+    :class:`FleetStats` -- peak lane memory is the chunk, not the fleet.
+    Under ``reduce="none"`` per-chunk outputs are concatenated
+    (bit-identical to the unchunked streamed call; used as the
+    differential oracle, not for scale).  With ``plan_idx_of`` the
     chunks run in Plan IR v2 mode: ``plan_rows`` is the stacked
     (P, S, ...) batch, ``n_rows`` the per-plan (P,) row counts, and
-    ``plan_idx_of(lane_lo, m)`` each chunk's per-lane candidate index."""
+    ``plan_idx_of(lane_lo, m)`` each chunk's per-lane candidate index.
+    ``shared_rows=False`` instead streams a *per-lane* row batch
+    (``replay_plans``): ``plan_rows`` carries a leading lane axis that
+    is sliced -- and zero-row padded -- chunk by chunk, and ``n_rows``
+    is the per-lane ``(n_lanes,)`` real row counts.
+
+    ``prefetch >= 1`` turns the synchronous loop into a two-stage
+    overlapped pipeline (:data:`DEFAULT_PREFETCH`).  Stage 1 (producer
+    thread): chunk k+1's sampler draws, inert-lane padding, stochastic
+    trace post-processing (column pow2-padding + ``nominal_from``) and
+    non-blocking device upload run while chunk k's replay is in flight,
+    with a token semaphore bounding the pipeline to ``prefetch + 1``
+    chunks alive at once.  Stage 2 (device-resident accumulation, under
+    ``reduce="stats"``): each chunk's partial folds into a donated
+    running partial inside a tiny compiled merge
+    (``fleetstats.merge_parts``), so the loop never syncs per chunk --
+    the single host sync is the final ``FleetStats.from_parts``.  Chunk
+    partials fold left in chunk order, bitwise the additions the
+    sequential loop's host merge performs, so ``prefetch=0`` (exactly
+    the legacy loop) is the bit-compat differential oracle for the
+    pipeline; ``peak_lane_bytes`` reports the honest pipeline bound:
+    ``(prefetch + 1)`` chunk buffers plus one stats partial.  The mesh
+    and Pallas paths keep their own dispatch (``_run_replay``) and
+    overlap stage 1 only."""
     if lane_chunk < 1:
         raise ValueError(f"lane_chunk must be >= 1, got {lane_chunk}")
+    if prefetch < 0:
+        raise ValueError(f"prefetch must be >= 0, got {prefetch}")
+    _validate_replay_knobs(policy, batch_rows, belief_alpha, backend,
+                           reduce)
+    if reduce == "stats" and edges is None:
+        raise ValueError("reduce='stats' needs histogram edges")
     plan_mode = plan_idx_of is not None
-    stats = None
-    outs: list[dict] = []
-    peak = 0
-    for lo in range(0, n_lanes, lane_chunk):
+    if shared_rows is None:
+        shared_rows = "plan" if plan_mode else True
+    per_lane_rows = shared_rows is False
+    if per_lane_rows:
+        n_rows = np.asarray(n_rows, np.int32)
+    stats = reduce == "stats"
+    starts = list(range(0, n_lanes, lane_chunk))
+
+    def build(lo):
+        """Pipeline stage 1a (host): one chunk's numpy inputs -- sampler
+        draws, grouping, inert-lane padding."""
         m = min(lane_chunk, n_lanes - lo)
         pad = lane_chunk - m if n_lanes > lane_chunk else 0
         caps, rem0, tail, cum, ccum = make_inputs(lo, m)
         gid = np.asarray(group_id_of(lo, m), np.int32)
-        pidx = nr = None
+        pidx = nr = rows_c = None
         if plan_mode:
             pidx = np.asarray(plan_idx_of(lo, m), np.int32)
             nr = np.asarray(n_rows, np.int32)[pidx]
+        elif per_lane_rows:
+            rows_c = {k: np.asarray(v)[lo:lo + m]
+                      for k, v in plan_rows.items()}
+            nr = n_rows[lo:lo + m]
         if pad:
             # inert lanes: continuous power completes every row in one
             # pass; valid=False masks them out of every statistic.
@@ -1405,29 +1567,294 @@ def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
             gid = np.concatenate([gid, np.zeros(pad, np.int32)])
             if plan_mode:
                 pidx = np.concatenate([pidx, np.zeros(pad, np.int32)])
+            if nr is not None:
                 nr = np.concatenate([nr, np.zeros(pad, np.int32)])
+            if rows_c is not None:
+                # zero rows: no-op WORK rows the replay completes for
+                # free (and s_real=0 never walks them on the fused path)
+                rows_c = {k: _pad_axis0(v, pad)
+                          for k, v in rows_c.items()}
         valid = np.arange(m + pad) < m
-        peak = max(peak, _lane_io_bytes(m + pad, caps, rem0, tail, cum,
-                                        ccum, gid, valid, pidx))
-        res = _run_replay(plan_rows, caps, rem0,
-                          shared_rows="plan" if plan_mode else True,
-                          trace_cum=cum, tail_s=tail, policy=policy,
-                          theta=theta, batch_rows=batch_rows,
-                          belief_alpha=belief_alpha, charge_cum=ccum,
-                          mesh=mesh, backend=backend,
-                          n_rows=nr if plan_mode else n_rows,
-                          chunk=event_chunk, reduce=reduce,
-                          group_id=gid, valid=valid, edges=edges,
-                          n_groups=n_groups, donate=True,
-                          plan_idx=pidx, config_out=config_out)
-        if reduce == "stats":
-            part = FleetStats.from_parts(res, edges)
-            stats = part if stats is None else stats.merge(part)
+        return dict(lo=lo, m=m, pad=pad, caps=caps, rem0=rem0, tail=tail,
+                    cum=cum, ccum=ccum, gid=gid, pidx=pidx, nr=nr,
+                    rows=rows_c, valid=valid)
+
+    def chunk_bytes(c):
+        extra = (tuple(c["rows"].values()) + (c["nr"],)
+                 if c["rows"] is not None else ())
+        return _lane_io_bytes(c["m"] + c["pad"], c["caps"], c["rem0"],
+                              c["tail"], c["cum"], c["ccum"], c["gid"],
+                              c["valid"], c["pidx"], *extra)
+
+    def run_chunk(c):
+        """The legacy per-chunk dispatch (prefetch=0 and the mesh /
+        Pallas pipeline): full host prep + blocking replay via
+        ``_run_replay``."""
+        return _run_replay(
+            c["rows"] if per_lane_rows else plan_rows, c["caps"],
+            c["rem0"], shared_rows=shared_rows, trace_cum=c["cum"],
+            tail_s=c["tail"], policy=policy, theta=theta,
+            batch_rows=batch_rows, belief_alpha=belief_alpha,
+            charge_cum=c["ccum"], mesh=mesh, backend=backend,
+            n_rows=c["nr"] if (plan_mode or per_lane_rows) else n_rows,
+            chunk=event_chunk, reduce=reduce, group_id=c["gid"],
+            valid=c["valid"], edges=edges, n_groups=n_groups,
+            donate=True, plan_idx=c["pidx"], config_out=config_out)
+
+    if prefetch == 0 or len(starts) == 1:
+        # -- the legacy fully synchronous loop: generate, replay, fold,
+        # repeat.  Kept verbatim as the bit-compat differential oracle
+        # for the overlapped pipeline below.
+        acc_stats = None
+        outs: list[dict] = []
+        peak = 0
+        for lo in starts:
+            c = build(lo)
+            peak = max(peak, chunk_bytes(c))
+            res = run_chunk(c)
+            if stats:
+                part = FleetStats.from_parts(res, edges)
+                acc_stats = part if acc_stats is None \
+                    else acc_stats.merge(part)
+            else:
+                outs.append({k: v[:c["m"]] for k, v in res.items()})
+        if stats:
+            acc_stats.peak_lane_bytes = peak
+            return acc_stats
+        return {k: np.concatenate([o[k] for o in outs])
+                for k in outs[0]}, peak
+    return _overlapped_replay(plan_rows, n_rows, lane_chunk, starts,
+                              build, chunk_bytes, run_chunk, shared_rows,
+                              policy, theta, batch_rows, belief_alpha,
+                              mesh, backend, reduce, edges, n_groups,
+                              event_chunk, config_out, prefetch)
+
+
+def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
+                       starts: list, build, chunk_bytes, run_chunk,
+                       shared_rows, policy: str, theta: float,
+                       batch_rows: int, belief_alpha: float, mesh,
+                       backend: str, reduce: str, edges: dict | None,
+                       n_groups: int, event_chunk,
+                       config_out: dict | None, prefetch: int):
+    """The ``prefetch >= 1`` body of :func:`_chunked_replay`: a bounded
+    producer thread runs chunk generation + device upload ahead of the
+    replay, and (on the unmeshed XLA path) a donated device-resident
+    partial accumulates chunk statistics without per-chunk host syncs.
+    See :func:`_chunked_replay` for the contract; results are bit-exact
+    against ``prefetch=0``."""
+    import queue as queue_mod
+    import threading
+
+    from repro.kernels.charge_replay import (EVENT_CHUNK,
+                                             default_event_chunk)
+    from repro.runtime.failures import (charge_trace_nominal_from,
+                                        pad_charge_trace_columns)
+
+    from .fleetstats import partial_nbytes
+
+    plan_mode = shared_rows == "plan"
+    per_lane_rows = shared_rows is False
+    stats = reduce == "stats"
+    # The overlapped dispatch replicates _run_replay's prep so it can run
+    # on the producer thread; mesh and Pallas keep their own dispatch
+    # (stage-1 overlap only).
+    fast = mesh is None and backend != "pallas"
+    depth = prefetch + 1                    # chunks alive at once
+    tokens = threading.Semaphore(depth)
+    q: "queue_mod.Queue" = queue_mod.Queue()
+    fail = threading.Event()
+    done_sentinel = object()
+
+    first = build(starts[0])
+    prep = lambda c: c                      # noqa: E731 -- fallback path
+    dispatch = acc_merge = None
+    if fast:
+        import jax
+        import jax.numpy as jnp
+
+        adaptive = policy == "adaptive"
+        parametric = "tile_sel_cost" in plan_rows
+        stochastic = (first["ccum"] is not None
+                      or (adaptive and batch_rows > 1))
+        xla_backend = "xla" if backend == "auto" else backend
+        lane_axis = ("plan" if plan_mode
+                     else (False if shared_rows is True else True))
+        s_axis = 0 if shared_rows is True else 1
+        has_burn = False
+        rows_h = plan_rows
+        if stochastic:
+            has_burn = bool(np.any(np.asarray(plan_rows["kind"])
+                                   == KIND_BURN))
+            if not per_lane_rows:
+                # chunk-invariant: bucket + upload the row tables ONCE
+                # instead of per chunk (what _run_replay redoes per call)
+                rows_h = _bucket_rows(plan_rows, lane_axis=lane_axis)
+        s_bucket = rows_h["kind"].shape[s_axis]
+        if per_lane_rows and stochastic:
+            s_bucket = _bucket_target(s_bucket)
+        autotune = event_chunk == "auto"
+        echunk = event_chunk
+        if echunk is None or autotune:
+            echunk = (default_event_chunk(s_bucket) if stochastic
+                      else EVENT_CHUNK)
+        with _x64():
+            jrows = (None if per_lane_rows else
+                     {k: jnp.asarray(v) for k, v in rows_h.items()})
+            jtheta = jnp.asarray(float(theta), jnp.float64)
+            jwindow = jnp.asarray(float(batch_rows), jnp.float64)
+            jalpha = jnp.asarray(float(belief_alpha), jnp.float64)
+            jedges = ({k: jnp.asarray(e) for k, e in edges.items()}
+                      if stats else None)
+        donate = jax.default_backend() != "cpu"
+
+        def prep(c):  # noqa: F811
+            """Pipeline stage 1b (producer thread): stochastic trace
+            post-processing + non-blocking device upload of one built
+            chunk."""
+            L = c["m"] + c["pad"]
+            caps, rem0, ccum = c["caps"], c["rem0"], c["ccum"]
+            rows_c = c["rows"]
+            nominal_from = np.zeros(L, np.float64)
+            enable_fast = False
+            if stochastic:
+                rem0 = np.where(np.isinf(rem0), np.inf,
+                                np.floor(np.asarray(rem0, np.float64)))
+                if per_lane_rows:
+                    rows_c = _bucket_rows(rows_c, lane_axis=True)
+                if ccum is not None:
+                    ccum = pad_charge_trace_columns(ccum, caps)
+                    nominal_from = charge_trace_nominal_from(ccum, caps)
+                    enable_fast = bool(np.any(_reboot_upper_bound(
+                        rows_c if per_lane_rows else rows_h, caps,
+                        lane_axis) >= nominal_from))
+                else:
+                    enable_fast = True
+            cum = c["cum"]
+            if cum is None:
+                cum = np.zeros((L, 1), np.float64)
+            if ccum is None:
+                ccum = np.zeros((L, 1), np.float64)
+            tail = np.broadcast_to(
+                np.asarray(c["tail"], np.float64), (L,))
+            sr = (np.asarray(c["nr"], np.int32)
+                  if plan_mode or per_lane_rows
+                  else np.broadcast_to(np.asarray(n_rows, np.int32),
+                                       (L,)))
+            with _x64():
+                args = [(jrows if not per_lane_rows else
+                         {k: jnp.asarray(v) for k, v in rows_c.items()}),
+                        jnp.asarray(caps), jnp.asarray(rem0),
+                        jnp.asarray(cum), jnp.asarray(tail),
+                        jnp.asarray(ccum), jnp.asarray(nominal_from),
+                        jnp.asarray(sr), jtheta, jwindow, jalpha]
+                if plan_mode:
+                    args.append(jnp.asarray(
+                        np.asarray(c["pidx"], np.int32)))
+                extra = ((jnp.asarray(c["gid"]),
+                          jnp.asarray(c["valid"])) if stats else ())
+            return c, enable_fast, args, extra
+
+        def dispatch(item, dn, ec):  # noqa: F811
+            _, enable_fast, args, extra = item
+            if stats:
+                return _jit_replay_stats(
+                    shared_rows, adaptive, parametric, stochastic,
+                    xla_backend, ec, enable_fast, has_burn, n_groups,
+                    dn)(*args, *extra, jedges)
+            return _jit_replay(shared_rows, adaptive, parametric,
+                               stochastic, xla_backend, ec, enable_fast,
+                               has_burn)(*args)
+
+        acc_merge = _jit_merge_parts(donate)
+
+    tokens.acquire()                        # the first chunk's slot
+    item0 = prep(first)
+    if fast and autotune and stochastic and xla_backend == "xla":
+        with _x64():
+            echunk = _autotune_event_chunk(
+                (shared_rows, adaptive, parametric, stochastic,
+                 xla_backend, item0[1], has_burn,
+                 item0[2][0]["kind"].shape, lane_chunk,
+                 n_groups if stats else None), s_bucket,
+                lambda c: dispatch(item0, False, c))
+    if fast and config_out is not None:
+        config_out.update(
+            shared_rows=shared_rows, adaptive=adaptive,
+            parametric=parametric, stochastic=stochastic,
+            backend=xla_backend, chunk=echunk,
+            enable_fast=item0[1], has_burn=has_burn)
+
+    def producer():
+        try:
+            with _x64():
+                for lo in starts[1:]:
+                    tokens.acquire()
+                    if fail.is_set():
+                        return
+                    q.put(prep(build(lo)))
+            q.put(done_sentinel)
+        except BaseException as e:          # relay to the consumer
+            q.put(e)
+
+    thread = threading.Thread(target=producer, name="fleetsim-prefetch",
+                              daemon=True)
+    thread.start()
+    acc = None
+    outs: list[dict] = []
+    peak_chunk = 0
+    pending: list = []                      # unsynced partial handles
+    try:
+        if fast:
+            with _x64():
+                import jax
+                for i in range(len(starts)):
+                    item = item0 if i == 0 else q.get()
+                    if isinstance(item, BaseException):
+                        raise item
+                    c = item[0]
+                    peak_chunk = max(peak_chunk, chunk_bytes(c))
+                    res = dispatch(item, donate, echunk)
+                    if stats:
+                        acc = res if acc is None else acc_merge(acc, res)
+                        pending.append(acc)
+                        if len(pending) > prefetch:
+                            # backpressure: the (i - prefetch)-th partial
+                            # being ready means that chunk's replay has
+                            # retired -- release its pipeline slot
+                            jax.block_until_ready(pending.pop(0))
+                            tokens.release()
+                    else:
+                        outs.append({k: np.asarray(v)[:c["m"]]
+                                     for k, v in res.items()})
+                        tokens.release()
         else:
-            outs.append({k: v[:m] for k, v in res.items()})
-    if reduce == "stats":
-        stats.peak_lane_bytes = peak
-        return stats
+            acc_stats = None
+            for i in range(len(starts)):
+                c = item0 if i == 0 else q.get()
+                if isinstance(c, BaseException):
+                    raise c
+                peak_chunk = max(peak_chunk, chunk_bytes(c))
+                res = run_chunk(c)
+                if stats:
+                    part = FleetStats.from_parts(res, edges)
+                    acc_stats = part if acc_stats is None \
+                        else acc_stats.merge(part)
+                else:
+                    outs.append({k: v[:c["m"]] for k, v in res.items()})
+                tokens.release()
+    except BaseException:
+        fail.set()
+        for _ in range(depth):              # unblock a waiting producer
+            tokens.release()
+        raise
+    thread.join()
+    peak = (peak_chunk * min(depth, len(starts))
+            + (partial_nbytes(edges, n_groups) if stats else 0))
+    if stats:
+        st = (FleetStats.from_parts(acc, edges) if fast else acc_stats)
+        st.peak_lane_bytes = peak
+        return st
     return {k: np.concatenate([o[k] for o in outs])
             for k in outs[0]}, peak
 
@@ -1456,7 +1883,8 @@ def replay_plans(plans: list[FleetPlan],
                  recharge_cv: float = 0.25, trace_reboots: int = 0,
                  charge_cv: float = 0.0, charge_bias_cv: float = 0.0,
                  charge_reboots: int = 0, lane_lo: int = 0,
-                 event_chunk: int | None = None
+                 event_chunk=None, lane_chunk: int | None = None,
+                 prefetch: int = DEFAULT_PREFETCH
                  ) -> list[ReplayOut] | FleetStats:
     """Replay many plans in one jitted vmap'd call (one lane per plan).
 
@@ -1501,7 +1929,16 @@ def replay_plans(plans: list[FleetPlan],
     arbitrary ``lane_lo`` offsets.  Explicitly-passed ``init_frac``/
     ``recharge_traces``/``charge_traces`` override the corresponding
     drawn inputs.  ``event_chunk`` overrides the plan-shape-derived
-    event-stream chunk length (``kernels.charge_replay``)."""
+    event-stream chunk length (``kernels.charge_replay``).
+
+    ``lane_chunk=`` streams the plan-lane axis through that many lanes
+    at a time (the memory-flat path of :func:`fleet_sweep`, here with a
+    *per-lane* row batch): explicit ``recharge_traces``/
+    ``charge_traces`` matrices -- and the drawn ``seed=`` streams --
+    are sliced per chunk, so the chunked replay is bit-exact against
+    the unchunked call on the same inputs.  ``prefetch`` selects the
+    overlapped pipeline depth (see :func:`_chunked_replay`;
+    ``prefetch=0`` is the synchronous loop)."""
     from repro.runtime.failures import (charge_capacity_jitter_stream,
                                         charge_trace_cumulative,
                                         harvest_jitter_stream,
@@ -1550,21 +1987,45 @@ def replay_plans(plans: list[FleetPlan],
                 f"charge_traces must be (len(plans), R) = "
                 f"({len(plans)}, R), got {charge_traces.shape}")
         ccum = charge_trace_cumulative(charge_traces)
+    n_rows_arr = np.asarray([len(p) for p in plans], np.int32)
+    t0 = time.perf_counter()
+    edges = None
     if reduce == "stats":
         edges = stats_edges if stats_edges is not None else \
             default_stat_edges(
                 max(p.total_cycles for p in plans),
                 np.asarray([p.capacity for p in plans]),
                 np.asarray([p.recharge_s for p in plans]), stats_bins)
-        t0 = time.perf_counter()
+    if lane_chunk is not None:
+        # Stream the plan-lane axis: every per-lane input -- the
+        # explicit/drawn trace matrices included -- is built once for
+        # the full batch above and sliced per chunk, so chunked results
+        # are bit-exact against the unchunked call on the same inputs.
+        tail_f = np.broadcast_to(np.asarray(tail, np.float64),
+                                 (len(plans),))
+
+        def make_inputs(lo, m):
+            return (caps[lo:lo + m], rem0[lo:lo + m], tail_f[lo:lo + m],
+                    None if cum is None else cum[lo:lo + m],
+                    None if ccum is None else ccum[lo:lo + m])
+
+        res = _chunked_replay(
+            _pad_stack(plans), n_rows_arr, len(plans), lane_chunk,
+            make_inputs, lambda lo, m: np.zeros(m, np.int32), policy,
+            theta, batch_rows, belief_alpha, None, backend, reduce,
+            edges, 1, event_chunk=event_chunk, shared_rows=False,
+            prefetch=prefetch)
+        if reduce == "stats":
+            res.wall_s = time.perf_counter() - t0
+            return res
+        out, _peak = res
+    elif reduce == "stats":
         parts = _run_replay(_pad_stack(plans), caps, rem0,
                             shared_rows=False, trace_cum=cum, tail_s=tail,
                             policy=policy, theta=theta,
                             batch_rows=batch_rows,
                             belief_alpha=belief_alpha, charge_cum=ccum,
-                            backend=backend,
-                            n_rows=np.asarray([len(p) for p in plans],
-                                              np.int32),
+                            backend=backend, n_rows=n_rows_arr,
                             chunk=event_chunk, reduce="stats",
                             edges=edges)
         stats = FleetStats.from_parts(parts, edges)
@@ -1572,14 +2033,14 @@ def replay_plans(plans: list[FleetPlan],
         stats.peak_lane_bytes = _lane_io_bytes(len(plans), caps, rem0,
                                                tail, cum, ccum)
         return stats
-    out = _run_replay(_pad_stack(plans), caps, rem0, shared_rows=False,
-                      trace_cum=cum, tail_s=tail, policy=policy,
-                      theta=theta, batch_rows=batch_rows,
-                      belief_alpha=belief_alpha, charge_cum=ccum,
-                      backend=backend,
-                      n_rows=np.asarray([len(p) for p in plans],
-                                        np.int32),
-                      chunk=event_chunk)
+    else:
+        out = _run_replay(_pad_stack(plans), caps, rem0,
+                          shared_rows=False, trace_cum=cum, tail_s=tail,
+                          policy=policy, theta=theta,
+                          batch_rows=batch_rows,
+                          belief_alpha=belief_alpha, charge_cum=ccum,
+                          backend=backend, n_rows=n_rows_arr,
+                          chunk=event_chunk)
     results = []
     for i, p in enumerate(plans):
         by_class = {op: float(v) for op, v in
@@ -1779,7 +2240,8 @@ def _design_sweep(ps: PlanSet, n_devices: int, seed: int,
                   charge_bias_cv: float, charge_reboots: int, mesh,
                   backend: str, reduce: str, lane_chunk: int | None,
                   stats_bins: int, stats_edges: dict | None,
-                  event_chunk: int | None, t0: float):
+                  event_chunk, t0: float,
+                  prefetch: int = DEFAULT_PREFETCH):
     """One compiled replay over a whole :class:`PlanSet` design space.
 
     Lanes are plan-major (``lane = p * n_devices + d``).  Unchunked, each
@@ -1843,7 +2305,8 @@ def _design_sweep(ps: PlanSet, n_devices: int, seed: int,
             ps.rows, ps.n_rows, lanes, lane_chunk, make_inputs, plan_of,
             policy, theta, batch_rows, belief_alpha, mesh, backend,
             reduce, edges, n_plans, event_chunk=event_chunk,
-            plan_idx_of=plan_of, config_out=config_out)
+            plan_idx_of=plan_of, config_out=config_out,
+            prefetch=prefetch)
         if reduce == "stats":
             res.group_labels = np.asarray(ps.labels)
             res.wall_s = time.perf_counter() - t0
@@ -1903,7 +2366,7 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
                 backend: str = "auto", reduce: str = "none",
                 lane_chunk: int | None = None, stats_bins: int = 64,
                 stats_edges: dict | None = None,
-                event_chunk: int | None = None
+                event_chunk=None, prefetch: int = DEFAULT_PREFETCH
                 ) -> "FleetSweepResult | DesignSweepResult | FleetStats":
     """Replay one (strategy, power) plan across ``n_devices`` simulated
     devices with per-device harvest-trace jitter, in one compiled pass.
@@ -1974,7 +2437,7 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
                              trace_reboots, charge_cv, charge_bias_cv,
                              charge_reboots, mesh, backend, reduce,
                              lane_chunk, stats_bins, stats_edges,
-                             event_chunk, t0)
+                             event_chunk, t0, prefetch)
     if plan is None:
         if net is None or x is None or strategy is None or power is None:
             raise ValueError("fleet_sweep needs (net, x, strategy, power) "
@@ -2017,7 +2480,7 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
             _plan_rows(plan), len(plan), n_devices, lane_chunk,
             make_inputs, lambda lo, m: np.zeros(m, np.int32), policy,
             theta, batch_rows, belief_alpha, mesh, backend, reduce,
-            edges, 1, event_chunk=event_chunk)
+            edges, 1, event_chunk=event_chunk, prefetch=prefetch)
         if reduce == "stats":
             res.wall_s = time.perf_counter() - t0
             return res
@@ -2120,7 +2583,8 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
                     mesh=None, backend: str = "auto",
                     reduce: str = "none", lane_chunk: int | None = None,
                     stats_bins: int = 64, stats_edges: dict | None = None,
-                    event_chunk: int | None = None
+                    event_chunk=None,
+                    prefetch: int = DEFAULT_PREFETCH
                     ) -> CapacitorSweepResult | FleetStats:
     """Sweep (capacitor size x device) in ONE vmapped/sharded replay of ONE
     parameterized plan -- no per-capacitor re-extraction.
@@ -2194,7 +2658,7 @@ def capacitor_sweep(net: SimNet, x: np.ndarray,
             _plan_rows(plan), len(plan), lanes, lane_chunk, make_inputs,
             lambda lo, m: (lo + np.arange(m)) // n_devices, policy,
             theta, batch_rows, belief_alpha, mesh, backend, reduce,
-            edges, n_caps, event_chunk=event_chunk)
+            edges, n_caps, event_chunk=event_chunk, prefetch=prefetch)
         if reduce == "stats":
             res.group_labels = capacities
             res.wall_s = time.perf_counter() - t0

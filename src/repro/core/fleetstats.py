@@ -171,6 +171,43 @@ def reduce_lane_outputs(out: dict, group_id, valid, edges: dict,
     return psums, pmins, pmaxs
 
 
+def merge_parts(a: tuple, b: tuple) -> tuple:
+    """In-jit associative merge of two ``(psums, pmins, pmaxs)`` partials
+    (the return shape of :func:`reduce_lane_outputs`): sums add, mins
+    take the elementwise minimum, maxs the maximum.
+
+    This is the device-resident accumulation step of the overlapped
+    chunk pipeline (``fleetsim._chunked_replay`` with ``prefetch >= 1``):
+    instead of round-tripping every chunk's partial through
+    :meth:`FleetStats.from_parts` + host :meth:`FleetStats.merge`, the
+    running partial stays a (donated) device buffer and folds each new
+    chunk inside a tiny compiled call, so the stream never syncs to the
+    host until the final chunk.  A left fold of ``merge_parts`` performs
+    bitwise the same f64 additions in the same order as the host merge
+    loop, so the two accumulation paths are bit-exact (pinned by
+    ``tests/test_pipeline.py``).  Works on traced jnp arrays and numpy
+    arrays alike."""
+    import jax
+    import jax.numpy as jnp
+
+    (psa, pna, pxa), (psb, pnb, pxb) = a, b
+    return (jax.tree_util.tree_map(jnp.add, psa, psb),
+            jax.tree_util.tree_map(jnp.minimum, pna, pnb),
+            jax.tree_util.tree_map(jnp.maximum, pxa, pxb))
+
+
+def partial_nbytes(edges: dict, n_groups: int) -> int:
+    """Size in bytes of one ``(psums, pmins, pmaxs)`` stats partial for
+    ``n_groups`` groups under ``edges`` -- the device-resident
+    accumulator's contribution to the streamed pipeline's peak-memory
+    bound (2 chunk buffers + 1 stats buffer)."""
+    per_group = 2 + _N_CLASSES          # count, completed, class_sums
+    for ch in STAT_CHANNELS:
+        bins = np.asarray(edges[ch]).shape[0] - 1
+        per_group += 4 + bins           # sum, sumsq, min, max, hist
+    return int(n_groups * per_group * 8)
+
+
 @dataclass
 class FleetStats:
     """Fixed-size fleet summary: the streamed replacement for per-lane

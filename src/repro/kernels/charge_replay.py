@@ -101,6 +101,18 @@ def default_event_chunk(plan_rows: int) -> int:
                        1 << (int(plan_rows) - 1).bit_length())))
 
 
+def event_chunk_candidates(plan_rows: int) -> tuple:
+    """Candidate pow2 event-chunk lengths for the measured autotuner
+    (``event_chunk="auto"`` on the replay surfaces): the plan-shape
+    default plus one octave either side, clamped to the same
+    ``[64, 512]`` window and deduplicated.  The heuristic default is
+    always a member, so the autotuner can only match or beat it."""
+    base = default_event_chunk(plan_rows)
+    return tuple(sorted({
+        max(_MIN_EVENT_CHUNK, min(_MAX_EVENT_CHUNK, c))
+        for c in (base // 2, base, base * 2)}))
+
+
 def trace_window(cum, r0, r1, fallback):
     """Windowed sum of a per-lane cumulative trace over reboots (r0, r1]:
     gather-subtract inside the trace, ``fallback`` per entry past its end.
