@@ -13,13 +13,16 @@ per-strategy wall time, the streamed ``fleet_scaling`` section --
 devices/sec and peak lane-buffer bytes for ``reduce="stats"`` replays up
 to 1e7 lanes -- and the ``design_space`` section: a stacked ``PlanSet``
 of 18 candidates replayed under ONE compiled scan) so regressions are
-visible across PRs.  ``python
+visible across PRs.  Schema 8 adds the ``uplink_frontier`` section:
+information-per-joule across the named send policies with the radio
+model live (decision-5 edge-host co-simulation).  ``python
 benchmarks/fleet.py --smoke`` runs a tiny fleet and *asserts* the replay
 beats the scalar loop, that the streamed replay's peak lane-buffer bytes
-stay under a fixed budget independent of lane count, and that the
+stay under a fixed budget independent of lane count, that the
 overlapped prefetch pipeline is no slower than the sequential loop
 (0.95x floor at 1e5 lanes) within its documented 2x-single-chunk peak
-bound (the CI smoke job).
+bound, and that the uplink channels survive ``lane_chunk`` streaming
+bit-exactly (the CI smoke job).
 """
 
 from __future__ import annotations
@@ -457,6 +460,87 @@ def fleet_scaling(lane_counts=(10**4, 10**6, 10**7),
     return rows
 
 
+def uplink_frontier(n_devices: int = 512, bench: dict | None = None,
+                    verify: bool = False) -> list[tuple]:
+    """Information-per-joule frontier over send policies (decision 5).
+
+    One sonic fleet, a duty-cycled basestation, and each of the named
+    ``SEND_POLICIES`` replayed with the radio model live: the recorded
+    frontier is useful bits delivered to the host (payload bits, headers
+    excluded) per joule of *total* device energy -- the paper's IMpJ
+    metric extended across the uplink.  ``verify=True`` (the CI smoke
+    gate) additionally asserts every uplink channel survives
+    ``lane_chunk`` streaming and prefetch overlap bit-exactly."""
+    from repro.runtime import RadioModel, SEND_POLICIES, pack_radio
+
+    net, x = _device_net()
+    model = RadioModel(window_period_s=0.05, window_duty=0.3)
+    kw = dict(n_devices=n_devices, seed=7, trace_reboots=64,
+              charge_cv=FLEET_CHARGE_CV,
+              charge_reboots=FLEET_CHARGE_REBOOTS)
+    t0 = time.perf_counter()
+    points, rows = [], []
+    chunk_bitexact = None
+    for pol in SEND_POLICIES:
+        radio = pack_radio(model, pol)
+        r = fleet_sweep(net, x, "sonic", "1mF", radio=radio, **kw)
+        sent = float(r.msgs_sent.sum())
+        payload_bits = 8.0 * (float(r.tx_bytes.sum())
+                              - model.header_bytes * sent)
+        energy = float(r.energy_j.sum())
+        ipj = payload_bits / energy if energy else 0.0
+        points.append({
+            "policy": pol.name,
+            "conf_hi": pol.conf_hi,
+            "conf_lo": pol.conf_lo,
+            "tx_bytes": float(r.tx_bytes.sum()),
+            "msgs_sent": int(sent),
+            "msgs_deferred": int(float(r.msgs_deferred.sum())),
+            "tx_joules": round(float(r.tx_joules.sum()), 9),
+            "total_joules": round(energy, 9),
+            "payload_bits": payload_bits,
+            "info_bits_per_joule": round(ipj, 1),
+        })
+        rows.append((
+            f"fleetsim/uplink_{pol.name}_info_per_joule",
+            round(ipj, 1),
+            f"{n_devices} sonic devices, window "
+            f"{model.window_period_s}s@{model.window_duty:.0%}: "
+            f"{sent:.0f} msgs ({points[-1]['msgs_deferred']} deferred), "
+            f"{points[-1]['tx_bytes']:.0f} B on air, radio "
+            f"{points[-1]['tx_joules']:.2e} J of "
+            f"{energy:.2e} J total"))
+        if verify and chunk_bitexact is None:
+            # the tentpole streaming claim: uplink channels must be
+            # invariant to how the lane axis is chunked and overlapped
+            ckw = dict(kw, n_devices=min(n_devices, 192), radio=radio)
+            base = fleet_sweep(net, x, "sonic", "1mF", lane_chunk=64,
+                               prefetch=0, **ckw)
+            chunk_bitexact = True
+            for vkw in (dict(lane_chunk=48, prefetch=0),
+                        dict(lane_chunk=96, prefetch=2)):
+                v = fleet_sweep(net, x, "sonic", "1mF", **vkw, **ckw)
+                for ch in ("tx_bytes", "msgs_sent", "msgs_deferred",
+                           "tx_joules", "live_s", "dead_s"):
+                    if not np.array_equal(getattr(base, ch),
+                                          getattr(v, ch)):
+                        chunk_bitexact = False
+    wall = time.perf_counter() - t0
+    if bench is not None:
+        bench.update({
+            "strategy": "sonic",
+            "devices": n_devices,
+            "charge_cv": FLEET_CHARGE_CV,
+            "window_period_s": model.window_period_s,
+            "window_duty": model.window_duty,
+            "header_bytes": model.header_bytes,
+            "points": points,
+            "chunk_bitexact": chunk_bitexact,
+            "wall_s": round(wall, 3),
+        })
+    return rows
+
+
 def adaptive_risk_frontier(n_devices: int = 256,
                            thetas=(0.25, 0.5, 0.75, 1.0, 1.5),
                            cvs=(0.0, 0.3, 0.5, 0.8),
@@ -594,9 +678,13 @@ def adaptive_risk_frontier(n_devices: int = 256,
 def write_bench(fleet: dict, capsweep: dict, frontier: dict,
                 scaling: dict | None = None,
                 design: dict | None = None,
+                uplink: dict | None = None,
                 path: Path = BENCH_PATH,
                 history: Path = HISTORY_PATH) -> None:
     payload = {
+        # schema 8: the "uplink_frontier" section (decision-5 radio co-
+        # simulation -- information-per-joule across the named send
+        # policies, with the chunk-bitexact streaming gate);
         # schema 7: fleet rows split "compile_s"/"replay_s" (warm replay
         # decides speedup_vs_scalar and the regression guard -- compile
         # noise no longer swings the headline), the scaling points run
@@ -612,13 +700,14 @@ def write_bench(fleet: dict, capsweep: dict, frontier: dict,
         # through the fused constant-trip replay; schema 3 ran it
         # deterministically (and the frontier gained the belief axis);
         # schema-2 grid entries carried no "alpha" key
-        "schema": 7,
+        "schema": 8,
         "generated_unix": round(time.time(), 1),
         "fleet": fleet,
         "tails_capacitor_sweep": capsweep,
         "adaptive_risk_frontier": frontier,
         "fleet_scaling": scaling or {},
         "design_space": design or {},
+        "uplink_frontier": uplink or {},
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")
     # One compact line per run appended to the cross-PR trajectory (the
@@ -664,6 +753,10 @@ def write_bench(fleet: dict, capsweep: dict, frontier: dict,
         "risk_ewma_recovery_max": max(recovery, default=None),
         "design_lanes_per_sec": (design or {}).get("lanes_per_sec"),
         "design_candidates": (design or {}).get("candidates"),
+        "uplink_info_per_joule": {
+            p["policy"]: p["info_bits_per_joule"]
+            for p in (uplink or {}).get("points", [])},
+        "uplink_chunk_bitexact": (uplink or {}).get("chunk_bitexact"),
     }
     with history.open("a") as fh:
         fh.write(json.dumps(line) + "\n")
@@ -680,7 +773,7 @@ def perf_regression_guard(fleet: dict, history: Path = HISTORY_PATH,
     replay throughput.  Returns the violation strings (empty list =
     pass) so the CLI can fail the bench-smoke job."""
     any_fleet = next(iter(fleet.values()), {})
-    key = (7, any_fleet.get("devices"), bool(any_fleet.get("warm")))
+    key = (8, any_fleet.get("devices"), bool(any_fleet.get("warm")))
     prior = None
     if history.exists():
         for ln in history.read_text().splitlines():
@@ -713,9 +806,11 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
                    overlap_lanes: int | None = 10**6,
                    design_devices: int = 64,
                    design_verify: bool = False,
+                   uplink_devices: int = 512,
+                   uplink_verify: bool = False,
                    warm: bool = False) -> tuple[list, dict, dict, dict,
-                                                dict, dict]:
-    """The fleetsim benchmark quintet + its BENCH_fleet.json payloads --
+                                                dict, dict, dict]:
+    """The fleetsim benchmark sextet + its BENCH_fleet.json payloads --
     the single composition shared by :func:`run` and the CLI so the
     recorded schema cannot drift between them."""
     fleet_bench: dict = {}
@@ -723,6 +818,7 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
     risk_bench: dict = {}
     scaling_bench: dict = {}
     design_bench: dict = {}
+    uplink_bench: dict = {}
     rows = (device_fleet_sweep(n_devices=n_devices,
                                scalar_sample=scalar_sample,
                                bench=fleet_bench, warm=warm)
@@ -733,6 +829,8 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
                             bench=scaling_bench)
             + design_space_sweep(n_devices=design_devices,
                                  bench=design_bench, verify=design_verify)
+            + uplink_frontier(n_devices=uplink_devices,
+                              bench=uplink_bench, verify=uplink_verify)
             + adaptive_risk_frontier(n_devices=frontier_devices,
                                      thetas=thetas, cvs=cvs, alphas=alphas,
                                      bench=risk_bench))
@@ -740,9 +838,9 @@ def _fleetsim_rows(n_devices: int = 1000, scalar_sample: int = 8,
     fleet_bench["_perf_regressions"] = perf_regression_guard(fleet_bench)
     write_bench({k: v for k, v in fleet_bench.items()
                  if not k.startswith("_")}, cap_bench, risk_bench,
-                scaling_bench, design_bench)
+                scaling_bench, design_bench, uplink_bench)
     return (rows, fleet_bench, cap_bench, risk_bench, scaling_bench,
-            design_bench)
+            design_bench, uplink_bench)
 
 
 def run() -> list[tuple]:
@@ -775,15 +873,15 @@ def main() -> None:
         # candidate individually and asserts the stacked PlanSet sweep is
         # bit-exact against the sequential replays AND compiled once.
         (rows, fleet_bench, _, risk_bench, scaling_bench,
-         design_bench) = _fleetsim_rows(
+         design_bench, uplink_bench) = _fleetsim_rows(
             n_devices=200, scalar_sample=2, n_devices_per_cap=16,
             frontier_devices=256, thetas=(0.5, 1.5), cvs=(0.0, 0.3, 0.6),
             alphas=(0.0, 0.25, 0.5), scaling_lanes=(10**4, 10**5),
             overlap_lanes=10**5, design_devices=16, design_verify=True,
-            warm=True)
+            uplink_devices=192, uplink_verify=True, warm=True)
     else:
         (rows, fleet_bench, _, risk_bench, scaling_bench,
-         design_bench) = _fleetsim_rows()
+         design_bench, uplink_bench) = _fleetsim_rows()
     for n, v, d in rows:
         print(f'{n},{v},"{d}"')
     print(f"wrote {BENCH_PATH} (+1 line in {HISTORY_PATH.name})")
@@ -841,6 +939,25 @@ def main() -> None:
         raise SystemExit(
             "stacked design-space sweep diverged from sequential "
             "per-candidate replays")
+    # uplink gates: the streamed replay must carry the uplink channels
+    # bit-exactly through lane chunking / prefetch (schema-8 claim), and
+    # the three send policies must trace an actual frontier -- distinct
+    # on-air footprints, ship-always strictly the chattiest
+    if uplink_bench.get("chunk_bitexact") is False:
+        raise SystemExit(
+            "uplink channels diverged across lane_chunk/prefetch variants")
+    up = {p["policy"]: p for p in uplink_bench.get("points", [])}
+    if len(up) >= 3:
+        tx = {n: p["tx_bytes"] for n, p in up.items()}
+        if len(set(tx.values())) != len(tx):
+            raise SystemExit(f"send policies collapsed to one point: {tx}")
+        sent = {n: p["msgs_sent"] for n, p in up.items()}
+        # ship-always talks every time (most messages, though topk-hedge
+        # can put more BYTES on air); confident-only is the quietest
+        if sent["ship-always"] != max(sent.values()) or \
+                sent["confident-only"] != min(sent.values()):
+            raise SystemExit(
+                f"send-policy message ordering broke: {sent}")
     # risk-model gate: deterministic charges never waste; jittered charges
     # under batched commits must (that is the whole point of the model)
     det = [g for g in risk_bench["grid"]

@@ -85,6 +85,34 @@ def main():
     print("\n(one compiled scan per strategy -- the scalar simulator at "
           f"~tens of ms/device would need minutes for {2 * n} runs.)")
 
+    # Close the loop to the host: give every device a radio and a duty-
+    # cycled basestation, and each completed inference takes a traced
+    # send/defer/compress decision (decision 5) charged against the same
+    # capacitor as compute.  The three send policies trade messages for
+    # energy -- the information-per-joule frontier the paper's IMpJ metric
+    # becomes once the uplink is simulated rather than assumed free.
+    from repro.runtime import RadioModel, SEND_POLICIES, pack_radio
+    basestation = RadioModel(window_period_s=0.05, window_duty=0.3)
+    print(f"\nuplink co-simulation: {n} sonic devices, basestation "
+          f"listening {basestation.window_duty:.0%} of every "
+          f"{basestation.window_period_s * 1e3:.0f} ms:")
+    print(f"  {'policy':16s} {'sent':>5s} {'defer':>6s} {'bytes':>7s} "
+          f"{'radio uJ':>9s} {'bits/J':>10s}")
+    for pol in SEND_POLICIES:
+        r = fleet_sweep(net, x, "sonic", "1mF", n_devices=n, seed=42,
+                        trace_reboots=64,
+                        radio=pack_radio(basestation, pol))
+        u = r.summary()["uplink"]
+        bits = 8.0 * (u["tx_bytes"]
+                      - basestation.header_bytes * u["msgs_sent"])
+        print(f"  {pol.name:16s} {u['msgs_sent']:5d} "
+              f"{u['msgs_deferred']:6d} {u['tx_bytes']:7.0f} "
+              f"{u['tx_joules'] * 1e6:9.2f} "
+              f"{bits / r.energy_j.sum():10.0f}")
+    print("(a send waking into a closed window defers -- dead time, no "
+          "energy; a send torn by a power failure re-pays its preamble "
+          "after the reboot, like any other atomic row.)")
+
     # Plan IR v2: the whole (networks x tile-k x capacitors) design space
     # as ONE PlanSet replay.  Every candidate -- original vs GENESIS-
     # compressed network, task tiling vs SONIC vs TAILS, three capacitor

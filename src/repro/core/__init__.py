@@ -13,10 +13,10 @@ from .energy import (CostTable, Device, DeviceStats, LEA_COSTS,
                      SOFTWARE_COSTS, class_cycle_vector, custom_power_system,
                      make_power_system)
 from .fleetsim import (CapacitorSweepResult, DesignSweepResult, FleetPlan,
-                       FleetSweepResult, PlanSet, REPLAY_POLICIES,
-                       REPLAY_REDUCES, ReplayOut, build_plan,
-                       capacitor_sweep, fleet_evaluate, fleet_sweep,
-                       replay_plans)
+                       FleetSweepResult, KIND_SEND, PlanSet,
+                       REPLAY_POLICIES, REPLAY_REDUCES, ReplayOut,
+                       build_plan, capacitor_sweep, fleet_evaluate,
+                       fleet_sweep, replay_plans, with_uplink)
 from .fleetstats import (FleetStats, STAT_CHANNELS, default_stat_edges,
                          stats_from_outputs)
 from .imp import AppModel, WILDLIFE, accuracy_sweep
@@ -27,7 +27,8 @@ from .nvstore import NVStore
 __all__ = [
     "AppModel", "CapacitorSweepResult", "Conv2D", "CostTable", "DenseFC",
     "DesignSweepResult", "Device", "DeviceStats", "FleetPlan",
-    "FleetStats", "FleetSweepResult", "LEA_COSTS", "LoopOrderedBuffer",
+    "FleetStats", "FleetSweepResult", "KIND_SEND", "LEA_COSTS",
+    "LoopOrderedBuffer",
     "MaxPool2D", "NVStore", "NonTermination", "OP_CLASSES",
     "POWER_SYSTEMS", "PlanSet", "PowerFailure", "PowerSystem",
     "REPLAY_POLICIES", "REPLAY_REDUCES",
@@ -37,4 +38,5 @@ __all__ = [
     "class_cycle_vector", "custom_power_system", "default_stat_edges",
     "evaluate", "fleet_evaluate", "fleet_sweep", "make_power_system",
     "replay_plans", "run_intermittent", "stats_from_outputs",
+    "with_uplink",
 ]

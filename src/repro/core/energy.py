@@ -78,6 +78,13 @@ class CostTable:
                                     # software: shift+saturate (LEA lacks
                                     # vector left-shift; Sec. 9.2). Charged
                                     # twice per element (pre+post).
+    # -- Uplink radio.  TX energy is booked in cycle units like everything
+    # else (1 cycle = 62.5 pJ); the per-send cycle count comes from the
+    # radio model (``runtime.radio``), so the table cost is 1.0 and the
+    # "count" is the send's total cycles.  Appended last so the class
+    # indices of every earlier field stay stable across the fleet
+    # simulator's packed per-class vectors.
+    radio: float = 1.0              # uplink TX (wakeup + per-byte cycles)
 
     def scaled(self, **kw) -> "CostTable":
         return dataclasses.replace(self, **kw)

@@ -12,7 +12,7 @@ whole Fig. 9 strategy x power matrix -- and million-device fleet sweeps with
 per-device harvest traces -- run in one compiled ``vmap`` (optionally
 ``shard_map``) pass.
 
-The plan is a *parameterized IR*: rows describe the work, while four
+The plan is a *parameterized IR*: rows describe the work, while five
 run-time decisions are taken per device lane **inside** ``_scan_step``:
 
 1. **TAILS tile selection** -- parameterized rows carry a per-candidate
@@ -83,6 +83,24 @@ run-time decisions are taken per device lane **inside** ``_scan_step``:
    past the trace deliver the nominal capacity.  This is the risk side of
    the energy-adaptive trade-off: with deterministic charges batching is a
    strict win, with jitter it pays for every mis-predicted commit.
+5. **Uplink send/defer/compress** -- with a radio model live
+   (``runtime.radio``) and a ``KIND_SEND`` row appended by
+   :func:`with_uplink`, each completed inference takes a traced uplink
+   decision from the lane's classifier confidence: ship the argmax class,
+   ship top-k logits, or ship nothing (policy thresholds ``conf_hi`` /
+   ``conf_lo``).  The transmission's cycles (fixed wakeup/preamble plus
+   per-byte TX, booked to the ``radio`` op class) charge the *same*
+   energy buffer as compute through the generic atomic-row machinery, so
+   a send torn by power failure rolls back and retries the full preamble
+   like any other row, and a send whose cost exceeds a nominal charge is
+   ``stuck``.  A duty-cycled basestation (``window_period_s`` /
+   ``window_duty``) adds the defer branch: a send waking into a closed
+   listen window sleeps -- dead time, no energy -- until the window
+   reopens (evaluated at the row's fresh entry only; a post-tear retry
+   transmits as soon as the buffer recharges).  Shipped bytes, completed
+   and deferred sends thread through the ``tx_bytes`` / ``msgs_sent`` /
+   ``msgs_deferred`` result channels, the streaming ``FleetStats``
+   reduction (plus derived ``tx_joules``), and the differential oracle.
 
 Plan IR v2: the stacked candidate-plan axis (``PlanSet``)
 ---------------------------------------------------------
@@ -235,6 +253,7 @@ from .nvstore import NVStore
 KIND_WORK = 0
 KIND_BURN = 1
 KIND_CALIB = 2
+KIND_SEND = 3
 
 REPLAY_POLICIES = ("fixed", "adaptive")
 
@@ -242,6 +261,7 @@ _N_CLASSES = len(OP_CLASSES)
 _CONTROL_IDX = OP_CLASSES.index("control")
 _BURN_IDX = OP_CLASSES.index("lea_mac")
 _FRAM_WRITE_IDX = OP_CLASSES.index("fram_write")
+_RADIO_IDX = OP_CLASSES.index("radio")
 _K_TILES = len(tails_tile_candidates())
 
 #: Scanned row fields shared by every plan.
@@ -296,6 +316,9 @@ class ScanState(NamedTuple):
     pend_rows: Any
     bhat: Any           # EWMA believed per-charge budget
     chg: Any            # cycles spent so far in the current charge
+    tx: Any             # uplink bytes shipped (decision 5)
+    sent: Any           # uplink transmissions completed
+    deferred: Any       # sends deferred past a closed window
 
 
 # ==========================================================================
@@ -612,12 +635,61 @@ def build_plan(net: SimNet, x: np.ndarray, strategy: str, power,
                      **buf.arrays())
 
 
+def with_uplink(plan: FleetPlan) -> FleetPlan:
+    """Append the decision-5 uplink row: one ``KIND_SEND`` row whose cost
+    the replay derives per lane at run time from the lane's classifier
+    confidence and the packed radio vector (``runtime.radio``).
+
+    The row's static cost fields are all zero (``entry_cycles=0``, so
+    ``total_cycles`` and every non-uplink consumer are unchanged, and a
+    replay without a radio model passes the row through as a no-op); its
+    single charge segment is statically classed ``radio`` so a torn
+    transmission's burned prefix books to the radio op class.  Idempotent:
+    a plan already ending in a SEND row is returned as-is.  For a
+    :class:`PlanSet`, apply per plan *before* ``from_plans``."""
+    import dataclasses
+
+    if len(plan) and plan.kind[-1] == KIND_SEND:
+        return plan
+
+    def app(a, row):
+        a = np.asarray(a)
+        return np.concatenate([a, np.asarray(row, a.dtype)[None]], axis=0)
+
+    g = plan.entry_seg_class.shape[1]
+    z = np.zeros(_N_CLASSES)
+    seg_cls = np.zeros(g, np.int32)
+    seg_cls[0] = _RADIO_IDX
+    fields = dict(
+        kind=app(plan.kind, KIND_SEND),
+        n=app(plan.n, 0.0),
+        iter_cycles=app(plan.iter_cycles, 0.0),
+        entry_cycles=app(plan.entry_cycles, 0.0),
+        iter_class=app(plan.iter_class, z),
+        entry_class=app(plan.entry_class, z),
+        commit_cycles=app(plan.commit_cycles, 0.0),
+        commit_class=app(plan.commit_class, z),
+        entry_seg_class=app(plan.entry_seg_class, seg_cls),
+        entry_seg_cycles=app(plan.entry_seg_cycles, np.zeros(g)),
+        tile_flag=app(plan.tile_flag, 0))
+    if plan.parametric:
+        fields.update(
+            tile_n=app(plan.tile_n, np.zeros(_K_TILES)),
+            tile_iter_cycles=app(plan.tile_iter_cycles,
+                                 np.zeros(_K_TILES)),
+            tile_iter_class=app(plan.tile_iter_class,
+                                np.zeros((_K_TILES, _N_CLASSES))),
+            tile_sel_cost=app(plan.tile_sel_cost, np.zeros(_K_TILES)))
+    return dataclasses.replace(plan, **fields)
+
+
 # ==========================================================================
 # Jitted replay
 # ==========================================================================
 
 def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, window, alpha,
-               adaptive, parametric, stochastic, state, row):
+               conf, radio, adaptive, parametric, stochastic, has_send,
+               state, row):
     """Advance device state over one plan row.
 
     Power failure is a state transition: the buffer's remainder is burned
@@ -661,27 +733,47 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, window, alpha,
 
     from repro.kernels.charge_replay import (ChargeState, charge_once,
                                              fast_forward, row_ctx,
-                                             trace_window)
+                                             send_defer_wait, trace_window)
 
     # `bel` is the lane's *believed* remaining budget: the device counts
     # spent cycles against its believed capacity, so within one charge the
     # belief error (believed - actual delivery) persists across rows.  On
     # the deterministic path bel == rem always (zero belief error).
     (rem, bel, live, reboots, dead, classes, wasted, stuck,
-     pend, pend_class, pend_rows, bhat, chg) = ScanState(*state)
+     pend, pend_class, pend_rows, bhat, chg, tx, sent, deferred) = \
+        ScanState(*state)
 
     # Decisions 1 + 2 (TAILS tile selection from the carried capacitor,
     # retry-side commit granularity + the nominal passability bound) are
     # shared with the fused event kernel -- one source of truth.
-    ctx = row_ctx(row, cap, theta, adaptive, parametric)
+    ctx = row_ctx(row, cap, theta, adaptive, parametric,
+                  conf=conf, radio=radio, has_send=has_send)
     k = ctx.k
 
+    # decision 5: a SEND row waking into a closed basestation window
+    # sleeps (dead time, no energy) until the window reopens.  Every
+    # legacy row step is a fresh row entry, so the check is unconditional
+    # here; the event stream applies it on fresh entries only.
+    send_wait = jnp.zeros_like(dead)
+    defer_now = jnp.asarray(False)
+    if has_send:
+        is_send = row["kind"] == KIND_SEND
+        want_send = is_send & (ctx.send_bytes > 0.0) & ~ctx.row_stuck
+        closed, wait = send_defer_wait(live, dead, radio)
+        defer_now = want_send & closed
+        send_wait = jnp.where(defer_now, wait, 0.0)
+
+    # SEND rows ride the generic atomic-row machinery (row_ctx overrode
+    # the entry cost/classes), so they enter the charge loop like WORK.
+    passthrough = row["kind"] != KIND_WORK
+    if has_send:
+        passthrough = passthrough & (row["kind"] != KIND_SEND)
     cs0 = ChargeState(
         rem=rem, bel=bel, left=ctx.n, live=live, reboots=reboots,
         classes=classes, wasted=wasted, pend=pend, pend_class=pend_class,
         pend_rows=pend_rows, bhat=bhat, chg=chg,
         debt=jnp.zeros_like(rem), debt_class=jnp.zeros_like(pend_class),
-        stuck=stuck, done=row["kind"] != KIND_WORK)
+        stuck=stuck, done=passthrough)
 
     if not stochastic:
         # -- closed form: every charge delivers exactly `cap` cycles.
@@ -759,18 +851,31 @@ def _scan_step(cap, trace_cum, tail_s, charge_cum, theta, window, alpha,
                             jnp.zeros_like(new_chg), new_chg)
 
     # -- decision 3: per-reboot dead time from the lane's recharge trace ---
-    new_dead = dead + trace_window(trace_cum, reboots, new_reboots, tail_s)
+    # (the window wait adds first as its own float step, matching the
+    # event stream's dead_base ordering bit-for-bit)
+    new_dead = (dead + send_wait) + trace_window(trace_cum, reboots,
+                                                 new_reboots, tail_s)
+
+    # -- decision 5: book TX on row completion.  A stuck SEND row (cost
+    # beyond a nominal charge) never gets its payload out.
+    new_tx, new_sent, new_deferred = tx, sent, deferred
+    if has_send:
+        adv_tx = is_send & ~ctx.row_stuck
+        new_tx = tx + jnp.where(adv_tx, ctx.send_bytes, 0.0)
+        new_sent = sent + jnp.where(adv_tx & (ctx.send_bytes > 0.0),
+                                    1.0, 0.0)
+        new_deferred = deferred + jnp.where(defer_now, 1.0, 0.0)
 
     return ScanState(new_rem, new_bel, new_live, new_reboots, new_dead,
                      new_classes, new_wasted, new_stuck, new_pend,
                      new_pend_class, new_pend_rows, new_bhat,
-                     new_chg), None
+                     new_chg, new_tx, new_sent, new_deferred), None
 
 
 def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum,
-              nominal_from, s_real, theta, window, alpha, adaptive,
-              parametric, stochastic, backend, chunk, enable_fast,
-              has_burn, plan_idx=None):
+              nominal_from, s_real, theta, window, alpha, conf, radio,
+              adaptive, parametric, stochastic, backend, chunk,
+              enable_fast, has_burn, has_send, plan_idx=None):
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -785,6 +890,7 @@ def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum,
                             window, alpha, adaptive=adaptive,
                             parametric=parametric,
                             enable_fast=enable_fast, has_burn=has_burn,
+                            has_send=has_send, conf=conf, radio=radio,
                             chunk=chunk, plan_idx=plan_idx)
 
     # Plan IR v2 on the legacy paths: gather this lane's candidate from
@@ -812,21 +918,27 @@ def _scan_one(rows, cap, rem0, trace_cum, tail_s, charge_cum,
         pend_class=jnp.zeros((_N_CLASSES,), rem0.dtype),
         pend_rows=jnp.zeros_like(rem0),               # pending rows
         bhat=cap + jnp.zeros_like(rem0),              # believed budget
-        chg=jnp.zeros_like(rem0))                     # spent this charge
+        chg=jnp.zeros_like(rem0),                     # spent this charge
+        tx=jnp.zeros_like(rem0),                      # uplink bytes
+        sent=jnp.zeros_like(rem0),
+        deferred=jnp.zeros_like(rem0))
     final, _ = lax.scan(
         lambda s, r: _scan_step(cap, trace_cum, tail_s, charge_cum, theta,
-                                window, alpha, adaptive, parametric,
-                                stochastic, s, r),
+                                window, alpha, conf, radio, adaptive,
+                                parametric, stochastic, has_send, s, r),
         state0, rows)
     return dict(live=final.live, reboots=final.reboots, dead=final.dead,
                 classes=final.classes, wasted=final.wasted,
-                stuck=final.stuck, rem=final.rem, belief=final.bhat)
+                stuck=final.stuck, rem=final.rem, belief=final.bhat,
+                tx_bytes=final.tx, msgs_sent=final.sent,
+                msgs_deferred=final.deferred)
 
 
 @lru_cache(maxsize=None)
 def _vmap_replay(shared_rows, adaptive: bool, parametric: bool,
                  stochastic: bool, backend: str, chunk: int,
-                 enable_fast: bool, has_burn: bool):
+                 enable_fast: bool, has_burn: bool,
+                 has_send: bool = False):
     """The vmapped replay.  ``shared_rows=False``: rows, caps, rem0, traces
     all batched on axis 0 (one lane per plan -- the Fig. 9 matrix).
     ``shared_rows=True``: one plan broadcast across every device lane (fleet
@@ -847,20 +959,21 @@ def _vmap_replay(shared_rows, adaptive: bool, parametric: bool,
     if shared_rows == "plan":
         return jax.vmap(
             lambda rows, cap, rem0, tc, ts, ccum, nf, sr, theta, window,
-            alpha, pidx:
+            alpha, conf, radio, pidx:
             _scan_one(rows, cap, rem0, tc, ts, ccum, nf, sr, theta,
-                      window, alpha, adaptive, parametric, stochastic,
-                      backend, chunk, enable_fast, has_burn,
-                      plan_idx=pidx),
-            in_axes=(None, 0, 0, 0, 0, 0, 0, 0, None, None, None, 0))
+                      window, alpha, conf, radio, adaptive, parametric,
+                      stochastic, backend, chunk, enable_fast, has_burn,
+                      has_send, plan_idx=pidx),
+            in_axes=(None, 0, 0, 0, 0, 0, 0, 0, None, None, None, 0,
+                     None, 0))
     in_axes = ((None if shared_rows else 0), 0, 0, 0, 0, 0, 0, 0, None,
-               None, None)
+               None, None, 0, None)
     return jax.vmap(
         lambda rows, cap, rem0, tc, ts, ccum, nf, sr, theta, window,
-        alpha:
+        alpha, conf, radio:
         _scan_one(rows, cap, rem0, tc, ts, ccum, nf, sr, theta, window,
-                  alpha, adaptive, parametric, stochastic, backend,
-                  chunk, enable_fast, has_burn),
+                  alpha, conf, radio, adaptive, parametric, stochastic,
+                  backend, chunk, enable_fast, has_burn, has_send),
         in_axes=in_axes)
 
 
@@ -868,11 +981,11 @@ def _vmap_replay(shared_rows, adaptive: bool, parametric: bool,
 def _jit_replay(shared_rows, adaptive: bool, parametric: bool,
                 stochastic: bool, backend: str = "xla",
                 chunk: int = 128, enable_fast: bool = False,
-                has_burn: bool = False):
+                has_burn: bool = False, has_send: bool = False):
     import jax
     return jax.jit(_vmap_replay(shared_rows, adaptive, parametric,
                                 stochastic, backend, chunk, enable_fast,
-                                has_burn))
+                                has_burn, has_send))
 
 
 @lru_cache(maxsize=None)
@@ -880,7 +993,7 @@ def _jit_sharded_replay(mesh, shared_rows, adaptive: bool,
                         parametric: bool, stochastic: bool,
                         backend: str = "xla", chunk: int = 128,
                         enable_fast: bool = False,
-                        has_burn: bool = False):
+                        has_burn: bool = False, has_send: bool = False):
     """The replay wrapped in ``shard_map`` over the fleet's device axis:
     per-lane inputs/outputs split across the mesh, plan rows replicated
     (the whole stacked candidate batch under ``shared_rows="plan"``, with
@@ -893,11 +1006,11 @@ def _jit_sharded_replay(mesh, shared_rows, adaptive: bool,
     from repro.launch.mesh import compat_shard_map
 
     fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
-                      backend, chunk, enable_fast, has_burn)
+                      backend, chunk, enable_fast, has_burn, has_send)
     lane = P("devices")
     rows_spec = lane if shared_rows is False else P()
     in_specs = (rows_spec, lane, lane, lane, lane, lane, lane, lane,
-                P(), P(), P())
+                P(), P(), P(), lane, P())
     if shared_rows == "plan":
         in_specs += (lane,)
     return jax.jit(compat_shard_map(
@@ -908,7 +1021,7 @@ def _jit_sharded_replay(mesh, shared_rows, adaptive: bool,
 def _jit_replay_stats(shared_rows, adaptive: bool, parametric: bool,
                       stochastic: bool, backend: str, chunk: int,
                       enable_fast: bool, has_burn: bool, n_groups: int,
-                      donate: bool):
+                      donate: bool, has_send: bool = False):
     """The replay with the fleet-statistics reduction fused into the same
     jit: per-lane outputs are folded to ``(psums, pmins, pmaxs)`` partials
     (``core.fleetstats``) before they ever leave the compiled call, and
@@ -922,25 +1035,27 @@ def _jit_replay_stats(shared_rows, adaptive: bool, parametric: bool,
     from .fleetstats import reduce_lane_outputs
 
     fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
-                      backend, chunk, enable_fast, has_burn)
+                      backend, chunk, enable_fast, has_burn, has_send)
 
+    # NB: `radio` is never donated -- the overlapped pipeline hoists one
+    # packed radio vector and reuses it across every chunk's call.
     if shared_rows == "plan":
         def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
-                alpha, pidx, gid, valid, edges):
+                alpha, conf, radio, pidx, gid, valid, edges):
             out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta,
-                     window, alpha, pidx)
+                     window, alpha, conf, radio, pidx)
             return reduce_lane_outputs(out, gid, valid, edges, n_groups)
 
-        dn = (1, 2, 3, 4, 5, 6, 7, 11, 12, 13) if donate else ()
+        dn = (1, 2, 3, 4, 5, 6, 7, 11, 13, 14, 15) if donate else ()
         return jax.jit(run, donate_argnums=dn)
 
     def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window, alpha,
-            gid, valid, edges):
+            conf, radio, gid, valid, edges):
         out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
-                 alpha)
+                 alpha, conf, radio)
         return reduce_lane_outputs(out, gid, valid, edges, n_groups)
 
-    dn = (1, 2, 3, 4, 5, 6, 7, 11, 12) if donate else ()
+    dn = (1, 2, 3, 4, 5, 6, 7, 11, 13, 14) if donate else ()
     return jax.jit(run, donate_argnums=dn)
 
 
@@ -948,7 +1063,8 @@ def _jit_replay_stats(shared_rows, adaptive: bool, parametric: bool,
 def _jit_sharded_replay_stats(mesh, shared_rows, adaptive: bool,
                               parametric: bool, stochastic: bool,
                               backend: str, chunk: int, enable_fast: bool,
-                              has_burn: bool, n_groups: int):
+                              has_burn: bool, n_groups: int,
+                              has_send: bool = False):
     """Sharded replay + in-shard stats reduction + cross-shard all-reduce:
     each shard folds its lanes into partials and ``fleet_all_reduce``
     (psum/pmin/pmax over the ``devices`` axis) leaves every shard holding
@@ -963,30 +1079,30 @@ def _jit_sharded_replay_stats(mesh, shared_rows, adaptive: bool,
     from .fleetstats import reduce_lane_outputs
 
     fn = _vmap_replay(shared_rows, adaptive, parametric, stochastic,
-                      backend, chunk, enable_fast, has_burn)
+                      backend, chunk, enable_fast, has_burn, has_send)
 
     lane = P("devices")
     rows_spec = lane if shared_rows is False else P()
     if shared_rows == "plan":
         def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
-                alpha, pidx, gid, valid, edges):
+                alpha, conf, radio, pidx, gid, valid, edges):
             out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta,
-                     window, alpha, pidx)
+                     window, alpha, conf, radio, pidx)
             parts = reduce_lane_outputs(out, gid, valid, edges, n_groups)
             return fleet_all_reduce(parts, "devices")
 
         in_specs = (rows_spec, lane, lane, lane, lane, lane, lane, lane,
-                    P(), P(), P(), lane, lane, lane, P())
+                    P(), P(), P(), lane, P(), lane, lane, lane, P())
     else:
         def run(rows, caps, rem0, tc, ts, ccum, nf, sr, theta, window,
-                alpha, gid, valid, edges):
+                alpha, conf, radio, gid, valid, edges):
             out = fn(rows, caps, rem0, tc, ts, ccum, nf, sr, theta,
-                     window, alpha)
+                     window, alpha, conf, radio)
             parts = reduce_lane_outputs(out, gid, valid, edges, n_groups)
             return fleet_all_reduce(parts, "devices")
 
         in_specs = (rows_spec, lane, lane, lane, lane, lane, lane, lane,
-                    P(), P(), P(), lane, lane, P())
+                    P(), P(), P(), lane, P(), lane, lane, P())
     return jax.jit(compat_shard_map(
         run, mesh, in_specs=in_specs, out_specs=P()))
 
@@ -1264,9 +1380,11 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 edges: dict | None = None, n_groups: int = 1,
                 donate: bool = False,
                 plan_idx: np.ndarray | None = None,
+                conf: np.ndarray | None = None, radio=None,
                 config_out: dict | None = None) -> dict | tuple:
     from repro.runtime.failures import (charge_trace_nominal_from,
                                         pad_charge_trace_columns)
+    from repro.runtime.radio import N_RADIO, radio_vector
 
     _validate_replay_knobs(policy, batch_rows, belief_alpha, backend,
                            reduce)
@@ -1285,6 +1403,14 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
     n_lanes = caps.shape[0]
     parametric = "tile_sel_cost" in rows
     adaptive = policy == "adaptive"
+    # decision 5 is live iff a radio model is supplied AND the plan has
+    # SEND rows; the static flag keeps radio arithmetic out of every
+    # other replay's compiled body.
+    has_send = radio is not None and bool(np.any(rows["kind"] == KIND_SEND))
+    radio_vec = radio_vector(radio) if radio is not None \
+        else np.zeros(N_RADIO, np.float64)
+    if conf is None:
+        conf = np.zeros(n_lanes, np.float64)
     # Cross-charge batching needs the charge boundaries even without a
     # capacity trace: route it through the charge-by-charge path, where a
     # missing trace degenerates to all-nominal refills.
@@ -1345,7 +1471,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
             shared_rows=shared_rows, adaptive=adaptive,
             parametric=parametric, stochastic=stochastic,
             backend="xla" if backend == "pallas" else backend,
-            chunk=chunk, enable_fast=enable_fast, has_burn=has_burn)
+            chunk=chunk, enable_fast=enable_fast, has_burn=has_burn,
+            has_send=has_send)
     if trace_cum is None:
         trace_cum = np.zeros((n_lanes, 1), np.float64)
     if charge_cum is None:
@@ -1367,7 +1494,10 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 jnp.asarray(s_real),
                 jnp.asarray(float(theta), jnp.float64),
                 jnp.asarray(float(batch_rows), jnp.float64),
-                jnp.asarray(float(belief_alpha), jnp.float64)]
+                jnp.asarray(float(belief_alpha), jnp.float64),
+                jnp.asarray(np.broadcast_to(
+                    np.asarray(conf, np.float64), (n_lanes,))),
+                jnp.asarray(radio_vec)]
         if plan_mode:
             args.append(jnp.asarray(np.asarray(plan_idx, np.int32)))
         stats = reduce == "stats"
@@ -1388,15 +1518,16 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                     return _jit_replay_stats(
                         shared_rows, adaptive, parametric, stochastic,
                         backend, c, enable_fast, has_burn, n_groups,
-                        False)(*args, gid, vld, jedges)
+                        False, has_send)(*args, gid, vld, jedges)
                 return _jit_replay(shared_rows, adaptive, parametric,
                                    stochastic, backend, c, enable_fast,
-                                   has_burn)(*args)
+                                   has_burn, has_send)(*args)
 
             chunk = _autotune_event_chunk(
                 (shared_rows, adaptive, parametric, stochastic, backend,
-                 enable_fast, has_burn, rows["kind"].shape, n_lanes,
-                 n_groups if stats else None), rows["kind"].shape[s_axis],
+                 enable_fast, has_burn, has_send, rows["kind"].shape,
+                 n_lanes, n_groups if stats else None),
+                rows["kind"].shape[s_axis],
                 _time_candidate)
             if config_out is not None:
                 config_out["chunk"] = chunk
@@ -1410,7 +1541,8 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                                  parametric=parametric,
                                  shared_rows=shared_rows,
                                  enable_fast=enable_fast,
-                                 has_burn=has_burn, chunk=chunk)
+                                 has_burn=has_burn, has_send=has_send,
+                                 chunk=chunk)
             if stats:
                 parts = _jit_reduce_only(n_groups)(out, gid, vld, jedges)
                 return jax.tree_util.tree_map(np.asarray, parts)
@@ -1421,11 +1553,11 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 parts = _jit_replay_stats(
                     shared_rows, adaptive, parametric, stochastic,
                     xla_backend, chunk, enable_fast, has_burn, n_groups,
-                    donate)(*args, gid, vld, jedges)
+                    donate, has_send)(*args, gid, vld, jedges)
                 return jax.tree_util.tree_map(np.asarray, parts)
             out = _jit_replay(shared_rows, adaptive, parametric,
                               stochastic, xla_backend, chunk,
-                              enable_fast, has_burn)(*args)
+                              enable_fast, has_burn, has_send)(*args)
             return {k: np.asarray(v) for k, v in out.items()}
         # shard_map: pad the lane axis to a mesh multiple with inert
         # continuous lanes (cap = rem0 = inf completes every row in one
@@ -1441,10 +1573,13 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
                 args[i] = jnp.concatenate(
                     [args[i], jnp.full((pad,) + args[i].shape[1:], fill,
                                        args[i].dtype)], axis=0)
+            # conf pads with zeros (s_real=0 lanes never take a decision)
+            args[11] = jnp.concatenate(
+                [args[11], jnp.zeros(pad, args[11].dtype)])
             if plan_mode:
                 # pad lanes point at candidate 0; s_real=0 skips them
-                args[11] = jnp.concatenate(
-                    [args[11], jnp.zeros(pad, args[11].dtype)])
+                args[13] = jnp.concatenate(
+                    [args[13], jnp.zeros(pad, args[13].dtype)])
             if shared_rows is False:
                 args[0] = {k: jnp.concatenate(
                     [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
@@ -1457,22 +1592,22 @@ def _run_replay(rows: dict, caps: np.ndarray, rem0: np.ndarray,
             parts = _jit_sharded_replay_stats(
                 mesh, shared_rows, adaptive, parametric, stochastic,
                 xla_backend, chunk, enable_fast, has_burn,
-                n_groups)(*args, gid, vld, jedges)
+                n_groups, has_send)(*args, gid, vld, jedges)
             return jax.tree_util.tree_map(np.asarray, parts)
         out = _jit_sharded_replay(mesh, shared_rows, adaptive, parametric,
                                   stochastic, xla_backend, chunk,
-                                  enable_fast, has_burn)(*args)
+                                  enable_fast, has_burn, has_send)(*args)
         return {k: np.asarray(v)[:n_lanes] for k, v in out.items()}
 
 
 def _lane_io_bytes(n_lanes: int, *arrays) -> int:
     """Host-visible per-lane buffer bytes of one replay call: the per-lane
-    input arrays plus the in-jit per-lane output channels (6 f64 scalars,
-    the per-class cycle matrix, and the bool ``stuck`` flag).  This is the
-    quantity the memory-flat bench asserts is a function of the chunk
-    size, not the fleet size."""
+    input arrays plus the in-jit per-lane output channels (9 f64 scalars
+    -- including the three uplink channels -- the per-class cycle matrix,
+    and the bool ``stuck`` flag).  This is the quantity the memory-flat
+    bench asserts is a function of the chunk size, not the fleet size."""
     return (sum(a.nbytes for a in arrays if a is not None)
-            + n_lanes * (8 * (6 + _N_CLASSES) + 1))
+            + n_lanes * (8 * (9 + _N_CLASSES) + 1))
 
 
 def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
@@ -1482,7 +1617,8 @@ def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
                     edges: dict | None, n_groups: int,
                     event_chunk=None, plan_idx_of=None,
                     config_out: dict | None = None,
-                    prefetch: int = DEFAULT_PREFETCH, shared_rows=None):
+                    prefetch: int = DEFAULT_PREFETCH, shared_rows=None,
+                    conf_of=None, radio=None):
     """Drive one replay over the device axis in fixed-size lane chunks:
     per-chunk inputs are generated on demand by ``make_inputs(lane_lo,
     m)`` (chunk-invariant counter-based samplers, so the chunking never
@@ -1544,6 +1680,8 @@ def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
         pad = lane_chunk - m if n_lanes > lane_chunk else 0
         caps, rem0, tail, cum, ccum = make_inputs(lo, m)
         gid = np.asarray(group_id_of(lo, m), np.int32)
+        cnf = (np.asarray(conf_of(lo, m), np.float64)
+               if conf_of is not None else None)
         pidx = nr = rows_c = None
         if plan_mode:
             pidx = np.asarray(plan_idx_of(lo, m), np.int32)
@@ -1565,6 +1703,8 @@ def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
                 ccum = np.concatenate(
                     [ccum, np.zeros((pad, ccum.shape[1]))])
             gid = np.concatenate([gid, np.zeros(pad, np.int32)])
+            if cnf is not None:
+                cnf = np.concatenate([cnf, np.zeros(pad)])
             if plan_mode:
                 pidx = np.concatenate([pidx, np.zeros(pad, np.int32)])
             if nr is not None:
@@ -1577,14 +1717,14 @@ def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
         valid = np.arange(m + pad) < m
         return dict(lo=lo, m=m, pad=pad, caps=caps, rem0=rem0, tail=tail,
                     cum=cum, ccum=ccum, gid=gid, pidx=pidx, nr=nr,
-                    rows=rows_c, valid=valid)
+                    rows=rows_c, valid=valid, conf=cnf)
 
     def chunk_bytes(c):
         extra = (tuple(c["rows"].values()) + (c["nr"],)
                  if c["rows"] is not None else ())
         return _lane_io_bytes(c["m"] + c["pad"], c["caps"], c["rem0"],
                               c["tail"], c["cum"], c["ccum"], c["gid"],
-                              c["valid"], c["pidx"], *extra)
+                              c["valid"], c["pidx"], c["conf"], *extra)
 
     def run_chunk(c):
         """The legacy per-chunk dispatch (prefetch=0 and the mesh /
@@ -1599,7 +1739,8 @@ def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
             n_rows=c["nr"] if (plan_mode or per_lane_rows) else n_rows,
             chunk=event_chunk, reduce=reduce, group_id=c["gid"],
             valid=c["valid"], edges=edges, n_groups=n_groups,
-            donate=True, plan_idx=c["pidx"], config_out=config_out)
+            donate=True, plan_idx=c["pidx"], conf=c["conf"], radio=radio,
+            config_out=config_out)
 
     if prefetch == 0 or len(starts) == 1:
         # -- the legacy fully synchronous loop: generate, replay, fold,
@@ -1627,7 +1768,7 @@ def _chunked_replay(plan_rows: dict, n_rows, n_lanes: int,
                               build, chunk_bytes, run_chunk, shared_rows,
                               policy, theta, batch_rows, belief_alpha,
                               mesh, backend, reduce, edges, n_groups,
-                              event_chunk, config_out, prefetch)
+                              event_chunk, config_out, prefetch, radio)
 
 
 def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
@@ -1636,7 +1777,8 @@ def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
                        batch_rows: int, belief_alpha: float, mesh,
                        backend: str, reduce: str, edges: dict | None,
                        n_groups: int, event_chunk,
-                       config_out: dict | None, prefetch: int):
+                       config_out: dict | None, prefetch: int,
+                       radio=None):
     """The ``prefetch >= 1`` body of :func:`_chunked_replay`: a bounded
     producer thread runs chunk generation + device upload ahead of the
     replay, and (on the unmeshed XLA path) a donated device-resident
@@ -1673,11 +1815,21 @@ def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
         import jax
         import jax.numpy as jnp
 
+        from repro.runtime.radio import N_RADIO, radio_vector
+
         adaptive = policy == "adaptive"
         parametric = "tile_sel_cost" in plan_rows
         stochastic = (first["ccum"] is not None
                       or (adaptive and batch_rows > 1))
         xla_backend = "xla" if backend == "auto" else backend
+        # Uplink operands are chunk-invariant: the packed radio vector is
+        # hoisted and reused across every chunk's call (it is never
+        # donated -- see _jit_replay_stats).
+        has_send = (radio is not None
+                    and bool(np.any(np.asarray(plan_rows["kind"])
+                                    == KIND_SEND)))
+        radio_vec = (radio_vector(radio) if radio is not None
+                     else np.zeros(N_RADIO, np.float64))
         lane_axis = ("plan" if plan_mode
                      else (False if shared_rows is True else True))
         s_axis = 0 if shared_rows is True else 1
@@ -1704,6 +1856,7 @@ def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
             jtheta = jnp.asarray(float(theta), jnp.float64)
             jwindow = jnp.asarray(float(batch_rows), jnp.float64)
             jalpha = jnp.asarray(float(belief_alpha), jnp.float64)
+            jradio = jnp.asarray(radio_vec)
             jedges = ({k: jnp.asarray(e) for k, e in edges.items()}
                       if stats else None)
         donate = jax.default_backend() != "cpu"
@@ -1741,13 +1894,16 @@ def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
                   if plan_mode or per_lane_rows
                   else np.broadcast_to(np.asarray(n_rows, np.int32),
                                        (L,)))
+            cnf = (np.zeros(L, np.float64) if c["conf"] is None
+                   else np.asarray(c["conf"], np.float64))
             with _x64():
                 args = [(jrows if not per_lane_rows else
                          {k: jnp.asarray(v) for k, v in rows_c.items()}),
                         jnp.asarray(caps), jnp.asarray(rem0),
                         jnp.asarray(cum), jnp.asarray(tail),
                         jnp.asarray(ccum), jnp.asarray(nominal_from),
-                        jnp.asarray(sr), jtheta, jwindow, jalpha]
+                        jnp.asarray(sr), jtheta, jwindow, jalpha,
+                        jnp.asarray(cnf), jradio]
                 if plan_mode:
                     args.append(jnp.asarray(
                         np.asarray(c["pidx"], np.int32)))
@@ -1761,10 +1917,10 @@ def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
                 return _jit_replay_stats(
                     shared_rows, adaptive, parametric, stochastic,
                     xla_backend, ec, enable_fast, has_burn, n_groups,
-                    dn)(*args, *extra, jedges)
+                    dn, has_send)(*args, *extra, jedges)
             return _jit_replay(shared_rows, adaptive, parametric,
                                stochastic, xla_backend, ec, enable_fast,
-                               has_burn)(*args)
+                               has_burn, has_send)(*args)
 
         acc_merge = _jit_merge_parts(donate)
 
@@ -1774,7 +1930,7 @@ def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
         with _x64():
             echunk = _autotune_event_chunk(
                 (shared_rows, adaptive, parametric, stochastic,
-                 xla_backend, item0[1], has_burn,
+                 xla_backend, item0[1], has_burn, has_send,
                  item0[2][0]["kind"].shape, lane_chunk,
                  n_groups if stats else None), s_bucket,
                 lambda c: dispatch(item0, False, c))
@@ -1783,7 +1939,8 @@ def _overlapped_replay(plan_rows: dict, n_rows, lane_chunk: int,
             shared_rows=shared_rows, adaptive=adaptive,
             parametric=parametric, stochastic=stochastic,
             backend=xla_backend, chunk=echunk,
-            enable_fast=item0[1], has_burn=has_burn)
+            enable_fast=item0[1], has_burn=has_burn,
+            has_send=has_send)
 
     def producer():
         try:
@@ -1869,6 +2026,14 @@ class ReplayOut:
     dead_s: float = 0.0
     wasted_cycles: float = 0.0   # committed-work rollback re-execution
     belief_cycles: float = 0.0   # final EWMA believed per-charge budget
+    tx_bytes: float = 0.0        # uplink bytes shipped (decision 5)
+    msgs_sent: int = 0           # uplink transmissions completed
+    msgs_deferred: int = 0       # sends deferred past a closed window
+
+    @property
+    def tx_joules(self) -> float:
+        """Radio energy: the ``radio`` op class in joules."""
+        return self.by_class.get("radio", 0.0) * JOULES_PER_CYCLE
 
 
 def replay_plans(plans: list[FleetPlan],
@@ -1884,7 +2049,8 @@ def replay_plans(plans: list[FleetPlan],
                  charge_cv: float = 0.0, charge_bias_cv: float = 0.0,
                  charge_reboots: int = 0, lane_lo: int = 0,
                  event_chunk=None, lane_chunk: int | None = None,
-                 prefetch: int = DEFAULT_PREFETCH
+                 prefetch: int = DEFAULT_PREFETCH,
+                 radio=None, conf: np.ndarray | None = None
                  ) -> list[ReplayOut] | FleetStats:
     """Replay many plans in one jitted vmap'd call (one lane per plan).
 
@@ -1938,14 +2104,26 @@ def replay_plans(plans: list[FleetPlan],
     are sliced per chunk, so the chunked replay is bit-exact against
     the unchunked call on the same inputs.  ``prefetch`` selects the
     overlapped pipeline depth (see :func:`_chunked_replay`;
-    ``prefetch=0`` is the synchronous loop)."""
+    ``prefetch=0`` is the synchronous loop).
+
+    ``radio=`` (a ``(RadioModel, SendPolicy)`` pair or packed vector,
+    see ``runtime.radio``) turns on the decision-5 uplink: every plan is
+    run through :func:`with_uplink`, and each lane's send decision uses
+    ``conf`` (one classifier confidence per plan lane; drawn from the
+    Philox confidence stream under ``seed=``, zeros otherwise)."""
     from repro.runtime.failures import (charge_capacity_jitter_stream,
                                         charge_trace_cumulative,
                                         harvest_jitter_stream,
+                                        inference_confidence_stream,
                                         initial_charge_fraction_stream,
                                         reboot_recharge_times_stream,
                                         recharge_trace_cumulative)
 
+    if radio is not None:
+        plans = [with_uplink(p) for p in plans]
+        if conf is None and seed is not None:
+            conf = inference_confidence_stream(len(plans), seed=seed,
+                                               lane_lo=lane_lo)
     if reduce not in REPLAY_REDUCES:
         raise ValueError(f"unknown reduce mode {reduce!r}; "
                          f"expected one of {REPLAY_REDUCES}")
@@ -2009,12 +2187,17 @@ def replay_plans(plans: list[FleetPlan],
                     None if cum is None else cum[lo:lo + m],
                     None if ccum is None else ccum[lo:lo + m])
 
+        conf_f = (None if conf is None
+                  else np.broadcast_to(np.asarray(conf, np.float64),
+                                       (len(plans),)))
         res = _chunked_replay(
             _pad_stack(plans), n_rows_arr, len(plans), lane_chunk,
             make_inputs, lambda lo, m: np.zeros(m, np.int32), policy,
             theta, batch_rows, belief_alpha, None, backend, reduce,
             edges, 1, event_chunk=event_chunk, shared_rows=False,
-            prefetch=prefetch)
+            prefetch=prefetch, radio=radio,
+            conf_of=(None if conf_f is None
+                     else (lambda lo, m: conf_f[lo:lo + m])))
         if reduce == "stats":
             res.wall_s = time.perf_counter() - t0
             return res
@@ -2027,7 +2210,7 @@ def replay_plans(plans: list[FleetPlan],
                             belief_alpha=belief_alpha, charge_cum=ccum,
                             backend=backend, n_rows=n_rows_arr,
                             chunk=event_chunk, reduce="stats",
-                            edges=edges)
+                            edges=edges, conf=conf, radio=radio)
         stats = FleetStats.from_parts(parts, edges)
         stats.wall_s = time.perf_counter() - t0
         stats.peak_lane_bytes = _lane_io_bytes(len(plans), caps, rem0,
@@ -2040,17 +2223,23 @@ def replay_plans(plans: list[FleetPlan],
                           batch_rows=batch_rows,
                           belief_alpha=belief_alpha, charge_cum=ccum,
                           backend=backend, n_rows=n_rows_arr,
-                          chunk=event_chunk)
+                          chunk=event_chunk, conf=conf, radio=radio)
     results = []
     for i, p in enumerate(plans):
         by_class = {op: float(v) for op, v in
                     zip(OP_CLASSES, out["classes"][i]) if v > 0.0}
-        results.append(ReplayOut(float(out["live"][i]),
-                                 int(round(float(out["reboots"][i]))),
-                                 by_class, bool(~out["stuck"][i]),
-                                 dead_s=float(out["dead"][i]),
-                                 wasted_cycles=float(out["wasted"][i]),
-                                 belief_cycles=float(out["belief"][i])))
+        results.append(ReplayOut(
+            float(out["live"][i]),
+            int(round(float(out["reboots"][i]))),
+            by_class, bool(~out["stuck"][i]),
+            dead_s=float(out["dead"][i]),
+            wasted_cycles=float(out["wasted"][i]),
+            belief_cycles=float(out["belief"][i]),
+            tx_bytes=float(out.get("tx_bytes", np.zeros(len(plans)))[i]),
+            msgs_sent=int(round(float(
+                out.get("msgs_sent", np.zeros(len(plans)))[i]))),
+            msgs_deferred=int(round(float(
+                out.get("msgs_deferred", np.zeros(len(plans)))[i])))))
     return results
 
 
@@ -2134,6 +2323,10 @@ class FleetSweepResult:
     theta: float = 0.5
     batch_rows: int = 1
     belief_alpha: float = 0.0
+    tx_bytes: np.ndarray | None = None       # (D,) uplink bytes shipped
+    msgs_sent: np.ndarray | None = None      # (D,)
+    msgs_deferred: np.ndarray | None = None  # (D,) closed-window defers
+    tx_joules: np.ndarray | None = None      # (D,) radio energy burned
 
     @property
     def total_s(self) -> np.ndarray:
@@ -2141,7 +2334,7 @@ class FleetSweepResult:
 
     def summary(self) -> dict:
         done = self.completed
-        return {
+        out = {
             "devices": self.n_devices,
             "policy": self.policy,
             "completed": int(done.sum()),
@@ -2159,6 +2352,16 @@ class FleetSweepResult:
                 if self.belief_cycles is not None and done.any() else 0.0,
             "wall_s": round(self.wall_s, 3),
         }
+        if self.tx_bytes is not None:
+            out["uplink"] = {
+                "tx_bytes": float(self.tx_bytes.sum()),
+                "msgs_sent": int(round(float(self.msgs_sent.sum()))),
+                "msgs_deferred":
+                    int(round(float(self.msgs_deferred.sum()))),
+                "tx_joules": float(self.tx_joules.sum())
+                if self.tx_joules is not None else 0.0,
+            }
+        return out
 
 
 @dataclass
@@ -2178,6 +2381,9 @@ class DesignSweepResult:
     wall_s: float
     replay_config: tuple = ()    # _jit_replay static key of the one jit
     policy: str = "fixed"
+    tx_bytes: np.ndarray | None = None       # (P, D) uplink bytes shipped
+    msgs_sent: np.ndarray | None = None      # (P, D)
+    msgs_deferred: np.ndarray | None = None  # (P, D) closed-window defers
 
     @property
     def total_s(self) -> np.ndarray:
@@ -2218,7 +2424,14 @@ def _design_result(ps: PlanSet, n_devices: int, out: dict, t0: float,
         cfg = (config_out["shared_rows"], config_out["adaptive"],
                config_out["parametric"], config_out["stochastic"],
                config_out["backend"], config_out["chunk"],
-               config_out["enable_fast"], config_out["has_burn"])
+               config_out["enable_fast"], config_out["has_burn"],
+               config_out.get("has_send", False))
+    uplink = {}
+    if "tx_bytes" in out:
+        uplink = dict(
+            tx_bytes=np.asarray(out["tx_bytes"]).reshape(shape),
+            msgs_sent=np.asarray(out["msgs_sent"]).reshape(shape),
+            msgs_deferred=np.asarray(out["msgs_deferred"]).reshape(shape))
     return DesignSweepResult(
         labels=ps.labels, strategies=ps.strategies,
         capacities=ps.capacity, n_devices=n_devices,
@@ -2230,7 +2443,7 @@ def _design_result(ps: PlanSet, n_devices: int, out: dict, t0: float,
         wasted_cycles=out["wasted"].reshape(shape),
         belief_cycles=out["belief"].reshape(shape),
         wall_s=time.perf_counter() - t0,
-        replay_config=cfg, policy=policy)
+        replay_config=cfg, policy=policy, **uplink)
 
 
 def _design_sweep(ps: PlanSet, n_devices: int, seed: int,
@@ -2241,7 +2454,8 @@ def _design_sweep(ps: PlanSet, n_devices: int, seed: int,
                   backend: str, reduce: str, lane_chunk: int | None,
                   stats_bins: int, stats_edges: dict | None,
                   event_chunk, t0: float,
-                  prefetch: int = DEFAULT_PREFETCH):
+                  prefetch: int = DEFAULT_PREFETCH, radio=None,
+                  conf=None):
     """One compiled replay over a whole :class:`PlanSet` design space.
 
     Lanes are plan-major (``lane = p * n_devices + d``).  Unchunked, each
@@ -2260,6 +2474,8 @@ def _design_sweep(ps: PlanSet, n_devices: int, seed: int,
                                         charge_trace_cumulative,
                                         harvest_jitter,
                                         harvest_jitter_stream,
+                                        inference_confidence,
+                                        inference_confidence_stream,
                                         initial_charge_fraction,
                                         initial_charge_fraction_stream,
                                         reboot_recharge_times,
@@ -2301,12 +2517,23 @@ def _design_sweep(ps: PlanSet, n_devices: int, seed: int,
             ccum_c = charge_trace_cumulative(ctr)
             return caps_c, rem0_c, tail_c, cum_c, ccum_c
 
+        conf_of = None
+        if conf is not None:
+            conf_full = np.asarray(conf, np.float64)
+
+            def conf_of(lo, m):
+                return conf_full[lo:lo + m]
+        elif radio is not None:
+            def conf_of(lo, m):
+                return inference_confidence_stream(m, seed=seed,
+                                                   lane_lo=lo)
+
         res = _chunked_replay(
             ps.rows, ps.n_rows, lanes, lane_chunk, make_inputs, plan_of,
             policy, theta, batch_rows, belief_alpha, mesh, backend,
             reduce, edges, n_plans, event_chunk=event_chunk,
             plan_idx_of=plan_of, config_out=config_out,
-            prefetch=prefetch)
+            prefetch=prefetch, conf_of=conf_of, radio=radio)
         if reduce == "stats":
             res.group_labels = np.asarray(ps.labels)
             res.wall_s = time.perf_counter() - t0
@@ -2334,11 +2561,16 @@ def _design_sweep(ps: PlanSet, n_devices: int, seed: int,
                                 seed=seed + 3, cv=charge_cv,
                                 bias_cv=charge_bias_cv)
          for p in range(n_plans)]))
+    if radio is not None and conf is None:
+        # Per-plan legacy confidence draws, matching what each candidate
+        # would see in a standalone fleet_sweep(plan=plans[p]) replay.
+        conf = np.tile(inference_confidence(dev, seed=seed + 4), n_plans)
     common = dict(trace_cum=cum, tail_s=tail, policy=policy, theta=theta,
                   batch_rows=batch_rows, belief_alpha=belief_alpha,
                   charge_cum=ccum, mesh=mesh, backend=backend,
                   n_rows=ps.n_rows[pidx], chunk=event_chunk,
-                  plan_idx=pidx, config_out=config_out)
+                  plan_idx=pidx, config_out=config_out,
+                  conf=conf, radio=radio)
     if reduce == "stats":
         parts = _run_replay(ps.rows, caps, rem0, "plan", reduce="stats",
                             group_id=pidx, edges=edges, n_groups=n_plans,
@@ -2366,7 +2598,8 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
                 backend: str = "auto", reduce: str = "none",
                 lane_chunk: int | None = None, stats_bins: int = 64,
                 stats_edges: dict | None = None,
-                event_chunk=None, prefetch: int = DEFAULT_PREFETCH
+                event_chunk=None, prefetch: int = DEFAULT_PREFETCH,
+                radio=None, conf=None,
                 ) -> "FleetSweepResult | DesignSweepResult | FleetStats":
     """Replay one (strategy, power) plan across ``n_devices`` simulated
     devices with per-device harvest-trace jitter, in one compiled pass.
@@ -2415,12 +2648,26 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
     (``reduce="stats"``); ``net``/``x``/``strategy``/``power`` are then
     unused.  ``event_chunk`` overrides the plan-shape-derived
     event-stream chunk length (``kernels.charge_replay``).
+
+    ``radio=`` (a ``(RadioModel, SendPolicy)`` pair or a packed
+    :func:`runtime.radio.pack_radio` vector) switches on the uplink
+    decision: a :class:`FleetPlan` gets a SEND row appended
+    (:func:`with_uplink`; a :class:`PlanSet` must carry its own SEND
+    rows, applied per candidate before stacking) and each device draws a
+    classifier confidence (``conf=`` overrides; default: the legacy
+    ``inference_confidence`` draw at ``seed + 4`` unchunked, the
+    chunk-invariant ``*_stream`` draw under ``lane_chunk``) that the
+    in-scan send policy thresholds into ship-class / ship-topk / skip.
+    Results then carry the ``tx_bytes`` / ``msgs_sent`` /
+    ``msgs_deferred`` uplink channels.
     """
     from repro.runtime.failures import (charge_capacity_jitter,
                                         charge_capacity_jitter_stream,
                                         charge_trace_cumulative,
                                         harvest_jitter,
                                         harvest_jitter_stream,
+                                        inference_confidence,
+                                        inference_confidence_stream,
                                         initial_charge_fraction,
                                         initial_charge_fraction_stream,
                                         reboot_recharge_times,
@@ -2437,13 +2684,16 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
                              trace_reboots, charge_cv, charge_bias_cv,
                              charge_reboots, mesh, backend, reduce,
                              lane_chunk, stats_bins, stats_edges,
-                             event_chunk, t0, prefetch)
+                             event_chunk, t0, prefetch, radio=radio,
+                             conf=conf)
     if plan is None:
         if net is None or x is None or strategy is None or power is None:
             raise ValueError("fleet_sweep needs (net, x, strategy, power) "
                              "to build a plan, or an explicit plan= "
                              "FleetPlan / PlanSet")
         plan = build_plan(net, x, strategy, power)
+    if radio is not None:
+        plan = with_uplink(plan)
     if strategy is None:
         strategy = plan.strategy
     if power is None:
@@ -2476,11 +2726,23 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
                 ccum_c = charge_trace_cumulative(ctr)
             return caps_c, rem0_c, tail_c, cum_c, ccum_c
 
+        conf_of = None
+        if conf is not None:
+            conf_full = np.asarray(conf, np.float64)
+
+            def conf_of(lo, m):
+                return conf_full[lo:lo + m]
+        elif radio is not None:
+            def conf_of(lo, m):
+                return inference_confidence_stream(m, seed=seed,
+                                                   lane_lo=lo)
+
         res = _chunked_replay(
             _plan_rows(plan), len(plan), n_devices, lane_chunk,
             make_inputs, lambda lo, m: np.zeros(m, np.int32), policy,
             theta, batch_rows, belief_alpha, mesh, backend, reduce,
-            edges, 1, event_chunk=event_chunk, prefetch=prefetch)
+            edges, 1, event_chunk=event_chunk, prefetch=prefetch,
+            conf_of=conf_of, radio=radio)
         if reduce == "stats":
             res.wall_s = time.perf_counter() - t0
             return res
@@ -2496,7 +2758,12 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
             wasted_cycles=out["wasted"],
             belief_cycles=out["belief"],
             policy=policy, theta=theta, batch_rows=batch_rows,
-            belief_alpha=belief_alpha)
+            belief_alpha=belief_alpha,
+            tx_bytes=out.get("tx_bytes"),
+            msgs_sent=out.get("msgs_sent"),
+            msgs_deferred=out.get("msgs_deferred"),
+            tx_joules=out["classes"][..., _RADIO_IDX] * JOULES_PER_CYCLE
+            if "classes" in out else None)
     frac = initial_charge_fraction(n_devices, seed=seed)
     jit_mult = harvest_jitter(n_devices, seed=seed + 1, cv=recharge_cv)
     caps = np.full(n_devices, plan.capacity, np.float64)
@@ -2512,6 +2779,8 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
                                      plan.capacity, seed=seed + 3,
                                      cv=charge_cv, bias_cv=charge_bias_cv)
         ccum = charge_trace_cumulative(ctr)
+    if radio is not None and conf is None:
+        conf = inference_confidence(n_devices, seed=seed + 4)
     if reduce == "stats":
         # Unchunked stats: same legacy input draws as reduce="none", so
         # the reduction is bit-exactly comparable to statistics computed
@@ -2523,7 +2792,7 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
                             belief_alpha=belief_alpha, charge_cum=ccum,
                             mesh=mesh, backend=backend, n_rows=len(plan),
                             chunk=event_chunk, reduce="stats",
-                            edges=edges)
+                            edges=edges, conf=conf, radio=radio)
         stats = FleetStats.from_parts(parts, edges)
         stats.wall_s = time.perf_counter() - t0
         stats.peak_lane_bytes = _lane_io_bytes(n_devices, caps, rem0,
@@ -2534,7 +2803,7 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
                       theta=theta, batch_rows=batch_rows,
                       belief_alpha=belief_alpha, charge_cum=ccum,
                       mesh=mesh, backend=backend, n_rows=len(plan),
-                      chunk=event_chunk)
+                      chunk=event_chunk, conf=conf, radio=radio)
     return FleetSweepResult(
         strategy, power, n_devices,
         completed=~out["stuck"],
@@ -2546,7 +2815,12 @@ def fleet_sweep(net: SimNet | None = None, x: np.ndarray | None = None,
         wasted_cycles=out["wasted"],
         belief_cycles=out["belief"],
         policy=policy, theta=theta, batch_rows=batch_rows,
-        belief_alpha=belief_alpha)
+        belief_alpha=belief_alpha,
+        tx_bytes=out.get("tx_bytes"),
+        msgs_sent=out.get("msgs_sent"),
+        msgs_deferred=out.get("msgs_deferred"),
+        tx_joules=out["classes"][..., _RADIO_IDX] * JOULES_PER_CYCLE
+        if "classes" in out else None)
 
 
 @dataclass

@@ -61,11 +61,17 @@ import numpy as np
 from .energy import CLOCK_HZ, JOULES_PER_CYCLE, OP_CLASSES
 
 #: Per-lane scalar channels the reduction tracks (sum/sumsq/min/max/hist).
+#: The last four are the uplink channels (``fleetsim.KIND_SEND`` rows):
+#: they stream through ``reduce="stats"`` / ``lane_chunk`` exactly like
+#: the compute channels, so radio accounting survives the memory-flat
+#: 1e7-lane path.
 STAT_CHANNELS = ("live_cycles", "dead_s", "total_s", "reboots",
-                 "wasted_cycles", "belief_cycles")
+                 "wasted_cycles", "belief_cycles", "tx_bytes",
+                 "msgs_sent", "msgs_deferred", "tx_joules")
 
 _N_CLASSES = len(OP_CLASSES)
 _CONTROL_IDX = OP_CLASSES.index("control")
+_RADIO_IDX = OP_CLASSES.index("radio")
 
 
 def default_stat_edges(total_cycles: float, capacity: float,
@@ -100,12 +106,24 @@ def default_stat_edges(total_cycles: float, capacity: float,
         "reboots": np.linspace(0.0, reboots_hi, bins + 1),
         "wasted_cycles": np.linspace(0.0, 2.0 * total, bins + 1),
         "belief_cycles": np.linspace(0.0, 2.0 * fin_cap, bins + 1),
+        # Uplink channels: the ranges cannot see the radio model here, so
+        # they over-cover generously (one SEND row per plan ships tens of
+        # bytes; tail values clip into the end bin, min/max stay exact).
+        "tx_bytes": np.linspace(0.0, 4096.0, bins + 1),
+        "msgs_sent": np.linspace(0.0, 256.0, bins + 1),
+        "msgs_deferred": np.linspace(0.0, 256.0, bins + 1),
+        "tx_joules": np.linspace(0.0, 2.0 * total * JOULES_PER_CYCLE,
+                                 bins + 1),
     }
 
 
 def lane_channels(out: dict) -> dict:
     """The per-lane ``STAT_CHANNELS`` values of a replay output dict
-    (works on numpy arrays and on traced jnp arrays alike)."""
+    (works on numpy arrays and on traced jnp arrays alike).  Output
+    dicts predating the uplink channels (hand-built oracles) fold in as
+    all-zero; ``tx_joules`` is derived from the per-class cycle
+    breakdown rather than carried as a separate scan output."""
+    zero = out["live"] * 0.0
     return {
         "live_cycles": out["live"],
         "dead_s": out["dead"],
@@ -113,6 +131,12 @@ def lane_channels(out: dict) -> dict:
         "reboots": out["reboots"],
         "wasted_cycles": out["wasted"],
         "belief_cycles": out["belief"],
+        "tx_bytes": out["tx_bytes"] if "tx_bytes" in out else zero,
+        "msgs_sent": out["msgs_sent"] if "msgs_sent" in out else zero,
+        "msgs_deferred": out["msgs_deferred"]
+        if "msgs_deferred" in out else zero,
+        "tx_joules": out["classes"][..., _RADIO_IDX] * JOULES_PER_CYCLE
+        if "classes" in out else zero,
     }
 
 
@@ -354,6 +378,10 @@ class FleetStats:
             "mean_reboots": float(self.mean("reboots")[g]),
             "mean_wasted_cycles": float(self.mean("wasted_cycles")[g]),
             "mean_belief_cycles": float(self.mean("belief_cycles")[g]),
+            "tx_bytes": float(self.sums["tx_bytes"][g]),
+            "msgs_sent": float(self.sums["msgs_sent"][g]),
+            "msgs_deferred": float(self.sums["msgs_deferred"][g]),
+            "tx_joules": float(self.sums["tx_joules"][g]),
             "wall_s": round(self.wall_s, 3),
             "peak_lane_bytes": int(self.peak_lane_bytes),
         }

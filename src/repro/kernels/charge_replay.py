@@ -61,9 +61,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.fleetsim import (KIND_BURN, KIND_CALIB, KIND_WORK,
-                                 _BURN_IDX, _CONTROL_IDX, _K_TILES,
-                                 _N_CLASSES)
+from repro.core.fleetsim import (KIND_BURN, KIND_CALIB, KIND_SEND,
+                                 KIND_WORK, _BURN_IDX, _CONTROL_IDX,
+                                 _K_TILES, _N_CLASSES, _RADIO_IDX)
+from repro.runtime.radio import (N_RADIO, R_CLASS, R_CLK, R_CONF_HI,
+                                 R_CONF_LO, R_CPB, R_DUTY, R_HDR, R_PERIOD,
+                                 R_TOPK, R_WAKEUP)
 
 #: Fallback events per inner ``lax.scan`` trip (the deterministic paths'
 #: placeholder and the floor of :func:`default_event_chunk`'s clamp).  The
@@ -133,6 +136,52 @@ def torn_prefix(entry_class, seg_class, seg_cycles, p):
     starts = jnp.cumsum(seg_cycles) - seg_cycles
     amt = jnp.clip(p - starts, 0.0, seg_cycles)
     return jnp.zeros_like(entry_class).at[seg_class].add(amt)
+
+
+def send_message_bytes(conf, radio):
+    """Decision 5 (uplink compress): bytes shipped for one lane's
+    classifier confidence under the packed radio model/policy vector
+    (``runtime.radio``): argmax class above ``conf_hi``, top-k logits
+    above ``conf_lo``, nothing below.  Byte fields are pre-rounded to
+    whole numbers by ``pack_radio``, so the result is exact in f64."""
+    return jnp.where(conf >= radio[R_CONF_HI],
+                     radio[R_HDR] + radio[R_CLASS],
+                     jnp.where(conf >= radio[R_CONF_LO],
+                               radio[R_HDR] + radio[R_TOPK], 0.0))
+
+
+def send_cost_cycles(send_bytes, radio):
+    """Cycles one transmission costs: fixed wakeup/preamble plus per-byte
+    TX.  A skipped send (0 bytes) never wakes the radio."""
+    return jnp.where(send_bytes > 0.0,
+                     radio[R_WAKEUP] + send_bytes * radio[R_CPB], 0.0)
+
+
+def send_defer_wait(live, dead, radio):
+    """Decision 5 (uplink defer): is the duty-cycled basestation window
+    closed at the lane's current wall-clock, and how long until it
+    reopens?  The receiver listens for the first ``duty`` fraction of
+    every ``period`` seconds (``period == 0``: always listening).  The
+    lane's wall-clock is ``live / CLOCK_HZ + dead`` -- the same quantity
+    the result channels report -- evaluated at the row's fresh entry;
+    a deferring lane sleeps (dead time, no energy) until the window
+    opens.  Shared by the event stream, the legacy scan and (through
+    the reference interpreter's float mirror) the differential oracle,
+    so every path performs the identical float ops.
+
+    Two details pin the compiled arithmetic to the mirror's one-rounding-
+    per-op sequence: the clock rate comes from the runtime ``radio``
+    operand (``R_CLK``) so the divide stays a true division (a constant
+    divisor gets rewritten into a reciprocal multiply that then FMA-
+    contracts with the add), and the ``jnp.abs`` -- a value identity,
+    ``floor * ps >= 0`` -- breaks the mul->sub adjacency the CPU backend
+    would otherwise contract into an FMA."""
+    period = radio[R_PERIOD]
+    t = live / radio[R_CLK] + dead
+    ps = jnp.maximum(period, 1e-30)
+    phase = t - jnp.abs(jnp.floor(t / ps) * ps)
+    closed = (period > 0.0) & (phase >= radio[R_DUTY] * period)
+    return closed, period - phase
 
 
 def pack_rows(rows: dict):
@@ -213,10 +262,21 @@ class RowCtx(NamedTuple):
     row_stuck: jax.Array
     has_iters: jax.Array
     k: jax.Array
+    send_bytes: jax.Array
 
 
-def row_ctx(row, cap, theta, adaptive: bool, parametric: bool) -> RowCtx:
-    """Decisions 1 + 2 (retry side) for one row on one lane."""
+def row_ctx(row, cap, theta, adaptive: bool, parametric: bool,
+            conf=None, radio=None, has_send: bool = False) -> RowCtx:
+    """Decisions 1 + 2 (retry side) for one row on one lane.
+
+    With ``has_send`` (static: the plan contains ``KIND_SEND`` rows and a
+    radio model is live), a SEND row's cost fields are overridden from the
+    lane's confidence and the packed radio vector *before* the passability
+    bound is derived, so the generic atomic-row machinery -- torn-prefix
+    rollback, full-preamble retry, the ``row_stuck`` bound -- applies to
+    transmissions unchanged: the row becomes an atomic entry of
+    ``wakeup + bytes * cycles_per_byte`` cycles booked to the radio class
+    (its single charge segment), zero for a skipped send."""
     if parametric:
         sel = row["tile_sel_cost"]                       # (K,) fit costs
         k = jnp.clip(jnp.sum((sel > cap).astype(jnp.int32)), 0,
@@ -232,6 +292,23 @@ def row_ctx(row, cap, theta, adaptive: bool, parametric: bool) -> RowCtx:
         n, c, iter_class = row["n"], row["iter_cycles"], row["iter_class"]
     e, entry_class = row["entry_cycles"], row["entry_class"]
     cc, commit_class = row["commit_cycles"], row["commit_class"]
+    seg_cycles = row["entry_seg_cycles"]
+    send_bytes = jnp.asarray(0.0, jnp.float64)
+    if has_send:
+        is_send = row["kind"] == KIND_SEND
+        send_bytes = jnp.where(is_send, send_message_bytes(conf, radio),
+                               0.0)
+        cost = send_cost_cycles(send_bytes, radio)
+        e = jnp.where(is_send, cost, e)
+        entry_class = jnp.where(
+            is_send, jnp.zeros_like(entry_class).at[_RADIO_IDX].set(cost),
+            entry_class)
+        # the SEND row's single charge segment (class slot 0 is the radio
+        # index, written by fleetsim.with_uplink) carries the whole cost
+        # so a torn transmission's burned prefix books to the radio class
+        seg_cycles = jnp.where(
+            is_send, jnp.zeros_like(seg_cycles).at[0].set(cost),
+            seg_cycles)
     has_iters = n > 0
     if adaptive:
         batchr = has_iters & (cc > 0.0) & (theta <= 1.0)
@@ -244,9 +321,9 @@ def row_ctx(row, cap, theta, adaptive: bool, parametric: bool) -> RowCtx:
     afford_nom = jnp.floor((cap - er) / crs)
     row_stuck = jnp.where(has_iters, afford_nom < 1.0, e > cap)
     return RowCtx(row["kind"], n, c, e, cc, iter_class, entry_class,
-                  commit_class, row["entry_seg_class"],
-                  row["entry_seg_cycles"], er, cr, crs, iter_vecr, batchr,
-                  afford_nom, row_stuck, has_iters, k)
+                  commit_class, row["entry_seg_class"], seg_cycles,
+                  er, cr, crs, iter_vecr, batchr,
+                  afford_nom, row_stuck, has_iters, k, send_bytes)
 
 
 class ChargeState(NamedTuple):
@@ -418,7 +495,8 @@ def charge_once(ctx: RowCtx, cap, charge_cum, theta, window, alpha,
                          jnp.zeros_like(s.pend_class))
     prw_fin = jnp.where(defer, prw1 + 1.0, 0.0)
 
-    # decision 5: EWMA belief from the observed charge length (deaths of
+    # belief recalibration (decision 4's EWMA side): update the believed
+    # budget from the observed charge length (deaths of
     # refill-started charges only: the wake charge is partial and
     # calibration burns precede any work).  The belief is quantized to
     # whole cycles -- budgets are discrete everywhere else in the model,
@@ -566,6 +644,9 @@ class EventState(NamedTuple):
     debt: jax.Array
     debt_class: jax.Array
     stuck: jax.Array
+    tx_bytes: jax.Array     # uplink bytes shipped (decision 5)
+    sent: jax.Array         # uplink transmissions completed
+    deferred: jax.Array     # sends deferred past a closed window
 
 
 def _select(pred, a, b):
@@ -574,8 +655,9 @@ def _select(pred, a, b):
 
 
 def event_step(packed, layout, cap, trace_cum, tail_s, charge_cum,
-               nominal_from, theta, window, alpha, adaptive: bool,
-               parametric: bool, enable_fast: bool, has_burn: bool,
+               nominal_from, theta, window, alpha, conf, radio,
+               adaptive: bool, parametric: bool, enable_fast: bool,
+               has_burn: bool, has_send: bool,
                st: EventState, active, plan=None) -> EventState:
     """One event: one charge of the current row, or the row's closed-form
     remainder when eligible, or a whole BURN/CALIB row.
@@ -594,11 +676,27 @@ def event_step(packed, layout, cap, trace_cum, tail_s, charge_cum,
     s_pad = packed.shape[-2]
     i = jnp.minimum(st.i, s_pad - 1)
     row = unpack_row(packed, layout, i, plan)
-    ctx = row_ctx(row, cap, theta, adaptive, parametric)
+    ctx = row_ctx(row, cap, theta, adaptive, parametric,
+                  conf=conf, radio=radio, has_send=has_send)
 
     # Entering a row resets the row-local loop state (iterations left,
     # rollback debt -- a stuck row's discarded debt must not leak).
     fresh = st.fresh & active
+
+    # decision 5: a fresh SEND row that wakes into a closed basestation
+    # window sleeps (dead time, no energy) until the window opens.  Only
+    # the *first* entry defers; a retry after a torn send transmits as
+    # soon as the buffer recharges (documented simplification).
+    send_wait = jnp.zeros_like(st.dead)
+    defer_now = jnp.zeros_like(fresh)
+    if has_send:
+        is_send = ctx.kind == KIND_SEND
+        want_send = fresh & is_send & (ctx.send_bytes > 0.0) \
+            & ~ctx.row_stuck
+        closed, wait = send_defer_wait(st.live, st.dead, radio)
+        defer_now = want_send & closed
+        send_wait = jnp.where(defer_now, wait, 0.0)
+
     cs = ChargeState(
         rem=st.rem, bel=st.bel,
         left=jnp.where(fresh, ctx.n, st.left),
@@ -635,6 +733,11 @@ def event_step(packed, layout, cap, trace_cum, tail_s, charge_cum,
     else:
         work = slow
     is_work = ctx.kind == KIND_WORK
+    if has_send:
+        # SEND rows ride the generic atomic-row machinery (row_ctx
+        # overrode the entry cost/classes): torn sends roll back and
+        # retry the full preamble like any other atomic row.
+        is_work = is_work | (ctx.kind == KIND_SEND)
     out = _select(active & is_work, work, cs)
 
     # -- BURN rows: a failed calibration attempt drains the whole buffer
@@ -685,11 +788,22 @@ def event_step(packed, layout, cap, trace_cum, tail_s, charge_cum,
     advance = active & jnp.where(is_work, out.done, True)
     # decision 3: per-reboot dead time, booked once per row from the
     # reboot counter at the row's entry (the same single gather-subtract
-    # the unfused path evaluates, for bitwise identity)
+    # the unfused path evaluates, for bitwise identity).  The window wait
+    # is added first as its own float step so the unfused path (which
+    # books the wait at row entry) stays bitwise identical.
+    dead_base = st.dead + send_wait
     dead = jnp.where(advance,
-                     st.dead + trace_window(trace_cum, st.row_r0,
-                                            out.reboots, tail_s),
-                     st.dead)
+                     dead_base + trace_window(trace_cum, st.row_r0,
+                                              out.reboots, tail_s),
+                     dead_base)
+    tx_bytes, sent, deferred = st.tx_bytes, st.sent, st.deferred
+    if has_send:
+        # Book TX on row completion; a stuck SEND row (cost > capacity)
+        # never gets its payload out, matching the reference interpreter.
+        adv_tx = advance & is_send & ~ctx.row_stuck
+        tx_bytes = tx_bytes + jnp.where(adv_tx, ctx.send_bytes, 0.0)
+        sent = sent + jnp.where(adv_tx & (ctx.send_bytes > 0.0), 1.0, 0.0)
+        deferred = deferred + jnp.where(defer_now, 1.0, 0.0)
     return EventState(
         i=st.i + advance.astype(jnp.int32),
         fresh=advance,
@@ -699,13 +813,15 @@ def event_step(packed, layout, cap, trace_cum, tail_s, charge_cum,
         reboots=out.reboots, classes=out.classes, wasted=out.wasted,
         pend=out.pend, pend_class=out.pend_class,
         pend_rows=out.pend_rows, bhat=out.bhat, chg=out.chg,
-        debt=out.debt, debt_class=out.debt_class, stuck=out.stuck)
+        debt=out.debt, debt_class=out.debt_class, stuck=out.stuck,
+        tx_bytes=tx_bytes, sent=sent, deferred=deferred)
 
 
 def event_replay(rows, cap, rem0, trace_cum, tail_s, charge_cum,
                  nominal_from, s_real, theta, window, alpha, *,
                  adaptive: bool, parametric: bool,
                  enable_fast: bool = True, has_burn: bool = True,
+                 has_send: bool = False, conf=0.0, radio=None,
                  chunk: int = EVENT_CHUNK, plan_idx=None) -> dict:
     """Replay one lane's plan as a constant-trip masked event stream.
 
@@ -732,12 +848,14 @@ def event_replay(rows, cap, rem0, trace_cum, tail_s, charge_cum,
         pend_class=jnp.zeros((_N_CLASSES,), rem0.dtype),
         pend_rows=zero, bhat=cap + zero, chg=zero, debt=zero,
         debt_class=jnp.zeros((_N_CLASSES,), rem0.dtype),
-        stuck=jnp.asarray(False))
+        stuck=jnp.asarray(False),
+        tx_bytes=zero, sent=zero, deferred=zero)
 
     def masked_event(st, _):
         return event_step(packed, layout, cap, trace_cum, tail_s,
                           charge_cum, nominal_from, theta, window, alpha,
-                          adaptive, parametric, enable_fast, has_burn,
+                          conf, radio, adaptive, parametric, enable_fast,
+                          has_burn, has_send,
                           st, active=st.i < s_real, plan=plan_idx), None
 
     st = lax.while_loop(
@@ -746,7 +864,9 @@ def event_replay(rows, cap, rem0, trace_cum, tail_s, charge_cum,
         st0)
     return dict(live=st.live, reboots=st.reboots, dead=st.dead,
                 classes=st.classes, wasted=st.wasted, stuck=st.stuck,
-                rem=st.rem, belief=st.bhat)
+                rem=st.rem, belief=st.bhat,
+                tx_bytes=st.tx_bytes, msgs_sent=st.sent,
+                msgs_deferred=st.deferred)
 
 
 # ==========================================================================
@@ -754,11 +874,12 @@ def event_replay(rows, cap, rem0, trace_cum, tail_s, charge_cum,
 # ==========================================================================
 
 def _lane_kernel(*refs, keys, n_row_refs, shared_rows, adaptive,
-                 parametric, enable_fast, has_burn, chunk):
+                 parametric, enable_fast, has_burn, has_send, chunk):
     row_refs = refs[:n_row_refs]
     (cap_ref, rem0_ref, tc_ref, ts_ref, cc_ref, nf_ref, sr_ref, th_ref,
-     wi_ref, al_ref, live_ref, rb_ref, dead_ref, cls_ref, waste_ref,
-     stuck_ref, rem_ref, bel_ref) = refs[n_row_refs:]
+     wi_ref, al_ref, cf_ref, rd_ref, live_ref, rb_ref, dead_ref, cls_ref,
+     waste_ref, stuck_ref, rem_ref, bel_ref, txb_ref, snt_ref,
+     dfr_ref) = refs[n_row_refs:]
     if shared_rows:
         rows = {k: r[...] for k, r in zip(keys, row_refs)}
     else:
@@ -768,7 +889,8 @@ def _lane_kernel(*refs, keys, n_row_refs, shared_rows, adaptive,
                        th_ref[0], wi_ref[0], al_ref[0],
                        adaptive=adaptive, parametric=parametric,
                        enable_fast=enable_fast, has_burn=has_burn,
-                       chunk=chunk)
+                       has_send=has_send, conf=cf_ref[0],
+                       radio=rd_ref[...], chunk=chunk)
     live_ref[0] = out["live"]
     rb_ref[0] = out["reboots"]
     dead_ref[0] = out["dead"]
@@ -777,12 +899,17 @@ def _lane_kernel(*refs, keys, n_row_refs, shared_rows, adaptive,
     stuck_ref[0] = out["stuck"]
     rem_ref[0] = out["rem"]
     bel_ref[0] = out["belief"]
+    txb_ref[0] = out["tx_bytes"]
+    snt_ref[0] = out["msgs_sent"]
+    dfr_ref[0] = out["msgs_deferred"]
 
 
 def pallas_replay(rows, caps, rem0, trace_cum, tail_s, charge_cum,
-                  nominal_from, s_real, theta, window, alpha, *,
+                  nominal_from, s_real, theta, window, alpha,
+                  conf=None, radio=None, *,
                   adaptive: bool, parametric: bool, shared_rows: bool,
                   enable_fast: bool = True, has_burn: bool = True,
+                  has_send: bool = False,
                   chunk: int = EVENT_CHUNK, interpret: bool = True) -> dict:
     """The fused replay as a Pallas kernel: grid over lanes, one program
     per lane running the scalar ``event_replay`` with the plan broadcast
@@ -813,15 +940,20 @@ def pallas_replay(rows, caps, rem0, trace_cum, tail_s, charge_cum,
     tc = jnp.asarray(trace_cum)
     cc = jnp.asarray(charge_cum)
     scalar = pl.BlockSpec((1,), lambda i: (0,))
+    if conf is None:
+        conf = jnp.zeros((n_lanes,), f64)
+    if radio is None:
+        radio = jnp.zeros((N_RADIO,), f64)
     in_specs = row_specs + [
         lane, lane,
         pl.BlockSpec((1, tc.shape[1]), lambda i: (i, 0)),
         lane,
         pl.BlockSpec((1, cc.shape[1]), lambda i: (i, 0)),
-        lane, lane, scalar, scalar, scalar]
+        lane, lane, scalar, scalar, scalar,
+        lane, pl.BlockSpec((N_RADIO,), lambda i: (0,))]
     out_specs = [lane, lane, lane,
                  pl.BlockSpec((1, _N_CLASSES), lambda i: (i, 0)),
-                 lane, lane, lane, lane]
+                 lane, lane, lane, lane, lane, lane, lane]
     out_shape = [jax.ShapeDtypeStruct((n_lanes,), f64),
                  jax.ShapeDtypeStruct((n_lanes,), f64),
                  jax.ShapeDtypeStruct((n_lanes,), f64),
@@ -829,13 +961,18 @@ def pallas_replay(rows, caps, rem0, trace_cum, tail_s, charge_cum,
                  jax.ShapeDtypeStruct((n_lanes,), f64),
                  jax.ShapeDtypeStruct((n_lanes,), jnp.bool_),
                  jax.ShapeDtypeStruct((n_lanes,), f64),
+                 jax.ShapeDtypeStruct((n_lanes,), f64),
+                 jax.ShapeDtypeStruct((n_lanes,), f64),
+                 jax.ShapeDtypeStruct((n_lanes,), f64),
                  jax.ShapeDtypeStruct((n_lanes,), f64)]
 
     kernel = functools.partial(
         _lane_kernel, keys=keys, n_row_refs=len(keys),
         shared_rows=shared_rows, adaptive=adaptive, parametric=parametric,
-        enable_fast=enable_fast, has_burn=has_burn, chunk=chunk)
-    live, reboots, dead, classes, wasted, stuck, rem, belief = \
+        enable_fast=enable_fast, has_burn=has_burn, has_send=has_send,
+        chunk=chunk)
+    (live, reboots, dead, classes, wasted, stuck, rem, belief,
+     tx_bytes, msgs_sent, msgs_deferred) = \
         pl.pallas_call(kernel, grid=(n_lanes,), in_specs=in_specs,
                        out_specs=out_specs, out_shape=out_shape,
                        interpret=interpret)(
@@ -845,6 +982,9 @@ def pallas_replay(rows, caps, rem0, trace_cum, tail_s, charge_cum,
             jnp.asarray(s_real),
             jnp.asarray(theta, f64).reshape(1),
             jnp.asarray(window, f64).reshape(1),
-            jnp.asarray(alpha, f64).reshape(1))
+            jnp.asarray(alpha, f64).reshape(1),
+            jnp.asarray(conf, f64), jnp.asarray(radio, f64))
     return dict(live=live, reboots=reboots, dead=dead, classes=classes,
-                wasted=wasted, stuck=stuck, rem=rem, belief=belief)
+                wasted=wasted, stuck=stuck, rem=rem, belief=belief,
+                tx_bytes=tx_bytes, msgs_sent=msgs_sent,
+                msgs_deferred=msgs_deferred)

@@ -102,19 +102,23 @@ def fir_conv1d(x, taps, interpret: bool | None = None):
 @functools.lru_cache(maxsize=None)
 def _charge_replay_jit(adaptive: bool, parametric: bool,
                        shared_rows: bool, enable_fast: bool,
-                       has_burn: bool, chunk: int, interpret: bool):
+                       has_burn: bool, has_send: bool, chunk: int,
+                       interpret: bool):
     from .charge_replay import pallas_replay
     return jax.jit(functools.partial(
         pallas_replay, adaptive=adaptive, parametric=parametric,
         shared_rows=shared_rows, enable_fast=enable_fast,
-        has_burn=has_burn, chunk=chunk, interpret=interpret))
+        has_burn=has_burn, has_send=has_send, chunk=chunk,
+        interpret=interpret))
 
 
 def charge_replay(rows, caps, rem0, trace_cum, tail_s, charge_cum,
-                  nominal_from, s_real, theta, window, alpha, *,
+                  nominal_from, s_real, theta, window, alpha,
+                  conf=None, radio=None, *,
                   adaptive: bool, parametric: bool, shared_rows: bool,
                   enable_fast: bool = True, has_burn: bool = True,
-                  chunk: int = 128, interpret: bool | None = None):
+                  has_send: bool = False, chunk: int = 128,
+                  interpret: bool | None = None):
     """Fused stochastic charge-loop replay as a Pallas lane kernel (one
     grid step per device lane; ``repro.kernels.charge_replay``).  The
     default XLA event stream lives in ``repro.core.fleetsim``; this entry
@@ -122,9 +126,10 @@ def charge_replay(rows, caps, rem0, trace_cum, tail_s, charge_cum,
     if interpret is None:
         interpret = not on_tpu()
     fn = _charge_replay_jit(adaptive, parametric, shared_rows,
-                            enable_fast, has_burn, chunk, interpret)
+                            enable_fast, has_burn, has_send, chunk,
+                            interpret)
     return fn(rows, caps, rem0, trace_cum, tail_s, charge_cum,
-              nominal_from, s_real, theta, window, alpha)
+              nominal_from, s_real, theta, window, alpha, conf, radio)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,

@@ -42,11 +42,19 @@ def simulate_elastic(events: list[ElasticEvent], tp: int, step_s: float,
     """Throughput (global batches/s aggregated) across availability events.
 
     Rescale only when the chosen mesh actually changes (hysteresis keeps
-    single-host churn from thrashing)."""
+    single-host churn from thrashing).  A rescale is an *outage*: the new
+    mesh produces nothing until ``rescale_s`` after the event (drain +
+    checkpoint + rebuild + restore), tracked by advancing a ``ready_at``
+    clock -- each wall-clock second is booked exactly once, as either
+    productive (``work_s``) or idle, so ``work_s + idle_s == wall_s``.
+    (An earlier version both added the outage to idle *and* subtracted its
+    batch-equivalent from work, double-billing every rescale.)"""
     events = sorted(events, key=lambda e: e.t_s)
     cur = choose_mesh(events[0].available, tp)
     t = events[0].t_s
-    work = 0.0
+    ready_at = t
+    work = 0.0      # global batches
+    work_s = 0.0    # productive wall-clock
     idle = 0.0
     rescales = 0
     for nxt in events[1:] + [ElasticEvent(horizon_s, events[-1].available)]:
@@ -54,14 +62,17 @@ def simulate_elastic(events: list[ElasticEvent], tp: int, step_s: float,
         if cur is None:
             idle += span
         else:
-            work += span / step_s * cur.dp * batch_per_dp
+            productive = max(nxt.t_s - max(t, ready_at), 0.0)
+            work_s += productive
+            idle += span - productive
+            work += productive / step_s * cur.dp * batch_per_dp
         new = choose_mesh(nxt.available, tp)
         if (new is None) != (cur is None) or (
                 new is not None and cur is not None and new.dp != cur.dp):
             rescales += 1
             if new is not None:
-                idle += rescale_s
-                work -= min(work, rescale_s / step_s * new.dp * batch_per_dp)
+                ready_at = nxt.t_s + rescale_s
         cur = new
         t = nxt.t_s
-    return {"batches": work, "idle_s": idle, "rescales": rescales}
+    return {"batches": work, "idle_s": idle, "work_s": work_s,
+            "wall_s": horizon_s - events[0].t_s, "rescales": rescales}

@@ -268,6 +268,7 @@ def pad_charge_trace_columns(charge_cum: np.ndarray, caps,
 # two families.
 
 _FRAC_STREAM, _HARVEST_STREAM, _RECHARGE_STREAM, _CHARGE_STREAM = 0, 1, 2, 3
+_CONF_STREAM = 4
 
 
 def _stream_uniforms(n_lanes: int, draws_per_lane: int, seed: int,
@@ -371,6 +372,25 @@ def charge_capacity_jitter_stream(n_devices: int, n_charges: int,
             mult = mult * bias[:, None]
         mult = np.clip(mult, lo, hi)
     return np.maximum(np.rint(nominal * mult), 1.0)
+
+
+def inference_confidence(n_devices: int, seed: int = 0) -> np.ndarray:
+    """Per-device classifier confidence for the uplink send decision,
+    uniform [0, 1): the top-softmax score each device observes for the
+    inference its plan completes.  The radio row (``runtime.radio``)
+    thresholds this against the send policy to pick ship-class /
+    ship-top-k / ship-nothing.  Legacy sequential sampler; sweeps that
+    stream the lane axis use :func:`inference_confidence_stream`."""
+    rng = np.random.default_rng(seed)
+    return rng.random(n_devices)
+
+
+def inference_confidence_stream(n_devices: int, seed: int = 0,
+                                lane_lo: int = 0) -> np.ndarray:
+    """Chunk-invariant :func:`inference_confidence`: uniform [0, 1)
+    confidences for lanes ``[lane_lo, lane_lo + n_devices)``
+    (1 draw/lane)."""
+    return _stream_uniforms(n_devices, 1, seed, _CONF_STREAM, lane_lo)[:, 0]
 
 
 def simulate(policy: str, fleet: FleetSpec, job: JobSpec, interval: int = 50,

@@ -54,9 +54,15 @@ class ServeEngine:
 
     def submit(self, req: Request) -> None:
         cur = self._cursor(req.rid)
-        if not cur.read():
+        c = cur.read()
+        if not c:
             cur.commit(prompt=list(map(int, req.prompt)),
                        max_new=req.max_new, generated=[])
+        elif c.get("max_new") != req.max_new:
+            # resubmission with a new budget: the durable cursor must track
+            # it, or recover() resurrects the stale value and the request
+            # stops (or overruns) at the wrong length
+            cur.commit(max_new=req.max_new)
 
     def recover(self, rid: str) -> Request:
         """Rebuild a request from its durable cursor (post-preemption)."""
@@ -75,6 +81,17 @@ class ServeEngine:
             self.submit(r)
         requests = [self.recover(r.rid) for r in requests]
         b = len(requests)
+        plens = {len(r.prompt) for r in requests}
+        if len(plens) > 1:
+            raise ValueError(
+                f"batch prompts must be equal length, got lengths "
+                f"{sorted(plens)}: the lockstep prefill would silently "
+                f"truncate longer prompts to the shortest")
+        need = max((len(r.prompt) + r.max_new for r in requests), default=0)
+        if need > self.max_len:
+            raise ValueError(
+                f"prompt+max_new needs {need} KV slots but max_len is "
+                f"{self.max_len}; decode would overrun the cache")
         # idempotent re-prefill of prompt + committed tokens
         done_tokens = [r.prompt + r.generated for r in requests]
         min_done = min(len(t) for t in done_tokens)

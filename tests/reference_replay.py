@@ -51,11 +51,16 @@ import math
 import numpy as np
 
 from repro.core.energy import OP_CLASSES
-from repro.core.fleetsim import KIND_BURN, KIND_CALIB, KIND_WORK, _K_TILES
+from repro.core.fleetsim import (KIND_BURN, KIND_CALIB, KIND_SEND,
+                                 KIND_WORK, _K_TILES)
+from repro.runtime.radio import (R_CLASS, R_CLK, R_CONF_HI, R_CONF_LO,
+                                 R_CPB, R_DUTY, R_HDR, R_PERIOD,
+                                 R_TOPK, R_WAKEUP, radio_vector)
 
 _C = len(OP_CLASSES)
 _CONTROL = OP_CLASSES.index("control")
 _BURN = OP_CLASSES.index("lea_mac")
+_RADIO = OP_CLASSES.index("radio")
 
 
 def trace_window(cum, r0, r1, fallback):
@@ -89,6 +94,9 @@ class _Lane:
         self.pend_rows = 0.0
         self.bhat = cap            # EWMA believed per-charge budget
         self.chg = 0.0             # spent in current charge (observation)
+        self.tx = 0.0              # uplink bytes shipped
+        self.sent = 0.0            # messages transmitted
+        self.deferred = 0.0        # closed-window deferrals
         # decomposition channels (reference-only)
         self.useful = 0.0
         self.wasted_total = 0.0
@@ -101,13 +109,25 @@ def reference_replay(rows: dict, cap: float, rem0: float, *,
                      charge_cum: np.ndarray | None = None,
                      policy: str = "fixed", theta: float = 0.5,
                      batch_rows: int = 1,
-                     belief_alpha: float = 0.0) -> dict:
+                     belief_alpha: float = 0.0,
+                     conf: float = 0.0, radio=None) -> dict:
     """Interpret one plan (``fleetsim._plan_rows`` dict) on one lane.
 
     ``recharge_cum``/``charge_cum`` are this lane's 1-D cumulative trace
     tables (``recharge_trace_cumulative``/``charge_trace_cumulative`` rows)
     or ``None`` for closed-form dead time / all-nominal charges.
+
+    ``radio`` (packed vector or ``(RadioModel, SendPolicy)``) enables the
+    uplink decision on ``KIND_SEND`` rows: ``conf`` is this lane's
+    classifier confidence, thresholded into ship-class / ship-topk / skip;
+    the send cost runs through the *same* atomic charge loop as a WORK
+    entry (a torn send rolls back and retries the full preamble), a send
+    waking into a closed basestation window first sleeps until the next
+    window opens (dead time, counted in ``msgs_deferred``), and completed
+    transmissions accumulate ``tx_bytes`` / ``msgs_sent``.
     """
+    radio = None if radio is None else radio_vector(radio)
+    conf = float(conf)
     adaptive = policy == "adaptive"
     parametric = "tile_sel_cost" in rows
     window = float(batch_rows)
@@ -156,6 +176,22 @@ def reference_replay(rows: dict, cap: float, rem0: float, *,
         commit_class = rows["commit_class"][i]
         seg_cls = rows["entry_seg_class"][i]
         seg_cyc = rows["entry_seg_cycles"][i]
+
+        # -- decision 5: send / compress / skip (uplink rows) -------------
+        is_send = kind == KIND_SEND and radio is not None
+        send_b = 0.0
+        if is_send:
+            if conf >= radio[R_CONF_HI]:
+                send_b = float(radio[R_HDR] + radio[R_CLASS])
+            elif conf >= radio[R_CONF_LO]:
+                send_b = float(radio[R_HDR] + radio[R_TOPK])
+            cost = (float(radio[R_WAKEUP] + send_b * radio[R_CPB])
+                    if send_b > 0.0 else 0.0)
+            e = cost
+            entry_class = np.zeros(_C)
+            entry_class[_RADIO] = cost
+            seg_cyc = np.zeros(len(seg_cyc))
+            seg_cyc[0] = cost
         has_iters = n > 0
 
         def torn_prefix(p):
@@ -193,6 +229,10 @@ def reference_replay(rows: dict, cap: float, rem0: float, *,
                 s.reboots += burns
             s.dead += trace_window(recharge_cum, r0, s.reboots, tail_s)
             continue
+        if kind == KIND_SEND and radio is None:
+            # ``has_send=False`` replays treat SEND rows as inert
+            # passthrough (the scan skips them entirely).
+            continue
 
         # nominal passability (the scalar simulator's atomic-region bound,
         # on the selected tile, with retry-batched costs)
@@ -207,6 +247,23 @@ def reference_replay(rows: dict, cap: float, rem0: float, *,
             row_stuck = e > s.cap
         if math.isinf(s.cap):
             row_stuck = False
+
+        # Duty-cycled basestation window, checked once on fresh entry to
+        # the row: waking into a closed window sleeps (dead time, no
+        # energy) until the next window opens.  A post-tear retry
+        # transmits as soon as it is recharged (documented
+        # simplification, mirrored by the scan's fresh-only gate).
+        send_wait = 0.0
+        if is_send and send_b > 0.0 and not row_stuck:
+            period = float(radio[R_PERIOD])
+            # R_CLK and fabs mirror the anti-FMA-contraction shape of
+            # kernels.charge_replay.send_defer_wait (value identities here).
+            t = s.live / float(radio[R_CLK]) + s.dead
+            ps = max(period, 1e-30)
+            phase = t - math.fabs(math.floor(t / ps) * ps)
+            if period > 0.0 and phase >= float(radio[R_DUTY]) * period:
+                send_wait = period - phase
+                s.deferred += 1.0
 
         # The charge loop below mirrors the scan's ``charge_body`` term by
         # term, *including the float summation grouping* (contributions
@@ -302,8 +359,14 @@ def reference_replay(rows: dict, cap: float, rem0: float, *,
                 s.live = s.live + (d_spend + spend)
                 s.classes = s.classes + (d_cls + cls_fin)
                 s.chg = s.chg + d_spend + spend
-                s.useful += e + left * c_b if batch \
+                fin_u = e + left * c_b if batch \
                     else e + left * (c - cc)
+                if is_send:
+                    # A completed transmission is radio overhead, not
+                    # net inference work: plan_net_work skips SEND rows.
+                    s.overhead += fin_u
+                else:
+                    s.useful += fin_u
                 if batch and not defer:
                     s.overhead += cc
                 if not batch:
@@ -391,13 +454,19 @@ def reference_replay(rows: dict, cap: float, rem0: float, *,
                 s.stuck = True
                 done = True
 
-        s.dead = s.dead + trace_window(recharge_cum, r0, s.reboots, tail_s)
+        s.dead = (s.dead + send_wait) + trace_window(recharge_cum, r0,
+                                                     s.reboots, tail_s)
+        if is_send and not row_stuck:
+            s.tx += send_b
+            if send_b > 0.0:
+                s.sent += 1.0
 
     return dict(live=s.live, reboots=s.reboots, dead=s.dead,
                 classes=s.classes, wasted=s.wasted, stuck=s.stuck,
                 belief=s.bhat, useful=s.useful,
                 wasted_total=s.wasted_total, overhead=s.overhead,
-                wall_cycles=s.live)
+                tx_bytes=s.tx, msgs_sent=s.sent,
+                msgs_deferred=s.deferred, wall_cycles=s.live)
 
 
 def plan_net_work(rows: dict, cap: float) -> float:

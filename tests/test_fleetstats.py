@@ -15,7 +15,7 @@ import pytest
 from repro.core import (Conv2D, DenseFC, FleetStats, MaxPool2D, SimNet,
                         SparseFC, STAT_CHANNELS, capacitor_sweep,
                         fleet_sweep, replay_plans, stats_from_outputs)
-from repro.core.energy import CLOCK_HZ, JOULES_PER_CYCLE
+from repro.core.energy import CLOCK_HZ, JOULES_PER_CYCLE, OP_CLASSES
 
 
 @pytest.fixture(scope="module")
@@ -51,7 +51,11 @@ def _oracle_out(r):
         "wasted": zeros if r.wasted_cycles is None else r.wasted_cycles,
         "belief": zeros if r.belief_cycles is None else r.belief_cycles,
         "stuck": ~r.completed,
-        "classes": np.zeros((n, 16)),
+        "classes": np.zeros((n, len(OP_CLASSES))),
+        "tx_bytes": zeros if r.tx_bytes is None else r.tx_bytes,
+        "msgs_sent": zeros if r.msgs_sent is None else r.msgs_sent,
+        "msgs_deferred": zeros if r.msgs_deferred is None
+        else r.msgs_deferred,
     }
 
 

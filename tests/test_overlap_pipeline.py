@@ -20,6 +20,7 @@ import pytest
 from repro.core import (Conv2D, DenseFC, MaxPool2D, SimNet, SparseFC,
                         FleetStats, STAT_CHANNELS, capacitor_sweep,
                         fleet_sweep, replay_plans)
+from repro.core.energy import OP_CLASSES
 from repro.core.fleetsim import PlanSet, build_plan
 
 
@@ -249,7 +250,8 @@ def test_merge_parts_matches_host_merge_and_associates(small_net):
                 "wasted": jnp.asarray(rng.integers(0, 500, n) * 1.0),
                 "belief": jnp.asarray(rng.random(n) * 1e4),
                 "stuck": jnp.asarray(rng.random(n) < 0.1),
-                "classes": jnp.asarray(rng.random((n, 16)) * 100),
+                "classes": jnp.asarray(
+                    rng.random((n, len(OP_CLASSES))) * 100),
             }
             gid = jnp.asarray(rng.integers(0, n_groups, n).astype(
                 np.int32))

@@ -78,6 +78,30 @@ def test_elastic_simulation_counts_rescales():
     assert out["batches"] > 0
 
 
+def test_elastic_accounting_conserves_time():
+    """Every wall-clock second is booked exactly once (regression: the
+    rescale outage used to be added to idle AND subtracted from work,
+    double-billing each rescale)."""
+    events = [ElasticEvent(0, 256), ElasticEvent(1000, 240),
+              ElasticEvent(2000, 15), ElasticEvent(2500, 256),
+              ElasticEvent(3000, 256)]
+    out = simulate_elastic(events, tp=16, step_s=2.0, horizon_s=4000)
+    assert out["work_s"] + out["idle_s"] == pytest.approx(out["wall_s"])
+    # hand-computed: [0,1000) dp16 full; rescale at 1000 -> 300 s outage,
+    # [1300,2000) dp15; [2000,2500) below tp -> idle; rescale at 2500 ->
+    # [2800,4000) dp16.  batches = (1000*16 + 700*15 + 1200*16) / 2
+    assert out["batches"] == pytest.approx((1000 * 16 + 700 * 15
+                                            + 1200 * 16) / 2.0)
+    assert out["work_s"] == pytest.approx(1000 + 700 + 1200)
+    assert out["rescales"] == 3       # 16 -> 15 -> None -> 16
+    # an outage longer than its span must not book negative productive time
+    out2 = simulate_elastic(events, tp=16, step_s=2.0, horizon_s=4000,
+                            rescale_s=5000.0)
+    assert out2["work_s"] >= 1000  # the pre-rescale span still counts
+    assert out2["work_s"] + out2["idle_s"] == pytest.approx(out2["wall_s"])
+    assert out2["batches"] == pytest.approx(1000 * 16 / 2.0)
+
+
 # --------------------------------------------------------------------------
 # Harvest-trace distributions (inputs of the vectorized device simulator)
 # --------------------------------------------------------------------------

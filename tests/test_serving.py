@@ -7,7 +7,8 @@ import jax
 
 from repro.configs import get_config
 from repro.models import get_model
-from repro.serving import PagedKVStore, Request, ServeEngine
+from repro.serving import (PagedKVStore, Request, ServeEngine,
+                           UplinkAggregator, UplinkMessage)
 
 
 CFG = get_config("qwen3-0.6b").scaled_down(num_layers=2, d_model=32,
@@ -48,6 +49,54 @@ def test_preemption_recovery_exact(engine_params, tmp_path):
     assert out == ref, "post-preemption continuation must be identical"
 
 
+def test_unequal_prompt_lengths_raise(engine_params, tmp_path):
+    """Lockstep prefill only works for equal-length prompts; the engine
+    must refuse a mixed batch instead of silently truncating the longer
+    prompts to the shortest (regression: it used to prefill min_done and
+    overwrite the tail of longer prompts with generated tokens)."""
+    eng = ServeEngine(CFG, engine_params, tmp_path / "s", max_len=32)
+    reqs = _requests()
+    reqs[1] = Request("r1", reqs[1].prompt + [3, 5], reqs[1].max_new)
+    with pytest.raises(ValueError, match="equal length"):
+        eng.run(reqs)
+
+
+def test_kv_overrun_raises_and_boundary_fits(engine_params, tmp_path):
+    """prompt+max_new beyond max_len must raise up front (regression: pos
+    used to march past the cache and corrupt slot arithmetic); exactly
+    filling the cache is legal."""
+    eng = ServeEngine(CFG, engine_params, tmp_path / "over", max_len=32)
+    with pytest.raises(ValueError, match="overrun"):
+        eng.run(_requests(plen=6, max_new=27))
+    eng2 = ServeEngine(CFG, engine_params, tmp_path / "edge", max_len=32)
+    out = eng2.run(_requests(plen=6, max_new=26))  # 6 + 26 == max_len
+    assert all(len(v) == 26 for v in out.values())
+
+
+def test_resubmit_updates_max_new(engine_params, tmp_path):
+    """A resubmitted request's changed ``max_new`` must win over the
+    durable cursor (regression: submit ignored it, so recover() resurrected
+    the stale budget and the rerun stopped at the wrong length)."""
+    eng = ServeEngine(CFG, engine_params, tmp_path / "s", max_len=32)
+    short = eng.run(_requests(max_new=4))
+    assert all(len(v) == 4 for v in short.values())
+    # same rids, bigger budget: the durable cursors must pick it up
+    out = eng.run(_requests(max_new=8))
+    assert all(len(v) == 8 for v in out.values())
+    for rid, toks in short.items():
+        assert out[rid][:4] == toks  # greedy continuation, not a restart
+    assert eng.recover("r0").max_new == 8
+
+
+def test_resubmit_max_new_survives_preemption(engine_params, tmp_path):
+    eng = ServeEngine(CFG, engine_params, tmp_path / "p", max_len=32)
+    with pytest.raises(RuntimeError, match="preempted"):
+        eng.run(_requests(max_new=8), fail_after_tokens=2)
+    eng2 = ServeEngine(CFG, engine_params, tmp_path / "p", max_len=32)
+    out = eng2.run(_requests(max_new=6))
+    assert all(len(v) == 6 for v in out.values())
+
+
 def test_kv_store_append_and_recovery(tmp_path):
     store = PagedKVStore(tmp_path / "kv", layers=2, max_len=16, kv_width=8)
     rng = np.random.default_rng(0)
@@ -58,3 +107,48 @@ def test_kv_store_append_and_recovery(tmp_path):
     data = store.read("seq0")
     np.testing.assert_allclose(data[2], rows[2].reshape(-1), rtol=1e-6)
     assert (data[5] == 0).all()
+
+
+# --------------------------------------------------------------------------
+# Host-side uplink aggregation (basestation end of the co-simulation)
+# --------------------------------------------------------------------------
+
+def test_uplink_aggregator_dedup_and_state(tmp_path):
+    agg = UplinkAggregator(tmp_path / "up")
+    assert agg.ingest(UplinkMessage("dev0", 1, "class", (3,), conf=0.95))
+    assert agg.last_class("dev0") == 3
+    # a torn send retries with the SAME seq -- the duplicate must not
+    # double-count or disturb state
+    assert not agg.ingest(UplinkMessage("dev0", 1, "class", (7,)))
+    assert agg.last_class("dev0") == 3
+    # stale out-of-order replay is likewise discarded
+    assert agg.ingest(UplinkMessage("dev0", 2, "class", (5,)))
+    assert not agg.ingest(UplinkMessage("dev0", 1, "class", (9,)))
+    assert agg.last_class("dev0") == 5
+    assert (agg.n_accepted, agg.n_duplicates) == (2, 2)
+
+
+def test_uplink_aggregator_topk_argmax(tmp_path):
+    agg = UplinkAggregator(tmp_path / "up")
+    agg.ingest(UplinkMessage("dev1", 1, "topk", (0.1, 2.5, -0.3), conf=0.6))
+    assert agg.last_class("dev1") == 1  # host disambiguates shipped logits
+
+
+def test_uplink_aggregator_recovery(tmp_path):
+    agg = UplinkAggregator(tmp_path / "up")
+    agg.ingest(UplinkMessage("dev0", 4, "class", (2,)))
+    agg.ingest(UplinkMessage("dev1", 1, "topk", (0.0, 1.0)))
+    # host restarts: a fresh aggregator over the same state dir recovers
+    # the committed cursors, and replayed frames dedup against them
+    agg2 = UplinkAggregator(tmp_path / "up")
+    assert agg2.snapshot() == {"dev0": 2, "dev1": 1}
+    assert not agg2.ingest(UplinkMessage("dev0", 4, "class", (9,)))
+    assert agg2.ingest(UplinkMessage("dev0", 5, "class", (9,)))
+    assert agg2.last_seq("dev0") == 5
+
+
+def test_uplink_message_validation(tmp_path):
+    with pytest.raises(ValueError, match="kind"):
+        UplinkMessage("d", 1, "raw", (1,))
+    with pytest.raises(ValueError, match="payload"):
+        UplinkMessage("d", 1, "class")

@@ -1,0 +1,317 @@
+"""Differential + unit tests for the decision-5 uplink co-simulation.
+
+The tentpole contract: a ``KIND_SEND`` row's send/defer/compress decision
+(``runtime.radio``) rides the same atomic charge loop as every other row,
+so the vectorized replay must agree with the pure-Python reference
+interpreter on every uplink channel (``tx_bytes`` / ``msgs_sent`` /
+``msgs_deferred``) *and* every pre-existing channel -- bit-identically on
+the charge-by-charge path, to the established closed-form idiom otherwise
+-- across strategy x send-policy x commit-policy x charge jitter x
+backend.  Hand-pinned cases cover the two interesting trajectories: a
+*torn* send (buffer dies mid-transmission, preamble re-paid after reboot)
+and a *deferred* send (device wakes into a closed basestation window and
+sleeps until it reopens).
+
+Fleet-level: uplink channels must survive ``lane_chunk`` streaming and
+prefetch overlap bit-exactly, reach ``FleetStats`` through the
+``reduce="stats"`` path, and surface in ``FleetSweepResult.summary()``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import make_random_net
+from reference_replay import reference_replay
+
+from repro.core import build_plan, fleet_sweep, replay_plans, with_uplink
+from repro.core.energy import (CLOCK_HZ, JOULES_PER_CYCLE, OP_CLASSES,
+                               rf_recharge_seconds)
+from repro.core.fleetsim import KIND_SEND, _plan_rows
+from repro.runtime.failures import (charge_capacity_jitter,
+                                    charge_trace_cumulative,
+                                    inference_confidence,
+                                    reboot_recharge_times,
+                                    recharge_trace_cumulative)
+from repro.runtime.radio import (N_RADIO, R_CLK, RadioModel, SEND_POLICIES,
+                                 SendPolicy, pack_radio, radio_vector,
+                                 send_cost_cycles)
+
+_RADIO = OP_CLASSES.index("radio")
+LANES = 6
+N_CHARGES = 48
+N_RECHARGES = 16
+
+#: Duty-cycled basestation used by the windowed cases: listening 40% of
+#: every 40 ms, long enough past the bench recharge times that deferrals
+#: actually occur.
+WINDOW = RadioModel(window_period_s=0.04, window_duty=0.4)
+
+#: (scan attr, reference dict key) -- every compared channel.
+CHANNELS = (("live_cycles", "live"), ("dead_s", "dead"),
+            ("wasted_cycles", "wasted"), ("belief_cycles", "belief"),
+            ("tx_bytes", "tx_bytes"), ("msgs_sent", "msgs_sent"),
+            ("msgs_deferred", "msgs_deferred"), ("reboots", "reboots"))
+
+#: (strategy plan args, send policy index, commit policy, batch window,
+#:  charge cv, run pallas too) -- sonic crosses the full send-policy x
+#: commit x jitter surface, tails rides the parametric/windowed corner,
+#: naive at cap_frac 0.5 exercises the stuck closed form (its WORK row's
+#: atomic unit exceeds the buffer; the SEND row after it still ships).
+CASES = tuple(
+    ((7, "sonic", 0.20), sp, policy, w, cv, sp == 0 and cv > 0)
+    for sp in range(len(SEND_POLICIES))
+    for policy, w in (("fixed", 1), ("adaptive", 2))
+    for cv in (0.0, 0.2)
+) + (
+    ((7, "tails", 0.15), 1, "adaptive", 2, 0.2, True),
+    ((4, "naive", 0.50), 0, "fixed", 1, 0.0, False),
+)
+
+
+def _uplink_plan(seed, strategy, cap_frac):
+    net, x = make_random_net(seed)
+    plan = build_plan(net, x, strategy, "1mF")
+    cap = max(2000.0, float(np.rint(cap_frac * plan.total_cycles)))
+    plan = dataclasses.replace(plan, capacity=cap,
+                               recharge_s=float(rf_recharge_seconds(cap)))
+    return with_uplink(plan)
+
+
+@pytest.fixture(scope="module")
+def uplink_results():
+    """Replay every case through the scan (all requested backends) and the
+    reference interpreter; one entry per (case, lane)."""
+    results = []
+    plans = {}
+    for case_seed, (pargs, sp, policy, w, cv, use_pallas) in enumerate(CASES):
+        if pargs not in plans:
+            plans[pargs] = _uplink_plan(*pargs)
+        plan = plans[pargs]
+        rows = _plan_rows(plan)
+        radio = pack_radio(WINDOW, SEND_POLICIES[sp])
+        rng = np.random.default_rng(case_seed)
+        frac = rng.uniform(0.02, 1.0, LANES)
+        ctr = ccum = None
+        if cv > 0:
+            ctr = charge_capacity_jitter(LANES, N_CHARGES, plan.capacity,
+                                         seed=case_seed, cv=cv)
+            ccum = charge_trace_cumulative(ctr)
+        rtr = reboot_recharge_times(LANES, N_RECHARGES, plan.recharge_s,
+                                    seed=case_seed + 1)
+        cum = recharge_trace_cumulative(rtr)
+        conf = inference_confidence(LANES, seed=case_seed + 2)
+        kw = dict(init_frac=frac, policy=policy, batch_rows=w,
+                  recharge_traces=rtr, charge_traces=ctr,
+                  radio=radio, conf=conf)
+        outs = {"auto": replay_plans([plan] * LANES, **kw),
+                "_while": replay_plans([plan] * LANES, backend="_while",
+                                       **kw)}
+        if use_pallas:
+            outs["pallas"] = replay_plans([plan] * LANES, backend="pallas",
+                                          **kw)
+        closed_form = cv == 0.0 and not (policy == "adaptive" and w > 1)
+        for i in range(LANES):
+            ref = reference_replay(
+                rows, plan.capacity, plan.capacity * frac[i],
+                tail_s=plan.recharge_s, recharge_cum=cum[i],
+                charge_cum=None if ccum is None else ccum[i],
+                policy=policy, batch_rows=w,
+                conf=float(conf[i]), radio=radio)
+            results.append(dict(
+                cfg=(pargs[1], SEND_POLICIES[sp].name, policy, w, cv, i),
+                outs={b: o[i] for b, o in outs.items()},
+                ref=ref, closed_form=closed_form))
+    return results
+
+
+def test_uplink_scan_matches_reference(uplink_results):
+    """Every backend agrees with the oracle on every channel: bitwise on
+    the charge-wise path; on the deterministic closed form the established
+    idiom applies (float channels to 1e-12, counters exact, stuck lanes
+    compare the stuck flag only)."""
+    n_deferred = n_sent = 0
+    for r in uplink_results:
+        ref = r["ref"]
+        for backend, out in r["outs"].items():
+            tag = (*r["cfg"], backend)
+            assert out.completed == (not ref["stuck"]), tag
+            if r["closed_form"] and ref["stuck"]:
+                continue
+            for attr, key in CHANNELS:
+                got, want = float(getattr(out, attr)), float(ref[key])
+                if r["closed_form"] and attr in ("live_cycles", "dead_s",
+                                                 "wasted_cycles",
+                                                 "belief_cycles"):
+                    assert got == pytest.approx(want, rel=1e-12), (tag, attr)
+                else:
+                    assert got == want, (tag, attr)
+            assert out.tx_joules == pytest.approx(
+                ref["classes"][_RADIO] * JOULES_PER_CYCLE, rel=1e-12), tag
+        n_deferred += ref["msgs_deferred"]
+        n_sent += ref["msgs_sent"]
+    # the matrix must actually exercise the uplink decision
+    assert n_sent > 0 and n_deferred > 0
+
+
+def test_uplink_decision_varies_by_policy(uplink_results):
+    """The three send policies produce three distinct tx footprints on the
+    same sonic fleet -- the compress decision is live, not constant."""
+    per_policy = {}
+    for r in uplink_results:
+        strat, sp_name, policy, w, cv, lane = r["cfg"]
+        if strat == "sonic" and policy == "fixed" and cv == 0.2:
+            per_policy.setdefault(sp_name, 0.0)
+            per_policy[sp_name] += float(r["ref"]["tx_bytes"])
+    assert len(per_policy) == len(SEND_POLICIES)
+    assert len(set(per_policy.values())) == len(per_policy)
+
+
+def test_torn_send_rolls_back():
+    """A send that drains the buffer mid-transmission re-pays the full
+    preamble after the reboot: the radio op class books strictly more than
+    ``msgs_sent`` complete transmissions, the torn prefix lands in
+    ``wasted``-side accounting, and the scan still matches the oracle
+    bitwise (charge-wise path)."""
+    plan = _uplink_plan(7, "sonic", 0.08)
+    rows = _plan_rows(plan)
+    radio = pack_radio(RadioModel(), SEND_POLICIES[0])  # always-on window
+    cost = float(send_cost_cycles(7.0, radio))
+    frac = np.array([0.05, 0.3, 0.7, 0.3])
+    ctr = charge_capacity_jitter(4, 64, plan.capacity, seed=0, cv=0.5)
+    ccum = charge_trace_cumulative(ctr)
+    rtr = reboot_recharge_times(4, N_RECHARGES, plan.recharge_s, seed=100)
+    cum = recharge_trace_cumulative(rtr)
+    conf = np.full(4, 0.99)
+    outs = replay_plans([plan] * 4, init_frac=frac, recharge_traces=rtr,
+                        charge_traces=ctr, radio=radio, conf=conf)
+    torn = 0
+    for i, out in enumerate(outs):
+        ref = reference_replay(rows, plan.capacity, plan.capacity * frac[i],
+                               tail_s=plan.recharge_s, recharge_cum=cum[i],
+                               charge_cum=ccum[i], conf=float(conf[i]),
+                               radio=radio)
+        for attr, key in CHANNELS:
+            assert float(getattr(out, attr)) == float(ref[key]), (i, attr)
+        extra = ref["classes"][_RADIO] - cost * ref["msgs_sent"]
+        assert extra >= 0.0
+        if ref["msgs_sent"] and extra > 0:
+            torn += 1
+            assert out.by_class["radio"] == ref["classes"][_RADIO]
+    assert torn >= 1  # seed pinned so at least one lane tears mid-send
+
+
+def test_deferred_window_retry():
+    """A send waking into a closed basestation window sleeps until it
+    reopens: ``msgs_deferred`` counts it, the wait lands in dead time (not
+    energy), and the scan matches the oracle bitwise."""
+    plan = _uplink_plan(7, "sonic", 0.20)
+    rows = _plan_rows(plan)
+    # listening 1% of every 50 ms: a completing send almost surely defers
+    radio = pack_radio(RadioModel(window_period_s=0.05, window_duty=0.01),
+                       SEND_POLICIES[0])
+    frac = np.linspace(0.1, 0.9, LANES)
+    ctr = charge_capacity_jitter(LANES, N_CHARGES, plan.capacity, seed=3,
+                                 cv=0.3)
+    ccum = charge_trace_cumulative(ctr)
+    rtr = reboot_recharge_times(LANES, N_RECHARGES, plan.recharge_s, seed=4)
+    cum = recharge_trace_cumulative(rtr)
+    conf = np.full(LANES, 0.99)
+    outs = replay_plans([plan] * LANES, init_frac=frac, recharge_traces=rtr,
+                        charge_traces=ctr, radio=radio, conf=conf)
+    deferred = 0
+    for i, out in enumerate(outs):
+        ref = reference_replay(rows, plan.capacity, plan.capacity * frac[i],
+                               tail_s=plan.recharge_s, recharge_cum=cum[i],
+                               charge_cum=ccum[i], conf=float(conf[i]),
+                               radio=radio)
+        for attr, key in CHANNELS:
+            assert float(getattr(out, attr)) == float(ref[key]), (i, attr)
+        deferred += int(out.msgs_deferred)
+    assert deferred >= 1
+
+
+def test_skipped_send_is_free():
+    """Below ``conf_lo`` the lane ships nothing: zero bytes, zero radio
+    energy, no deferral -- the replay is bitwise identical to running the
+    same plan with no radio model at all."""
+    plan = _uplink_plan(7, "sonic", 0.20)
+    radio = pack_radio(WINDOW, SEND_POLICIES[2])  # confident-only: lo 0.9
+    frac = np.linspace(0.1, 0.9, LANES)
+    ctr = charge_capacity_jitter(LANES, N_CHARGES, plan.capacity, seed=5,
+                                 cv=0.3)
+    rtr = reboot_recharge_times(LANES, N_RECHARGES, plan.recharge_s, seed=6)
+    conf = np.full(LANES, 0.5)
+    kw = dict(init_frac=frac, recharge_traces=rtr, charge_traces=ctr)
+    with_radio = replay_plans([plan] * LANES, radio=radio, conf=conf, **kw)
+    without = replay_plans([plan] * LANES, **kw)
+    for a, b in zip(with_radio, without):
+        assert a.tx_bytes == 0.0 and a.msgs_sent == 0
+        assert a.msgs_deferred == 0
+        assert a.by_class.get("radio", 0.0) == 0.0
+        assert a.live_cycles == b.live_cycles
+        assert a.dead_s == b.dead_s
+        assert a.reboots == b.reboots
+
+
+def test_fleet_sweep_uplink_chunk_invariance():
+    """Uplink channels survive ``lane_chunk`` streaming and prefetch
+    overlap bit-exactly, and ``reduce="stats"`` carries the same totals."""
+    net, x = make_random_net(3)
+    radio = pack_radio(RadioModel(window_period_s=0.05, window_duty=0.3),
+                       SEND_POLICIES[1])
+    common = dict(net=net, x=x, strategy="sonic", power="100uF",
+                  n_devices=200, seed=3, radio=radio, charge_cv=0.2)
+    base = fleet_sweep(**common, lane_chunk=64)
+    assert base.tx_bytes is not None and float(base.tx_bytes.sum()) > 0
+    for kw in (dict(lane_chunk=48), dict(lane_chunk=128),
+               dict(lane_chunk=64, prefetch=0),
+               dict(lane_chunk=64, prefetch=2)):
+        r = fleet_sweep(**common, **kw)
+        for ch in ("tx_bytes", "msgs_sent", "msgs_deferred", "tx_joules",
+                   "live_s", "dead_s"):
+            assert np.array_equal(getattr(base, ch), getattr(r, ch)), kw
+    s = base.summary()
+    assert s["uplink"]["tx_bytes"] == float(base.tx_bytes.sum())
+    assert s["uplink"]["msgs_sent"] == int(base.msgs_sent.sum())
+    stats = fleet_sweep(**common, lane_chunk=64, reduce="stats")
+    ss = stats.summary()
+    assert ss["tx_bytes"] == float(base.tx_bytes.sum())
+    assert ss["msgs_sent"] == float(base.msgs_sent.sum())
+    assert ss["msgs_deferred"] == float(base.msgs_deferred.sum())
+    assert ss["tx_joules"] == pytest.approx(float(base.tx_joules.sum()),
+                                            rel=1e-12)
+
+
+def test_with_uplink_row_shape():
+    plan = _uplink_plan(7, "sonic", 0.2)
+    assert plan.kind[-1] == KIND_SEND
+    assert with_uplink(plan) is plan  # idempotent
+    net, x = make_random_net(7)
+    raw = build_plan(net, x, "sonic", "1mF")
+    # the zero-cost row changes no static total
+    assert with_uplink(raw).total_cycles == raw.total_cycles
+
+
+def test_radio_packing_and_mirrors():
+    vec = pack_radio(RadioModel(), SEND_POLICIES[0])
+    assert vec.shape == (N_RADIO,)
+    assert vec[R_CLK] == CLOCK_HZ
+    assert np.array_equal(radio_vector(vec), vec)
+    assert np.array_equal(radio_vector((RadioModel(), SEND_POLICIES[0])),
+                          vec)
+    with pytest.raises(ValueError):
+        radio_vector(np.zeros(3))
+    with pytest.raises(ValueError):
+        pack_radio(RadioModel(window_period_s=-1.0), SEND_POLICIES[0])
+    with pytest.raises(ValueError):
+        pack_radio(RadioModel(window_duty=1.5), SEND_POLICIES[0])
+    # cost/byte mirrors against the documented message shapes
+    assert float(send_cost_cycles(0.0, vec)) == 0.0
+    assert float(send_cost_cycles(7.0, vec)) == 1200.0 + 7 * 256.0
+    pol = SendPolicy("t", conf_hi=0.9, conf_lo=0.4)
+    model = RadioModel()
+    assert float(pol.message_bytes(0.95, model)) == 7.0
+    assert float(pol.message_bytes(0.5, model)) == 14.0
+    assert float(pol.message_bytes(0.1, model)) == 0.0
